@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: run a static path / the optimizer on a task and
+report (quality, cost, calls)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core import (PathParams, SimulatedOracle, llm_order_by, make_path)
+from repro.core.datasets import RankingTask
+from repro.core.metrics import graded_relevance, kendall_tau, ndcg_at_k
+from repro.core.types import SortSpec
+
+
+@dataclass
+class RunOut:
+    quality: float
+    cost: float
+    calls: int
+    seconds: float
+    label: str = ""
+
+
+def task_quality(task: RankingTask, order) -> float:
+    if task.metric == "ndcg":
+        rel = graded_relevance(task.keys, descending=task.descending)
+        return ndcg_at_k(order, rel, k=task.limit or 10)
+    return kendall_tau(order, descending=task.descending)
+
+
+def run_static(task: RankingTask, path: str,
+               params: PathParams = PathParams(batch_size=4),
+               seed: int = 0) -> RunOut:
+    o = SimulatedOracle(task.profile)
+    t0 = time.perf_counter()
+    res = make_path(path, params).execute(
+        task.keys, o, SortSpec(task.criteria, task.descending, task.limit))
+    dt = time.perf_counter() - t0
+    return RunOut(task_quality(task, res.order), res.cost, res.n_calls, dt,
+                  label=path)
+
+
+def run_optimizer(task: RankingTask, strategy: str = "borda",
+                  budget=None, sample_size: int = 20, seed: int = 0) -> tuple:
+    o = SimulatedOracle(task.profile)
+    t0 = time.perf_counter()
+    res, rep = llm_order_by(task.keys, task.criteria, o, path="auto",
+                            strategy=strategy, budget=budget,
+                            sample_size=sample_size,
+                            descending=task.descending, limit=task.limit)
+    dt = time.perf_counter() - t0
+    return RunOut(task_quality(task, res.order), rep.total_cost,
+                  res.n_calls, dt, label=strategy), rep
+
+
+def emit(rows: list[tuple]) -> None:
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,58 @@
+"""Paper Fig. 1: sorting accuracy vs monetary budget per path, on a factual
+dataset (NBA-heights-like) and a reasoning dataset (DL19-like), plus the
+log-linear test-time-scaling fit (accuracy ~ a + b*log10(cost))."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import PathParams
+from repro.core.datasets import nba_heights, passages
+
+from .common import emit, run_static
+
+SWEEP = [
+    ("pointwise", PathParams()),
+    ("ext_pointwise", PathParams(batch_size=4)),
+    ("quick", PathParams(votes=1)),
+    ("quick", PathParams(votes=3)),
+    ("quick", PathParams(votes=5)),
+    ("ext_bubble", PathParams(batch_size=4)),
+    ("ext_bubble", PathParams(batch_size=8)),
+    ("ext_merge", PathParams(batch_size=4)),
+    ("ext_merge", PathParams(batch_size=8)),
+]
+
+
+def main(n: int = 100) -> list[tuple]:
+    rows = [("fig1", "dataset", "path", "cost_usd", "quality")]
+    points = {"factual": [], "reasoning": []}
+    for name, task in (("factual", nba_heights(n=n)),
+                       ("reasoning", passages(n=n))):
+        for path, params in SWEEP:
+            out = run_static(task, path, params)
+            label = (f"{path}_v{params.votes}" if path == "quick"
+                     else f"{path}_m{params.batch_size}")
+            rows.append(("fig1", name, label, round(out.cost, 5),
+                         round(out.quality, 4)))
+            # the paper excludes (likely-memorized) value-based points from
+            # the factual fit
+            if not (name == "factual" and "point" in path):
+                points[name].append((out.cost, out.quality))
+    for name, pts in points.items():
+        if len(pts) >= 3:
+            x = np.log10([max(c, 1e-6) for c, _ in pts])
+            y = np.asarray([q for _, q in pts])
+            b, a = np.polyfit(x, y, 1)
+            resid = y - (a + b * x)
+            ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-9
+            r2 = 1 - float(np.sum(resid ** 2)) / ss_tot
+            rows.append(("fig1_fit", name, "loglinear_slope", round(b, 4),
+                         f"r2={r2:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

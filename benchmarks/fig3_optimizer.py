@@ -1,0 +1,40 @@
+"""Paper Fig. 3: the dynamic optimizer (borda / judge) vs every static path
+on the four benchmark families (population, tweets, movie, passages)."""
+from __future__ import annotations
+
+from repro.core import PathParams
+from repro.core.datasets import benchmark_suite
+
+from .common import emit, run_optimizer, run_static
+
+STATICS = [("pointwise", PathParams()),
+           ("ext_pointwise", PathParams(batch_size=4)),
+           ("quick", PathParams(votes=1)),
+           ("quick", PathParams(votes=3)),
+           ("ext_bubble", PathParams(batch_size=4)),
+           ("ext_merge", PathParams(batch_size=4))]
+
+
+def main() -> list[tuple]:
+    rows = [("fig3", "family", "solution", "quality", "cost_usd", "chosen")]
+    for task in benchmark_suite():
+        best_static = -1.0
+        for path, params in STATICS:
+            out = run_static(task, path, params)
+            label = f"{path}_v{params.votes}" if path == "quick" else path
+            best_static = max(best_static, out.quality)
+            rows.append(("fig3", task.name, label, round(out.quality, 4),
+                         round(out.cost, 4), ""))
+        for strat in ("borda", "judge", "consensus"):
+            out, rep = run_optimizer(task, strategy=strat)
+            rows.append(("fig3", task.name, f"optimizer_{strat}",
+                         round(out.quality, 4), round(out.cost, 4),
+                         f"{rep.chosen.label}|{rep.reason}"))
+        rows.append(("fig3", task.name, "best_static",
+                     round(best_static, 4), "", ""))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

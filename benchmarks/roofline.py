@@ -1,0 +1,55 @@
+"""Roofline report: reads the dry-run JSONL (results/dryrun_singlepod.jsonl)
+and prints the per-(arch x shape) three-term roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_singlepod.jsonl")
+
+
+def load(path: str = DEFAULT) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def main(path: str = DEFAULT) -> list[tuple]:
+    rows = [("roofline", "arch", "shape", "compute_s", "memory_s",
+             "collective_s", "dominant", "useful_ratio")]
+    recs = load(path)
+    if not recs:
+        rows.append(("roofline", "NO-DRYRUN-RESULTS", path, "", "", "", "", ""))
+        emit(rows)
+        return rows
+    for r in recs:
+        if r.get("multi_pod"):
+            continue
+        if "skipped" in r:
+            rows.append(("roofline", r["arch"], r["shape"], "skip", "skip",
+                         "skip", r["skipped"][:40], ""))
+            continue
+        if "error" in r:
+            rows.append(("roofline", r["arch"], r["shape"], "ERR", "ERR",
+                         "ERR", r["error"][:40], ""))
+            continue
+        t = r.get("roofline", {})
+        rows.append(("roofline", r["arch"], r["shape"],
+                     f"{t.get('compute_s', 0):.4g}",
+                     f"{t.get('memory_s', 0):.4g}",
+                     f"{t.get('collective_s', 0):.4g}",
+                     t.get("dominant", "?").replace("_s", ""),
+                     t.get("useful_ratio", "")))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.  Prints CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1 fig3
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
+               roofline, table1_calls, table2_cost_est, table3_samples)
+
+SUITES = {
+    "table1": table1_calls.main,       # LLM-call complexity
+    "fig1": fig1_scaling.main,         # cost vs accuracy + scaling fit
+    "fig2": fig2_no_universal.main,    # per-query dispersion, oracle gap
+    "table2": table2_cost_est.main,    # cost estimation accuracy
+    "fig3": fig3_optimizer.main,       # optimizer vs statics, 4 families
+    "table3": table3_samples.main,     # sample-size sensitivity
+    "fig5": fig5_budget.main,          # budget-constrained selection
+    "roofline": roofline.main,         # dry-run roofline table
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    print("suite,seconds")
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"# ===== {name} =====")
+        SUITES[name]()
+        print(f"{name},{time.perf_counter() - t0:.2f}")
+
+
+if __name__ == "__main__":
+    main()

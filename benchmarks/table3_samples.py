@@ -1,0 +1,37 @@
+"""Paper Table 3: sample-size sensitivity of Borda / Judge / Oracle
+selection on the DL-like multi-query family (mean +/- std over 3 seeds)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OptimizerConfig, AccessPathOptimizer, SimulatedOracle
+from repro.core.datasets import dl_queries
+from repro.core.types import SortSpec
+
+from .common import emit, task_quality
+
+
+def main(n_queries: int = 6, n: int = 60) -> list[tuple]:
+    rows = [("table3", "samples", "strategy", "mean_ndcg", "std")]
+    tasks = dl_queries(n_queries=n_queries, n=n)
+    for s in (15, 20, 25):
+        for strat in ("borda", "judge", "oracle"):
+            means = []
+            for seed in range(3):
+                qs = []
+                for t in tasks:
+                    o = SimulatedOracle(t.profile)
+                    opt = AccessPathOptimizer(OptimizerConfig(
+                        sample_size=s, strategy=strat, seed=seed))
+                    res, _ = opt.choose_and_execute(
+                        t.keys, o, SortSpec(t.criteria, t.descending, t.limit))
+                    qs.append(task_quality(t, res.order))
+                means.append(float(np.mean(qs)))
+            rows.append(("table3", s, strat, round(float(np.mean(means)), 4),
+                         round(float(np.std(means)), 4)))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (one module per arch) + registry.
+
+``--arch <id>`` ids use dashes (as assigned); module names use underscores.
+Each module exposes ``full()`` (the exact assigned hyper-parameters; only
+instantiated abstractly via the dry-run) and ``reduced()`` (same family,
+small dims; used by CPU smoke tests).
+"""
+from .registry import ARCH_IDS, get_config, get_reduced, list_archs
+
+__all__ = ["ARCH_IDS", "get_config", "get_reduced", "list_archs"]

@@ -1,0 +1,33 @@
+"""Arch id -> config registry (``--arch <id>`` everywhere)."""
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3p8b",
+    "stablelm-1.6b": "repro.configs.stablelm_1p6b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "xlstm-1.3b": "repro.configs.xlstm_1p3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return import_module(_MODULES[arch]).full()
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return import_module(_MODULES[arch]).reduced()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,24 @@
+"""The paper's primary contribution: the LLM ORDER BY semantic operator,
+its physical access paths, and the budget-aware access-path optimizer."""
+from .types import InvalidOutputError, Key, SortResult, SortSpec, as_keys
+from .operator import Table, llm_order_by
+from .access_paths import (AccessPath, PathParams, available_paths, make_path)
+from .optimizer.optimizer import (AccessPathOptimizer, OptimizerConfig,
+                                  OptimizerReport)
+from .optimizer.cost_model import CandidateSpec, default_candidates
+from .oracles.base import (GPT41, LLAMA70B, LLAMA405B, Oracle, PriceSheet,
+                           TokenLedger)
+from .oracles.simulated import (FACTUAL, REASONING, SENTIMENT, ExactOracle,
+                                FlakyOracle, OracleProfile, SimulatedOracle)
+from .oracles.cache import CachingOracle
+from . import datasets, metrics
+
+__all__ = [
+    "InvalidOutputError", "Key", "SortResult", "SortSpec", "as_keys",
+    "Table", "llm_order_by", "AccessPath", "PathParams", "available_paths",
+    "make_path", "AccessPathOptimizer", "OptimizerConfig", "OptimizerReport",
+    "CandidateSpec", "default_candidates", "Oracle", "PriceSheet",
+    "TokenLedger", "GPT41", "LLAMA70B", "LLAMA405B", "FACTUAL", "REASONING",
+    "SENTIMENT", "ExactOracle", "FlakyOracle", "OracleProfile",
+    "SimulatedOracle", "CachingOracle", "datasets", "metrics",
+]

@@ -1,0 +1,13 @@
+"""Physical implementations (access paths) of LLM ORDER BY."""
+from .base import (AccessPath, Ordering, PathParams, available_paths,
+                   make_path, register)
+from .pointwise import ExternalPointwise, Pointwise
+from .quicksort import QuickSort
+from .bubble import ExternalBubbleSort
+from .merge import ExternalMergeSort
+
+__all__ = [
+    "AccessPath", "Ordering", "PathParams", "available_paths", "make_path",
+    "register", "Pointwise", "ExternalPointwise", "QuickSort",
+    "ExternalBubbleSort", "ExternalMergeSort",
+]

@@ -1,0 +1,52 @@
+"""External bubble sort — the RankGPT sliding-window strategy (Sec. 3.2).
+
+A window of ``m`` keys is ranked listwise, then the window slides by
+``h = m/2`` toward the front of the output, so the best remaining ``h`` keys
+"bubble up" per pass.  Pass ``p`` fixes output positions ``[0, p*h)``; with
+LIMIT K only ``ceil(K/h)`` passes are needed — O(K*N/m^2) calls vs
+O(N^2/m^2) for the full sort (Table 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from ..types import Key, SortSpec
+from .base import AccessPath, Ordering, PathParams, register
+
+
+@register("ext_bubble")
+class ExternalBubbleSort(AccessPath):
+    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+        keys = list(keys)
+        n = len(keys)
+        m = max(2, self.params.batch_size)
+        h = max(m // 2, 1)
+        if n <= m:
+            return ordering.window(keys)
+        want = spec.effective_limit(n)
+        n_passes = math.ceil(want / h)
+        for p in range(n_passes):
+            fixed = p * h
+            if fixed >= n - 1:
+                break
+            starts = []
+            i = n - m
+            while i > fixed:
+                starts.append(i)
+                i -= h
+            starts.append(fixed)
+            for s in starts:
+                keys[s:s + m] = ordering.window(keys[s:s + m])
+        return keys
+
+    @classmethod
+    def est_calls(cls, n: int, k: Optional[int], params: PathParams) -> float:
+        m = max(2, params.batch_size)
+        h = max(m // 2, 1)
+        if n <= m:
+            return 1.0
+        want = n if k is None else min(k, n)
+        passes = math.ceil(want / h)
+        per_pass = max(1, math.ceil((n - m) / h) + 1)
+        return float(passes * per_pass)

@@ -1,0 +1,103 @@
+"""LLM external merge sort — the paper's new algorithm (Sec. 3.2, Alg. 4/5).
+
+Phase 1 (run generation): chunks of ``m`` keys are each sorted with one
+listwise call.  Phase 2 (iterative merging): sorted runs are merged two at a
+time.  The two-way merge (Alg. 5) keeps a sliding buffer of up to ``h = m/2``
+keys from each run, asks the LLM for a partial order of the buffer, and emits
+ranked items until one side's buffered portion is exhausted — at which point
+the buffer must be refilled, because the unseen next element of the exhausted
+run may precede the survivors.
+
+LIMIT-K pushdown: merged runs are truncated to K, so run sizes stop growing at
+K and each subsequent round halves the number of runs — a geometric series
+bounded by O(N/m), giving O(N/m * (2 + log K/m)) total calls (Table 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from ..types import Key, SortSpec
+from .base import AccessPath, Ordering, PathParams, _log2, register
+
+
+@register("ext_merge")
+class ExternalMergeSort(AccessPath):
+    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+        keys = list(keys)
+        m = max(2, self.params.batch_size)
+        cap = spec.limit  # truncate merged runs at K (Sec. 3.3)
+
+        # Phase 1: run generation — independent listwise calls submitted as
+        # ONE batched request (the paper's "in parallel"); ModelOracle rides
+        # a single padded serving batch, SimulatedOracle loops.
+        chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
+        runs: list[list[Key]] = ordering.windows(chunks)
+
+        # Phase 2: iterative two-way merging.
+        while len(runs) > 1:
+            nxt: list[list[Key]] = []
+            for i in range(0, len(runs), 2):
+                if i + 1 < len(runs):
+                    merged = self._merge(runs[i], runs[i + 1], m, ordering)
+                    if cap is not None:
+                        merged = merged[:cap]
+                    nxt.append(merged)
+                else:
+                    nxt.append(runs[i])  # odd run carried forward
+            runs = nxt
+        return runs[0] if runs else []
+
+    # ---- Algorithm 5 ---------------------------------------------------------
+    @staticmethod
+    def _merge(l1: list[Key], l2: list[Key], m: int, ordering: Ordering) -> list[Key]:
+        """Two-way merge with a sliding LLM-ranked buffer.
+
+        Consistency repair: the paper's emission loop advances each run's
+        pointer by the COUNT of items emitted from that run, which implicitly
+        assumes the LLM's buffer ranking preserves each run's internal order.
+        A noisy ranking can invert two same-run items, double-emitting one
+        and dropping another.  We therefore *project* the ranked order onto
+        the runs: when the ranking says "next emit from run r", we emit run
+        r's next unconsumed item (runs are already sorted, so for a faithful
+        oracle this is the identity; under noise it guarantees the output is
+        a permutation).
+        """
+        i = j = 0
+        out: list[Key] = []
+        h = max(m // 2, 1)
+        while i < len(l1) or j < len(l2):
+            if i >= len(l1):
+                out.extend(l2[j:]); break
+            if j >= len(l2):
+                out.extend(l1[i:]); break
+            t1 = min(h, len(l1) - i)
+            t2 = min(h, len(l2) - j)
+            buf = l1[i:i + t1] + l2[j:j + t2]
+            in_l1 = {k.uid for k in l1[i:i + t1]}
+            ranked = ordering.window(buf)
+            e1 = e2 = 0
+            for x in ranked:
+                if x.uid in in_l1:
+                    out.append(l1[i + e1])   # next unconsumed from run 1
+                    e1 += 1
+                else:
+                    out.append(l2[j + e2])   # next unconsumed from run 2
+                    e2 += 1
+                if e1 == t1 or e2 == t2:
+                    break  # one side exhausted within this window -> refill
+            i += e1
+            j += e2
+        return out
+
+    # ---- Table 1 --------------------------------------------------------------
+    @classmethod
+    def est_calls(cls, n: int, k: Optional[int], params: PathParams) -> float:
+        m = max(2, params.batch_size)
+        runs = math.ceil(n / m)
+        if runs <= 1:
+            return 1.0
+        if k is None or k >= n:
+            # run generation + log2(runs) merge rounds, each ~2N/m windows
+            return runs * (1 + _log2(runs))
+        return (n / m) * (2 + _log2(max(k, m) / m))

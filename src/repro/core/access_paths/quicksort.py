@@ -1,0 +1,130 @@
+"""Comparison-based quick sort (Sec. 3.2, Algorithms 2 & 3).
+
+* ``votes = 1``  — vanilla LLM quick sort (Lotus-style).
+* ``votes = v>1`` — quick sort with majority voting: each item is compared to
+  the pivot *and* to ``v-1`` peers sampled from the opposite initial
+  partition.  Unanimous items are placed immediately; conflicted items wait
+  until their peers are firmly classified, then Algorithm 2's weighted vote
+  decides (initial pivot comparison carries weight 1.5).  A deadlock (no
+  waiting item has fully classified peers) is broken by voting with the
+  current partial partitions.
+
+LIMIT-K pushdown = partial quick sort (Martinez '04): only the prefix-covering
+partitions are recursed into, giving O(v(N + K log K)) calls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..types import Key, SortSpec
+from .base import AccessPath, Ordering, PathParams, _log2, register
+
+
+def _det_sample(pool: list[Key], k: int, seed_parts) -> list[Key]:
+    if k <= 0 or not pool:
+        return []
+    rng = np.random.default_rng(abs(hash(seed_parts)) % (2**63))
+    idx = rng.choice(len(pool), size=min(k, len(pool)), replace=False)
+    return [pool[i] for i in idx]
+
+
+@register("quick")
+class QuickSort(AccessPath):
+    """Set ``params.votes`` to 1 for vanilla, 3 for the paper's ``quick_3``."""
+
+    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+        return self._sort(list(keys), ordering, spec.limit)
+
+    # ---- recursive partial quick sort -------------------------------------
+    def _sort(self, keys: list[Key], ordering: Ordering, limit: Optional[int]) -> list[Key]:
+        if len(keys) <= 1:
+            return keys
+        if len(keys) == 2:
+            a, b = keys
+            return [a, b] if ordering.before(a, b) else [b, a]
+        pivot, rest = keys[0], keys[1:]
+        front, back = self._partition(pivot, rest, ordering)
+        out = self._sort(front, ordering, limit)
+        if limit is not None and len(out) >= limit:
+            return out[:limit]
+        out = out + [pivot]
+        rem = None if limit is None else limit - len(out)
+        if rem is None or rem > 0:
+            out = out + self._sort(back, ordering, rem)
+        return out
+
+    # ---- Algorithm 3 partition ---------------------------------------------
+    def _partition(self, pivot: Key, rest: list[Key], ordering: Ordering):
+        v = self.params.votes
+        initial = {x.uid: ordering.before(x, pivot) for x in rest}
+        if v <= 1:
+            front = [x for x in rest if initial[x.uid]]
+            back = [x for x in rest if not initial[x.uid]]
+            return front, back
+
+        init_front = [x for x in rest if initial[x.uid]]
+        init_back = [x for x in rest if not initial[x.uid]]
+        front: list[Key] = []
+        back: list[Key] = []
+        placed: dict[int, bool] = {}  # uid -> placed-in-front?
+        deferred: list[tuple[Key, bool, list[Key], list[bool]]] = []
+
+        for x in rest:
+            r_init = initial[x.uid]
+            pool = init_back if r_init else init_front
+            peers = _det_sample([y for y in pool if y.uid != x.uid], v - 1,
+                                ("qs-peers", x.uid, pivot.uid))
+            peer_results = [ordering.before(x, y) for y in peers]
+            allres = [r_init] + peer_results
+            if all(allres):
+                front.append(x); placed[x.uid] = True
+            elif not any(allres):
+                back.append(x); placed[x.uid] = False
+            else:
+                deferred.append((x, r_init, peers, peer_results))
+
+        # iterative resolution; Algorithm 2 vote once peers are classified
+        while deferred:
+            progressed = False
+            still: list[tuple[Key, bool, list[Key], list[bool]]] = []
+            for item in deferred:
+                x, r_init, peers, peer_results = item
+                if all(y.uid in placed for y in peers):
+                    self._vote_place(item, placed, front, back)
+                    progressed = True
+                else:
+                    still.append(item)
+            deferred = still
+            if deferred and not progressed:
+                # deadlock: resolve the head with current partial partitions
+                self._vote_place(deferred.pop(0), placed, front, back)
+
+        return front, back
+
+    @staticmethod
+    def _vote_place(item, placed: dict[int, bool], front: list[Key], back: list[Key]):
+        """Algorithm 2: weighted vote.  'front' plays the paper's L role."""
+        x, r_init, peers, peer_results = item
+        f_vote = 1.5 if r_init else 0.0
+        b_vote = 0.0 if r_init else 1.5
+        for y, r_y in zip(peers, peer_results):
+            side = placed.get(y.uid)          # True=front, False=back, None=unplaced
+            if side is True and r_y:          # y in L and x before y => x in L
+                f_vote += 1.0
+            elif side is False and not r_y:   # y in G and x after y => x in G
+                b_vote += 1.0
+        if f_vote > b_vote:
+            front.append(x); placed[x.uid] = True
+        else:
+            back.append(x); placed[x.uid] = False
+
+    # ---- Table 1 --------------------------------------------------------------
+    @classmethod
+    def est_calls(cls, n: int, k: Optional[int], params: PathParams) -> float:
+        v = max(params.votes, 1)
+        if k is None or k >= n:
+            return v * n * _log2(n)
+        return v * (n + k * _log2(k))

@@ -1,0 +1,59 @@
+"""The LLM ORDER BY logical operator — public entry point.
+
+``llm_order_by(keys, criteria, oracle, ...)`` mirrors the paper's SQL surface:
+
+    SELECT id, text FROM reviews
+    LLM_ORDER_BY(text, 'degree of positivity') DESC LIMIT 10;
+
+``path="auto"`` routes through the budget-aware optimizer; any registry name
+("pointwise", "ext_merge", ...) forces a static access path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .access_paths.base import PathParams, make_path
+from .optimizer.cost_model import CandidateSpec
+from .optimizer.optimizer import AccessPathOptimizer, OptimizerConfig, OptimizerReport
+from .types import Key, SortResult, SortSpec
+from .oracles.base import Oracle
+
+
+def llm_order_by(keys: Sequence[Key], criteria: str, oracle: Oracle, *,
+                 descending: bool = False, limit: Optional[int] = None,
+                 path: str = "auto", params: Optional[PathParams] = None,
+                 budget: Optional[float] = None, strategy: str = "borda",
+                 sample_size: int = 20,
+                 judge_oracle: Optional[Oracle] = None,
+                 candidates: Optional[list[CandidateSpec]] = None,
+                 ) -> tuple[SortResult, Optional[OptimizerReport]]:
+    """Execute LLM ORDER BY; returns (result, optimizer_report_or_None)."""
+    spec = SortSpec(criteria=criteria, descending=descending, limit=limit)
+    if path != "auto":
+        ap = make_path(path, params or PathParams())
+        return ap.execute(keys, oracle, spec), None
+    opt = AccessPathOptimizer(
+        OptimizerConfig(sample_size=sample_size, budget=budget, strategy=strategy),
+        candidates=candidates,
+    )
+    result, report = opt.choose_and_execute(keys, oracle, spec, judge_oracle=judge_oracle)
+    return result, report
+
+
+class Table:
+    """Minimal rows-of-dicts relation so examples read like the paper's SQL."""
+
+    def __init__(self, rows: Sequence[dict]):
+        self.rows = list(rows)
+
+    def llm_order_by(self, column: str, criteria: str, oracle: Oracle,
+                     latent_column: Optional[str] = None, **kw
+                     ) -> tuple[list[dict], SortResult, Optional[OptimizerReport]]:
+        keys = [
+            Key(uid=i, text=str(r[column]),
+                latent=float(r[latent_column]) if latent_column else float("nan"))
+            for i, r in enumerate(self.rows)
+        ]
+        result, report = llm_order_by(keys, criteria, oracle, **kw)
+        ordered_rows = [self.rows[k.uid] for k in result.order]
+        return ordered_rows, result, report

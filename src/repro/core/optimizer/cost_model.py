@@ -1,0 +1,66 @@
+"""Cost estimation (Sec. 5.1).
+
+The optimizer runs every candidate on a small sample, observes the *actual*
+dollar cost, then extrapolates to the full dataset by scaling with the Table-1
+call-complexity ratio (Examples 5.1 / 5.2: pointwise scales linearly, external
+bubble quadratically, ...).  ``estimate_full_cost`` is that scaling; the
+Table-2 benchmark validates it against true execution cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..access_paths.base import PathParams, _REGISTRY
+
+
+@dataclass(frozen=True)
+class CandidateSpec:
+    """One entry of the optimizer's candidate pool."""
+
+    path: str                      # registry name ("pointwise", "ext_merge", ...)
+    params: PathParams = PathParams()
+    label: str = ""
+
+    def __post_init__(self):
+        if not self.label:
+            object.__setattr__(self, "label", self.default_label())
+
+    def default_label(self) -> str:
+        if self.path == "quick":
+            return "quick" if self.params.votes <= 1 else f"quick_{self.params.votes}"
+        if self.path.startswith("ext_") and self.path != "ext_pointwise":
+            return f"{self.path}_{self.params.batch_size}"
+        return self.path
+
+    @property
+    def comparison_based(self) -> bool:
+        return self.path in ("quick", "ext_bubble", "ext_merge")
+
+    def make(self):
+        return _REGISTRY[self.path](self.params)
+
+
+def default_candidates(min_batch: int = 4) -> list[CandidateSpec]:
+    """The paper's pool: both value-based paths plus all comparison-based
+    paths at their *minimum viable batch size* (Sec. 5.3: the test-time
+    scaling insight says bigger batches only trade quality for cost inside
+    one path, so the pool explores paths, not batch sizes)."""
+    return [
+        CandidateSpec("pointwise"),
+        CandidateSpec("ext_pointwise", PathParams(batch_size=min_batch)),
+        CandidateSpec("quick", PathParams(votes=1)),
+        CandidateSpec("quick", PathParams(votes=3)),
+        CandidateSpec("ext_bubble", PathParams(batch_size=min_batch)),
+        CandidateSpec("ext_merge", PathParams(batch_size=min_batch)),
+    ]
+
+
+def estimate_full_cost(spec: CandidateSpec, sampled_cost: float,
+                       n_sample: int, n_full: int, k: Optional[int]) -> float:
+    """sampled_cost x complexity(N, K) / complexity(n_sample, K_sample)."""
+    cls = _REGISTRY[spec.path]
+    k_sample = None if k is None else min(k, n_sample)
+    lo = cls.est_calls(n_sample, k_sample, spec.params)
+    hi = cls.est_calls(n_full, k, spec.params)
+    return sampled_cost * hi / max(lo, 1e-9)

@@ -1,0 +1,29 @@
+"""World-knowledge gate via membership inference (Sec. 5.2).
+
+Runs the Inquiry Prompt (Prompt Block 4) on a sample; if 100% of sampled keys
+are recognized as training-corpus members, the optimizer short-circuits to the
+pointwise path — the model is acting as a reliable knowledge retriever and the
+derived values probe parametric memory directly.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from ..types import Key
+from ..oracles.base import Oracle
+
+
+def membership_rate(sample: Sequence[Key], oracle: Oracle, criteria: str) -> float:
+    if not sample:
+        return 0.0
+    hits = sum(1 for k in sample if oracle.inquire(k, criteria))
+    return hits / len(sample)
+
+
+def is_world_knowledge(sample: Sequence[Key], oracle: Oracle, criteria: str,
+                       threshold: float = 1.0) -> tuple[bool, float]:
+    """Strict threshold (default 100%): false negatives merely fall back to
+    the Judge/Borda stages, false positives would mis-route reasoning queries
+    to an uncalibrated pointwise scorer."""
+    rate = membership_rate(sample, oracle, criteria)
+    return rate >= threshold, rate

@@ -1,0 +1,288 @@
+"""The budget-aware access-path optimizer (Sec. 5).
+
+Pipeline (choose_and_execute):
+  1. draw a deterministic sample of ``sample_size`` keys;
+  2. **world-knowledge gate** — Inquiry Prompt on the sample; 100% membership
+     => execute pointwise directly (Sec. 5.2);
+  3. run every candidate on the sample, recording actual sampled cost and the
+     sample ranking each produces (failed/structurally-invalid candidates are
+     dropped);
+  4. **cost extrapolation** — scale sampled cost by the Table-1 complexity
+     ratio; filter candidates whose estimated full-run cost violates the
+     user budget (Sec. 5.1/5.3, Fig. 5);
+  5. **selection** — 'judge' (optimistic, Sec. 5.4), 'borda' (pessimistic,
+     Sec. 5.5), or 'oracle' (ground-truth upper-bound used in Table 3);
+  6. execute the winner once over the full dataset.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..access_paths.base import PathParams
+from ..metrics import kendall_tau, kendall_tau_between, ndcg_between, ndcg_at_k
+from ..types import InvalidOutputError, Key, SortResult, SortSpec
+from ..oracles.base import Oracle
+from .borda import borda_consensus
+from .cost_model import CandidateSpec, default_candidates, estimate_full_cost
+from .judge import judge_select
+from .membership import is_world_knowledge
+
+COMPARISON_KINDS = ("quick", "ext_bubble", "ext_merge")
+
+
+@dataclass
+class OptimizerConfig:
+    sample_size: int = 20
+    budget: Optional[float] = None
+    # "borda" | "judge" | "oracle" pick ONE path (the paper's optimizer);
+    # "consensus" (beyond-paper) executes the top-``consensus_k`` affordable
+    # candidates on the full dataset and Borda-merges their output rankings —
+    # trading surplus budget for ensemble robustness at execution time.
+    strategy: str = "borda"
+    consensus_k: int = 2
+    membership_threshold: float = 1.0
+    # Budget-filter safety margins (beyond-paper hardening).  The paper notes
+    # (Sec. 6.3) that an underestimated algorithm "can lead to a direct
+    # violation of the user's budget constraint" — and quick-sort-family
+    # estimates indeed run ~2x low under noisy comparators (deferred-vote
+    # rounds + deeper recursion are invisible at sample scale).  Estimates
+    # are reported raw; filtering multiplies them by these factors.
+    safety_comparison: float = 2.0
+    safety_value: float = 1.1
+    # Sampling may consume at most this fraction of the budget (candidates
+    # are sampled cheapest-first; the rest are dropped unsampled).  Without
+    # this, a tight budget is blown during stage 2 before anything executes.
+    sampling_fraction: float = 0.35
+    seed: int = 0
+
+
+@dataclass
+class OptimizerReport:
+    chosen: Optional[CandidateSpec] = None
+    reason: str = ""
+    membership_rate: float = 0.0
+    sample_uids: list = field(default_factory=list)
+    sample_results: dict = field(default_factory=dict)   # label -> SortResult
+    est_costs: dict = field(default_factory=dict)        # label -> $ estimate
+    sample_scores: dict = field(default_factory=dict)    # label -> selection score
+    in_budget: list = field(default_factory=list)
+    dropped: list = field(default_factory=list)          # (label, why)
+    optimizer_cost: float = 0.0
+    execution_cost: float = 0.0
+
+    @property
+    def total_cost(self) -> float:
+        return self.optimizer_cost + self.execution_cost
+
+
+class AccessPathOptimizer:
+    def __init__(self, config: OptimizerConfig = OptimizerConfig(),
+                 candidates: Optional[list[CandidateSpec]] = None):
+        self.config = config
+        self.candidates = candidates if candidates is not None else default_candidates()
+
+    # ------------------------------------------------------------------ utils
+    def _sample(self, keys: Sequence[Key]) -> list[Key]:
+        s = min(self.config.sample_size, len(keys))
+        rng = np.random.default_rng(self.config.seed)
+        idx = rng.choice(len(keys), size=s, replace=False)
+        return [keys[i] for i in sorted(idx)]
+
+    @staticmethod
+    def _rank_similarity(candidate: SortResult, gold_uids: list[int],
+                         spec: SortSpec) -> float:
+        """kendall tau for full sorts, nDCG@K for LIMIT-K queries — matching
+        the benchmark's own objective (Sec. 6.1)."""
+        uids = candidate.uids()
+        if spec.limit is not None:
+            return ndcg_between(uids, gold_uids, k=spec.limit)
+        return kendall_tau_between(uids, gold_uids)
+
+    # ------------------------------------------------------------- main entry
+    def choose_and_execute(self, keys: Sequence[Key], oracle: Oracle,
+                           spec: SortSpec,
+                           judge_oracle: Optional[Oracle] = None
+                           ) -> tuple[SortResult, OptimizerReport]:
+        keys = list(keys)
+        cfg = self.config
+        report = OptimizerReport()
+        snap = oracle.ledger.snapshot()
+        sample = self._sample(keys)
+        report.sample_uids = [k.uid for k in sample]
+
+        # -- stage 1: world-knowledge gate ---------------------------------
+        member, rate = is_world_knowledge(sample, oracle, spec.criteria,
+                                          cfg.membership_threshold)
+        report.membership_rate = rate
+        if member:
+            report.chosen = CandidateSpec("pointwise")
+            report.reason = "membership"
+            report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
+            result = report.chosen.make().execute(keys, oracle, spec)
+            report.execution_cost = result.cost
+            return result, report
+
+        # -- stage 2: candidate sample runs (cheapest-first, budget-capped) --
+        sample_spec = SortSpec(spec.criteria, spec.descending,
+                               None if spec.limit is None
+                               else min(spec.limit, len(sample)))
+        k_s = None if spec.limit is None else min(spec.limit, len(sample))
+        from ..access_paths.base import _REGISTRY
+        ordered = sorted(self.candidates,
+                         key=lambda c: _REGISTRY[c.path].est_calls(
+                             len(sample), k_s, c.params))
+        sample_cap = (None if cfg.budget is None
+                      else cfg.budget * cfg.sampling_fraction)
+        alive: list[CandidateSpec] = []
+        for cand in ordered:
+            spent_now = oracle.ledger.since(snap).cost(oracle.prices)
+            if sample_cap is not None and alive and spent_now >= sample_cap:
+                report.dropped.append((cand.label, "sampling-budget"))
+                continue
+            try:
+                res = cand.make().execute(sample, oracle, sample_spec)
+            except InvalidOutputError as e:  # unrecoverable structural failure
+                report.dropped.append((cand.label, f"invalid-output: {e}"))
+                continue
+            report.sample_results[cand.label] = res
+            est = estimate_full_cost(cand, res.cost, len(sample), len(keys), spec.limit)
+            report.est_costs[cand.label] = est
+            alive.append(cand)
+
+        # -- stage 3: budget filter ------------------------------------------
+        spent = oracle.ledger.since(snap).cost(oracle.prices)
+        in_budget = []
+        for cand in alive:
+            est = report.est_costs[cand.label]
+            margin = (cfg.safety_comparison if cand.comparison_based
+                      else cfg.safety_value)
+            if cfg.budget is not None and spent + est * margin > cfg.budget:
+                report.dropped.append(
+                    (cand.label, f"over-budget est=${est:.3f}x{margin:g}"))
+            else:
+                in_budget.append(cand)
+        if not in_budget and alive:
+            # nothing affordable: degrade to the cheapest estimate
+            cheapest = min(alive, key=lambda c: report.est_costs[c.label])
+            in_budget = [cheapest]
+            report.reason = "budget-forced-cheapest"
+        report.in_budget = [c.label for c in in_budget]
+        if not in_budget:
+            raise RuntimeError("no runnable candidate access path")
+
+        # -- stage 4: selection -----------------------------------------------
+        if cfg.strategy == "consensus":
+            return self._consensus_execute(in_budget, keys, sample, oracle,
+                                           spec, report, snap)
+        chosen = self._select(in_budget, sample, spec, report,
+                              judge_oracle if judge_oracle is not None else oracle)
+        report.chosen = chosen
+        report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
+
+        # -- stage 5: full execution ------------------------------------------
+        result = chosen.make().execute(keys, oracle, spec)
+        report.execution_cost = result.cost
+        return result, report
+
+    # --------------------------------------------- beyond-paper: consensus
+    def _consensus_execute(self, pool, keys, sample, oracle, spec,
+                           report, snap):
+        """Execute the top-k affordable candidates (ranked by Borda score on
+        the sample) and Borda-merge their full-dataset outputs."""
+        cfg = self.config
+        # rank pool by sample-level Borda agreement (reuses _select scoring)
+        ranked_pool = list(pool)
+        if len(pool) > 1:
+            ballots = [report.sample_results[c.label].uids()
+                       for c in pool if c.comparison_based] or \
+                      [report.sample_results[c.label].uids() for c in pool]
+            gold = borda_consensus(ballots, [k.uid for k in sample])
+            scores = {c.label: self._rank_similarity(
+                report.sample_results[c.label], gold, spec) for c in pool}
+            report.sample_scores.update(scores)
+            ranked_pool.sort(key=lambda c: -scores[c.label])
+        # greedily take candidates while the budget holds
+        take, est_sum = [], 0.0
+        spent = oracle.ledger.since(snap).cost(oracle.prices)
+        for c in ranked_pool:
+            est = report.est_costs[c.label]
+            if len(take) < cfg.consensus_k and (
+                    cfg.budget is None or spent + est_sum + est <= cfg.budget):
+                take.append(c)
+                est_sum += est
+        if not take:
+            take = [ranked_pool[0]]
+        report.chosen = take[0]
+        report.reason = "consensus:" + "+".join(c.label for c in take)
+        report.optimizer_cost = spent
+
+        results = [c.make().execute(list(keys), oracle, spec) for c in take]
+        report.execution_cost = sum(r.cost for r in results)
+        if len(results) == 1:
+            return results[0], report
+        universe = [k.uid for k in keys]
+        merged_uids = borda_consensus([r.uids() for r in results], universe)
+        by_uid = {k.uid: k for k in keys}
+        k_eff = spec.effective_limit(len(keys))
+        merged = SortResult(
+            order=[by_uid[u] for u in merged_uids[:k_eff]],
+            path="consensus(" + "+".join(r.path for r in results) + ")",
+            n_calls=sum(r.n_calls for r in results),
+            input_tokens=sum(r.input_tokens for r in results),
+            output_tokens=sum(r.output_tokens for r in results),
+            cost=report.execution_cost,
+        )
+        return merged, report
+
+    # ------------------------------------------------------------- selection
+    def _select(self, pool: list[CandidateSpec], sample: list[Key],
+                spec: SortSpec, report: OptimizerReport,
+                judge_oracle: Oracle) -> CandidateSpec:
+        if len(pool) == 1:
+            if not report.reason:
+                report.reason = "single-candidate"
+            return pool[0]
+        strategy = self.config.strategy
+
+        if strategy == "judge":
+            orders = [report.sample_results[c.label].order for c in pool]
+            win = judge_select(sample, spec.criteria, orders, judge_oracle)
+            report.reason = "judge"
+            return pool[int(win)]
+
+        if strategy == "oracle":
+            # ground-truth selection (Table 3 upper bound): best sample metric
+            best, best_v = pool[0], -math.inf
+            for c in pool:
+                order = report.sample_results[c.label].order
+                if spec.limit is not None:
+                    from ..metrics import graded_relevance
+                    rel = graded_relevance(sample, descending=spec.descending)
+                    v = ndcg_at_k(order, rel, k=min(spec.limit, len(sample)))
+                else:
+                    v = kendall_tau(order, descending=spec.descending)
+                report.sample_scores[c.label] = v
+                if v > best_v:
+                    best, best_v = c, v
+            report.reason = "oracle"
+            return best
+
+        # default: pessimistic Borda consensus (Sec. 5.5)
+        ballots = [report.sample_results[c.label].uids()
+                   for c in pool if c.comparison_based]
+        if not ballots:  # all-value-based pool (e.g. tight budget): best vs each other
+            ballots = [report.sample_results[c.label].uids() for c in pool]
+        universe = [k.uid for k in sample]
+        gold = borda_consensus(ballots, universe)
+        best, best_v = pool[0], -math.inf
+        for c in pool:
+            v = self._rank_similarity(report.sample_results[c.label], gold, spec)
+            report.sample_scores[c.label] = v
+            if v > best_v:
+                best, best_v = c, v
+        report.reason = "borda"
+        return best

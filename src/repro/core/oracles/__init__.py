@@ -1,0 +1,7 @@
+from .base import Oracle, PriceSheet, TokenLedger, LLAMA70B, LLAMA405B, GPT41
+from .simulated import ExactOracle, FlakyOracle, OracleProfile, SimulatedOracle
+from .cache import CachingOracle
+
+__all__ = ["Oracle", "PriceSheet", "TokenLedger", "LLAMA70B", "LLAMA405B",
+           "GPT41", "ExactOracle", "FlakyOracle", "OracleProfile",
+           "SimulatedOracle", "CachingOracle"]

@@ -1,0 +1,191 @@
+"""Oracle interface + token/dollar accounting.
+
+Every access path is written against :class:`Oracle`; the paper's hosted-API
+assumption becomes an interface with three backends:
+
+ * :class:`~repro.core.oracles.simulated.SimulatedOracle` — calibrated noise,
+   used by benchmarks to reproduce the paper's empirical regime,
+ * :class:`~repro.core.oracles.simulated.ExactOracle` — noise-free, used by
+   property tests (a perfect comparator must yield a perfectly sorted list),
+ * :class:`~repro.core.oracles.model_oracle.ModelOracle` — real JAX forward
+   passes through the serving engine on the production mesh.
+
+All billing flows through :class:`TokenLedger`, so Table-1 / Fig-1 style
+call-count and dollar accounting is exact and identical across backends.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from ..types import Key
+
+
+@dataclass(frozen=True)
+class PriceSheet:
+    """$ per million tokens, mirroring per-token API billing."""
+
+    input_per_mtok: float = 0.90
+    output_per_mtok: float = 0.90
+    name: str = "llama3.1-70b"
+
+    def cost(self, input_tokens: int, output_tokens: int) -> float:
+        return (input_tokens * self.input_per_mtok + output_tokens * self.output_per_mtok) / 1e6
+
+
+LLAMA70B = PriceSheet(0.90, 0.90, "llama3.1-70b")
+LLAMA405B = PriceSheet(8.00, 8.00, "llama3.1-405b")
+GPT41 = PriceSheet(2.00, 8.00, "gpt-4.1")
+
+
+@dataclass(frozen=True)
+class CallRecord:
+    kind: str            # "score" | "compare" | "rank" | "inquire" | "judge"
+    n_keys: int
+    input_tokens: int
+    output_tokens: int
+    tag: str = ""
+
+
+@dataclass
+class LedgerView:
+    records: list[CallRecord]
+
+    @property
+    def n_calls(self) -> int:
+        return len(self.records)
+
+    @property
+    def input_tokens(self) -> int:
+        return sum(r.input_tokens for r in self.records)
+
+    @property
+    def output_tokens(self) -> int:
+        return sum(r.output_tokens for r in self.records)
+
+    def cost(self, prices: PriceSheet) -> float:
+        return prices.cost(self.input_tokens, self.output_tokens)
+
+    def by_kind(self, kind: str) -> "LedgerView":
+        return LedgerView([r for r in self.records if r.kind == kind])
+
+
+class TokenLedger(LedgerView):
+    """Append-only call log with snapshot slicing for per-phase accounting."""
+
+    def __init__(self) -> None:
+        super().__init__(records=[])
+
+    def charge(self, kind: str, input_tokens: int, output_tokens: int,
+               n_keys: int = 1, tag: str = "") -> None:
+        self.records.append(CallRecord(kind, n_keys, int(input_tokens), int(output_tokens), tag))
+
+    def snapshot(self) -> int:
+        return len(self.records)
+
+    def since(self, snap: int) -> LedgerView:
+        return LedgerView(self.records[snap:])
+
+    def reset(self) -> None:
+        self.records.clear()
+
+
+@dataclass
+class PromptCosts:
+    """Token overheads of the prompt templates (Prompt Blocks 1-5).
+
+    ``*_out`` entries model structured CoT outputs (the paper enables
+    chain-of-thought fields in the response JSON schema).
+    """
+
+    score_prefix: int = 60       # Prompt Block 1 instructions + criteria
+    score_out_per_key: int = 24  # rating + short CoT per key
+    compare_prefix: int = 55     # Prompt Block 2
+    compare_out: int = 30        # verdict + CoT
+    rank_prefix: int = 60        # Prompt Block 3
+    rank_out_per_key: int = 10   # permutation entry + brief CoT share
+    inquire_prefix: int = 45     # Prompt Block 4
+    inquire_out: int = 25
+    judge_prefix: int = 90       # Prompt Block 5
+    judge_out: int = 120
+
+
+class Oracle(abc.ABC):
+    """Semantic black box exposed through standard generation-API verbs."""
+
+    def __init__(self, prices: PriceSheet = LLAMA70B, costs: Optional[PromptCosts] = None):
+        self.ledger = TokenLedger()
+        self.prices = prices
+        self.costs = costs or PromptCosts()
+
+    # ---- verbs -----------------------------------------------------------
+    @abc.abstractmethod
+    def score_batch(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        """Value-based: one float per key (higher = larger under criteria).
+
+        ``len(keys) == 1`` is the pointwise path; larger batches are the
+        external-pointwise path.  May raise InvalidOutputError.
+        """
+
+    @abc.abstractmethod
+    def compare(self, a: Key, b: Key, criteria: str) -> int:
+        """Comparison-based: +1 if ``a`` ranks above ``b`` under criteria
+        (i.e. a's criteria value is larger), else -1."""
+
+    @abc.abstractmethod
+    def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
+        """Listwise: permutation of ``keys`` in ascending criteria order
+        (worst-to-best, following Prompt Block 3).  May raise
+        InvalidOutputError."""
+
+    @abc.abstractmethod
+    def inquire(self, key: Key, criteria: str) -> bool:
+        """Membership-inference Inquiry Prompt (Prompt Block 4)."""
+
+    @abc.abstractmethod
+    def judge(self, keys: Sequence[Key], criteria: str,
+              candidates: Sequence[Sequence[Key]]) -> int:
+        """LLM-as-Judge (Prompt Block 5): index of the best candidate ranking."""
+
+    def rank_batches(self, batches: Sequence[Sequence[Key]],
+                     criteria: str) -> list[list[Key]]:
+        """Batched listwise ranking — the paper's parallel run generation
+        (Alg. 4 Phase 1).  Default: sequential loop; the ModelOracle
+        overrides this with ONE padded serving batch for all windows."""
+        return [self.rank_batch(list(b), criteria) for b in batches]
+
+    # ---- billing helpers -------------------------------------------------
+    def _charge_score(self, keys: Sequence[Key], tag: str = "") -> None:
+        c = self.costs
+        inp = c.score_prefix + sum(k.tokens() for k in keys)
+        out = c.score_out_per_key * len(keys)
+        self.ledger.charge("score", inp, out, n_keys=len(keys), tag=tag)
+
+    def _charge_compare(self, a: Key, b: Key, tag: str = "") -> None:
+        c = self.costs
+        self.ledger.charge("compare", c.compare_prefix + a.tokens() + b.tokens(),
+                           c.compare_out, n_keys=2, tag=tag)
+
+    def _charge_rank(self, keys: Sequence[Key], tag: str = "") -> None:
+        c = self.costs
+        inp = c.rank_prefix + sum(k.tokens() for k in keys)
+        out = c.rank_out_per_key * len(keys)
+        self.ledger.charge("rank", inp, out, n_keys=len(keys), tag=tag)
+
+    def _charge_inquire(self, key: Key, tag: str = "") -> None:
+        c = self.costs
+        self.ledger.charge("inquire", c.inquire_prefix + key.tokens(), c.inquire_out, tag=tag)
+
+    def _charge_judge(self, keys: Sequence[Key], candidates: Sequence[Sequence[Key]],
+                      tag: str = "") -> int:
+        """Returns the judge input token count (used for context-degradation)."""
+        c = self.costs
+        inp = (c.judge_prefix + sum(k.tokens() for k in keys)
+               + sum(3 * len(cand) for cand in candidates))  # id lists
+        self.ledger.charge("judge", inp, c.judge_out, n_keys=len(keys), tag=tag)
+        return inp
+
+    # ---- reporting -------------------------------------------------------
+    def spend(self) -> float:
+        return self.ledger.cost(self.prices)

@@ -1,0 +1,63 @@
+"""Client-side LLM output cache (Sec. 3.1).
+
+"Repeated prompts with identical inputs are served directly from the cache,
+reducing redundant LLM function calls" — this is what turns Alg. 1's batch-size
+search into O(log2 m) *billed* calls.  The cache key is the full logical
+prompt: (verb, uid tuple, criteria), matching temperature-0 determinism.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from ..types import Key
+from .base import Oracle
+
+
+class CachingOracle(Oracle):
+    """Transparent memoizing wrapper around any Oracle.
+
+    Billing: cache hits are free (no ledger charge); misses delegate and are
+    billed by the inner oracle.  Both ledgers stay visible — ``self.ledger``
+    aliases the inner ledger so access paths keep exact accounting.
+    """
+
+    def __init__(self, inner: Oracle):
+        # Note: deliberately NOT calling super().__init__ — we alias the inner
+        # oracle's ledger/prices so all accounting lands in one place.
+        self.inner = inner
+        self.ledger = inner.ledger
+        self.prices = inner.prices
+        self.costs = inner.costs
+        self._cache: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _memo(self, cache_key, thunk):
+        if cache_key in self._cache:
+            self.hits += 1
+            return self._cache[cache_key]
+        self.misses += 1
+        val = thunk()
+        self._cache[cache_key] = val
+        return val
+
+    def score_batch(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        ck = ("score", tuple(k.uid for k in keys), criteria)
+        return list(self._memo(ck, lambda: self.inner.score_batch(keys, criteria)))
+
+    def compare(self, a: Key, b: Key, criteria: str) -> int:
+        ck = ("compare", a.uid, b.uid, criteria)
+        return self._memo(ck, lambda: self.inner.compare(a, b, criteria))
+
+    def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
+        ck = ("rank", tuple(k.uid for k in keys), criteria)
+        return list(self._memo(ck, lambda: self.inner.rank_batch(keys, criteria)))
+
+    def inquire(self, key: Key, criteria: str) -> bool:
+        ck = ("inquire", key.uid, criteria)
+        return self._memo(ck, lambda: self.inner.inquire(key, criteria))
+
+    def judge(self, keys, criteria, candidates):
+        ck = ("judge", tuple(k.uid for k in keys), criteria,
+              tuple(tuple(k.uid for k in c) for c in candidates))
+        return self._memo(ck, lambda: self.inner.judge(keys, criteria, candidates))

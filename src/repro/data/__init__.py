@@ -1,0 +1,4 @@
+from .pipeline import DataConfig, DataPipeline
+from .tokenizer import BOS, EOS, PAD, ByteTokenizer
+
+__all__ = ["DataConfig", "DataPipeline", "BOS", "EOS", "PAD", "ByteTokenizer"]

@@ -1,0 +1,7 @@
+from .context import activation_spec, constrain, sequence_parallel_spec
+from .sharding import (ShardingPlan, batch_specs, cache_specs, data_axes,
+                       named, param_specs, zero1_specs)
+
+__all__ = ["ShardingPlan", "batch_specs", "cache_specs", "data_axes",
+           "named", "param_specs", "zero1_specs", "activation_spec",
+           "constrain", "sequence_parallel_spec"]

@@ -1,0 +1,55 @@
+"""Activation-sharding context: lets launchers impose a residual-stream
+PartitionSpec (e.g. Megatron-style sequence parallelism over the ``model``
+axis) without the model code knowing about meshes.
+
+Models call :func:`constrain` on the (B, S, D) residual between blocks; by
+default it is the identity.  Launchers wrap tracing in :func:`activation_spec`
+inside a mesh context, so ``with_sharding_constraint`` picks up the ambient
+mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_SPEC: ContextVar[Optional[P]] = ContextVar("act_spec", default=None)
+# (mesh, dp_axes tuple, model axis name) for shard_map-based layers
+_SHARD_CTX: ContextVar[Optional[tuple]] = ContextVar("shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_spec(spec: Optional[P]):
+    token = _ACT_SPEC.set(spec)
+    try:
+        yield
+    finally:
+        _ACT_SPEC.reset(token)
+
+
+@contextlib.contextmanager
+def shard_context(mesh, dp_axes: tuple, model_axis: str = "model"):
+    token = _SHARD_CTX.set((mesh, tuple(dp_axes), model_axis))
+    try:
+        yield
+    finally:
+        _SHARD_CTX.reset(token)
+
+
+def get_shard_context() -> Optional[tuple]:
+    return _SHARD_CTX.get()
+
+
+def constrain(x):
+    spec = _ACT_SPEC.get()
+    if spec is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def sequence_parallel_spec(batch_axes=("data",), seq_axis: str = "model") -> P:
+    """Residual stream (B, S, D): batch over data axes, seq over model."""
+    return P(batch_axes, seq_axis, None)

@@ -1,0 +1,215 @@
+"""Sharding rules: parameter PartitionSpecs + batch specs for the production
+mesh (axes ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod; batch always shards over all data-like axes).
+
+Rules are name-based over the param pytree (tree_map_with_path) and
+*divisibility-checked*: an axis assignment that does not divide the dim is
+dropped rather than letting GSPMD pad (keeps the memory/FLOP accounting in
+the roofline honest).  Head projections are sharded on their flattened
+(H*head_dim) output dim — always divisible by 16 for the assigned archs even
+when the head *count* (36, 25, 28...) is not.
+
+Plan knobs (the hillclimbing levers):
+  fsdp     shard weight matrices' non-TP dim over the data axes (XLA inserts
+           per-stack all-gathers; memory <-> collective trade)
+  zero1    shard optimizer moments over the data axes even when params are
+           replicated there (all-gather of updates only at apply time)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    fsdp: bool = False
+    zero1: bool = True
+    # decode-time long-context: shard the KV/seq dim of caches over data axes
+    seq_shard_cache: bool = True
+    # decode cache layout: "feature" shards kv-heads/head_dim over `model`
+    # (baseline); "seq" shards the cache sequence dim over `model` instead —
+    # flash-decode-style context parallelism that avoids the per-step
+    # full-cache all-gather GSPMD emits for the feature layout (§Perf D).
+    cache_layout: str = "feature"
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+MODEL = "model"
+
+# leaf-name -> (model_dim, fsdp_dim); dims index into leaf.shape AFTER the
+# leading stacked-layer dim(s) are skipped.  None = replicated on that front.
+_RULES: dict[str, tuple[Optional[int], Optional[int]]] = {
+    # attention / generic projections (d_in, d_out)
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0), "wo": (0, 1),
+    "x_wq": (1, 0), "x_wk": (1, 0), "x_wv": (1, 0), "x_wo": (0, 1),
+    # FFN
+    "w_gate": (1, 0), "w_up": (1, 0), "w_down": (0, 1),
+    # MoE (E, d, f) leaves handled by ndim offset below; router (d, E)
+    "router": (None, 0),
+    # SSM
+    "w_in": (1, 0), "conv_w": (1, None), "conv_b": (0, None),
+    "w_dt_in": (0, None), "w_dt_out": (1, 0), "dt_bias": (0, None),
+    "w_B": (0, None), "w_C": (0, None), "A_log": (0, None),
+    "D_skip": (0, None), "w_out": (0, 1),
+    # xLSTM
+    "w_q": (1, 0), "w_k": (1, 0), "w_v": (1, 0), "w_og": (1, 0),
+    "w_i": (None, 0), "w_f": (None, 0), "gn_scale": (0, None),
+    "w_z": (1, 0), "r_z": (None, None), "b_z": (0, None),
+    "r_i": (None, None), "b_i": (0, None),
+    "r_f": (None, None), "b_f": (0, None),
+    "w_o": (1, 0), "r_o": (None, None), "b_o": (0, None),
+    # norms
+    "norm1": (None, None), "norm2": (None, None), "norm_x": (None, None),
+    "fuse_a": (None, None), "fuse_s": (None, None),
+}
+
+_TOP_LEVEL = {
+    "embed": (0, None),       # vocab-parallel embedding (Megatron style)
+    "lm_head": (1, 0),        # (D, V): V over model, D over data when fsdp
+    "final_norm": (None, None),
+    "enc_norm": (None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _n_leading_stack_dims(path) -> int:
+    """Stack params carry a leading layer dim; MoE experts add one more."""
+    names = [str(e.key) for e in path if isinstance(e, jax.tree_util.DictKey)]
+    lead = 0
+    if "stacks" in names or "enc_stacks" in names:
+        lead += 1
+    if "moe" in names and names[-1] != "router":
+        lead += 1  # (E, d, f)
+    return lead
+
+
+def _fit(dim_size: int, axes, mesh: Mesh):
+    """Return the axis (or axis tuple) only if it divides dim_size."""
+    if axes is None:
+        return None
+    axs = axes if isinstance(axes, tuple) else (axes,)
+    total = int(np.prod([mesh.shape[a] for a in axs]))
+    return axes if dim_size % total == 0 else None
+
+
+def param_specs(params_shape, mesh: Mesh, plan: ShardingPlan = ShardingPlan()):
+    """PartitionSpec pytree matching an eval_shape'd params pytree."""
+    daxes = data_axes(mesh)
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if name in _TOP_LEVEL:
+            m_dim, f_dim = _TOP_LEVEL[name]
+            lead = 0
+        elif name in _RULES:
+            m_dim, f_dim = _RULES[name]
+            lead = _n_leading_stack_dims(path)
+        else:
+            return P()
+        entries: list = [None] * nd
+        if m_dim is not None and lead + m_dim < nd:
+            i = lead + m_dim
+            entries[i] = _fit(shape[i], MODEL, mesh)
+            if entries[i] is None and name in ("embed", "lm_head"):
+                # odd vocab (122753, 256206, 32001...): fall back to
+                # model-sharding the d_model dim instead of replicating
+                # half a billion embedding params
+                j = lead + (1 - m_dim) if nd >= lead + 2 else None
+                if j is not None and entries[j] is None:
+                    entries[j] = _fit(shape[j], MODEL, mesh)
+        if plan.fsdp and f_dim is not None and lead + f_dim < nd:
+            j = lead + f_dim
+            if entries[j] is None:
+                entries[j] = _fit(shape[j], daxes, mesh)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def zero1_specs(params_shape, pspecs, mesh: Mesh, plan: ShardingPlan):
+    """Optimizer-moment specs: params' specs, plus (if zero1 and not fsdp)
+    the first free divisible dim sharded over the data axes."""
+    daxes = data_axes(mesh)
+
+    def extend(leaf, spec: P):
+        if not plan.zero1 or plan.fsdp:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+            if e is None and _fit(dim, daxes, mesh) is not None and dim > 1024:
+                entries[i] = daxes
+                break
+        return P(*entries)
+
+    return jax.tree.map(extend, params_shape, pspecs)
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Shard every batch leaf's batch dim over the data axes.  Leaves whose
+    leading dim is 3 (M-RoPE position triplets) shard dim 1 instead."""
+    daxes = data_axes(mesh)
+
+    def spec_for(leaf) -> P:
+        if leaf.ndim >= 2 and leaf.shape[0] == 3:       # (3, B, S) positions
+            return P(None, _fit(leaf.shape[1], daxes, mesh))
+        if leaf.ndim == 0:
+            return P()
+        return P(_fit(leaf.shape[0], daxes, mesh))
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, plan: ShardingPlan = ShardingPlan()):
+    """Decode caches: layer-stacked leaves (n, B, S, KV, hd) etc.
+    Shard batch over data axes when divisible; otherwise (long_500k, B=1)
+    shard the seq/state dim over data axes (context parallelism); shard the
+    KV-head / feature dim over model when divisible."""
+    daxes = data_axes(mesh)
+
+    def spec_for(leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if nd <= 1:
+            return P()
+        entries: list = [None] * nd
+        # leading dim is the stacked-layer dim; dim1 = batch
+        if nd >= 2:
+            b_ax = _fit(shape[1], daxes, mesh)
+            entries[1] = b_ax
+            if b_ax is None and plan.seq_shard_cache and nd >= 3:
+                entries[2] = _fit(shape[2], daxes, mesh)
+        if plan.cache_layout == "seq" and nd >= 3 and entries[2] is None:
+            # context parallelism: cache seq over `model`; attention psums
+            # the softmax stats instead of regathering the cache
+            entries[2] = _fit(shape[2], MODEL, mesh)
+        if not any(e == MODEL or e == (MODEL,) for e in entries):
+            # feature layout: model axis on the last divisible big dim
+            for i in range(nd - 1, 1, -1):
+                if entries[i] is None and _fit(shape[i], MODEL, mesh) \
+                        and shape[i] >= 16:
+                    entries[i] = MODEL
+                    break
+        return P(*entries)
+
+    return jax.tree.map(spec_for, cache_shape)
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+kernel              layer it accelerates
+------------------  ----------------------------------------------------
+flash_attention     prefill/train attention (GQA + sliding window)
+decode_attention    serve decode over ring KV caches (flash-decode)
+topk_scores         value-based ORDER BY ... LIMIT K selection
+borda_count         pessimistic-optimizer consensus aggregation
+ssm_scan            Hymba Mamba heads (chunked selective scan)
+mlstm_scan          xLSTM matrix-memory blocks (chunkwise-parallel)
+moe_gating          Mixtral router top-k + dispatch ranks
+
+Each kernel: ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jit'd wrapper in ``ops.py`` (interpret-mode on CPU, compiled on
+TPU), and a pure-jnp oracle in ``ref.py`` asserted against in tests.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

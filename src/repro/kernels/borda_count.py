@@ -1,0 +1,74 @@
+"""Borda-count aggregation Pallas TPU kernel (pessimistic optimizer hot path
+at fleet scale: thousands of queries x R candidate ballots each).
+
+TPU adaptation: GPU implementations scatter-add with atomics; TPUs have no
+scatter-atomics, so the positional-points accumulation is recast as a
+one-hot-matmul that feeds the MXU: for an item-block of width Bn,
+``points[n] = sum_{r,s} [ballot[r,s] == n] * pts[s]`` =
+``einsum('rs n, s -> n')`` over the comparison one-hot.  Grid
+(item_blocks, ballot_blocks) with ballots innermost, accumulating in VMEM
+scratch.  Padded ballot slots carry index -1 and never match an item.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ballot_ref, pts_ref, o_ref, acc_scr, *, bn: int, br: int,
+            n_ballot_blocks: int):
+    ni = pl.program_id(0)
+    ri = pl.program_id(1)
+
+    @pl.when(ri == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ballots = ballot_ref[...]                              # (br, S) int32
+    pts = pts_ref[...].astype(jnp.float32)                 # (1, S)
+    base = ni * bn
+    items = base + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)  # (1, bn)
+    # one-hot contraction: (br*S, 1) ballots vs (1, bn) items on the VPU,
+    # reduced with a (1, br*S) x (br*S, bn) MXU matmul against the points.
+    flat = ballots.reshape(-1, 1)                          # (br*S, 1)
+    onehot = (flat == items).astype(jnp.float32)           # (br*S, bn)
+    w = jnp.broadcast_to(pts, (br, pts.shape[1])).reshape(1, -1)  # (1, br*S)
+    acc_scr[...] += w @ onehot                             # (1, bn)
+
+    @pl.when(ri == n_ballot_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...]
+
+
+def borda_count(ballots, n_items: int, *, block_items: int = 128,
+                block_ballots: int = 8, interpret: bool = False):
+    """ballots (R, S) int32 (-1 pads) -> points (n_items,) fp32.
+    Points: position p contributes S - p (matches optimizer/borda.py)."""
+    r, s = ballots.shape
+    bn = min(block_items, pl.next_power_of_2(n_items))
+    br = min(block_ballots, r)
+    n_nb = pl.cdiv(n_items, bn)
+    n_rb = pl.cdiv(r, br)
+    pts = jnp.arange(s, 0, -1, dtype=jnp.float32).reshape(1, s)
+    # pad ballot rows to a multiple of br with -1 (never matches an item)
+    pad_r = n_rb * br - r
+    if pad_r:
+        ballots = jnp.concatenate(
+            [ballots, jnp.full((pad_r, s), -1, ballots.dtype)])
+
+    kernel = functools.partial(_kernel, bn=bn, br=br, n_ballot_blocks=n_rb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_nb, n_rb),
+        in_specs=[pl.BlockSpec((br, s), lambda ni, ri: (ri, 0)),
+                  pl.BlockSpec((1, s), lambda ni, ri: (0, 0))],
+        out_specs=pl.BlockSpec((1, bn), lambda ni, ri: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((1, n_nb * bn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=interpret,
+    )(ballots, pts)
+    return out[0, :n_items]

@@ -1,0 +1,95 @@
+"""Flash-decode Pallas TPU kernel: one query token against a (possibly ring)
+KV cache.
+
+Grid (batch, kv_head, kv_blocks): the whole GQA query-head *group* for one
+KV head rides in a single (G, hd) VMEM tile (G = H/KV), so the MXU sees a
+(G, hd) x (hd, Bk) matmul per block instead of H vector-dot passes.  Online
+softmax over kv blocks with fp32 scratch; slot validity comes from the ring
+cache's absolute-position array (pos >= 0), which makes full and sliding-
+window caches the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bk: int, n_blocks: int, cache_len: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = (pos_ref[...] >= 0) & (slot < cache_len)      # (1, bk)
+    k = jnp.where(valid.T, k, 0.0)
+    v = jnp.where(valid.T, v, 0.0)
+    s = q @ k.T                                           # (G, bk)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_cur
+
+    @pl.when(ki == n_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 256,
+                     interpret: bool = False):
+    """q: (B, H, hd); k_cache/v_cache: (B, S, KV, hd); pos: (S,) int32.
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    bk = min(block_k, s)
+    n_blocks = pl.cdiv(s, bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    # (B, KV, G, hd) query groups; caches to (B*KV, S, hd)
+    qg = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    posf = pos.reshape(1, s)
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk,
+                               n_blocks=n_blocks, cache_len=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bi, ci, ki: (bi * pl.num_programs(1) + ci, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bi, ci, ki: (bi * pl.num_programs(1) + ci, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bi, ci, ki: (bi * pl.num_programs(1) + ci, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bi, ci, ki: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd),
+                               lambda bi, ci, ki: (bi * pl.num_programs(1) + ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kf, vf, posf)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,124 @@
+"""Flash attention (prefill/train) Pallas TPU kernel.
+
+Streaming-softmax attention with GQA and optional sliding-window masking.
+The grid is (batch*q_heads, q_blocks, kv_blocks) with the kv dimension
+innermost — on TPU the grid executes sequentially per core, so the fp32
+online-softmax state (m, l, acc) lives in VMEM scratch and persists across
+kv steps.  BlockSpecs keep one (Bq, hd) query tile and one (Bk, hd) KV tile
+resident in VMEM; GQA maps each query head onto its shared KV head inside
+the index_map (no KV duplication in HBM).  Causal/window masking is computed
+from program ids; fully-dead KV blocks are skipped with pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_kv_blocks: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    live = jnp.bool_(True)
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, hd)
+        # zero the padded tail of the last kv block: 0-weight x garbage
+        # (possibly-NaN OOB reads) would otherwise poison the accumulator
+        col_valid = (k_start + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+                     ) < seq_len
+        k = jnp.where(col_valid, k, 0.0)
+        v = jnp.where(col_valid, v, 0.0)
+        s = q @ k.T                                       # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < seq_len
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd).  Returns (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0
+    group = h // kv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    n_q = pl.cdiv(s, bq)
+    n_k = pl.cdiv(s, bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(b * h, s, hd)
+    kf = k.reshape(b * kv, s, hd)
+    vf = v.reshape(b * kv, s, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // h) * kv + (bh % h) // group, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+        n_kv_blocks=n_k, seq_len=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd)

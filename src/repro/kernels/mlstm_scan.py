@@ -1,0 +1,107 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel (xLSTM matrix memory).
+
+Grid (batch*heads, seq_chunks), chunks innermost-sequential: the fp32 carry
+(C (dqk, dv), n (dqk, 1), m (1, 1)) persists in VMEM scratch.  Within a
+chunk everything is matmul-shaped for the MXU: the intra-chunk term is a
+gate-decayed (T, T) attention-like product, the inter-chunk term is
+q @ C_prev, both stabilized by a per-row running max (TFLA-style).
+Correctness oracle: the per-step recurrence in ref.mlstm_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref, c_scr, n_scr, m_scr, *,
+            t: int, dqk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.zeros_like(m_scr)
+
+    q = q_ref[0].astype(jnp.float32) / math.sqrt(dqk)     # (t, dqk)
+    k = k_ref[0].astype(jnp.float32)                      # (t, dqk)
+    v = v_ref[0].astype(jnp.float32)                      # (t, dv)
+    ig = i_ref[...].astype(jnp.float32)[0]                # (t,)
+    fg = f_ref[...].astype(jnp.float32)[0]                # (t,)
+
+    c_prev = c_scr[...]
+    n_prev = n_scr[...]                                   # (dqk, 1)
+    m_prev = m_scr[0, 0]
+
+    lf = jax.nn.log_sigmoid(fg)
+    bcum = jnp.cumsum(lf)                                 # (t,)
+    g_tot = bcum[t - 1]
+    dmat = bcum[:, None] - bcum[None, :] + ig[None, :]    # (t, t)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    dmat = jnp.where(tri, dmat, NEG)
+    inter_log = bcum + m_prev                             # (t,)
+    m_row = jnp.maximum(jnp.max(dmat, axis=-1), inter_log)
+    m_row = jnp.maximum(m_row, -50.0)
+    w_intra = jnp.exp(dmat - m_row[:, None])              # (t, t)
+    w_inter = jnp.exp(inter_log - m_row)                  # (t,)
+
+    scores = q @ k.T                                      # (t, t)
+    h_intra = (w_intra * scores) @ v                      # (t, dv)
+    h_inter = (q @ c_prev) * w_inter[:, None]             # (t, dv)
+    n_comb = w_intra @ k + n_prev[:, 0][None, :] * w_inter[:, None]  # (t, dqk)
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_comb * q, axis=-1)),
+                        jnp.exp(-m_row))
+    o_ref[0] = ((h_intra + h_inter) / denom[:, None]).astype(o_ref.dtype)
+
+    # carry update
+    m_new = jnp.maximum(g_tot + m_prev, jnp.max(g_tot - bcum + ig))
+    src = jnp.exp(g_tot - bcum + ig - m_new)              # (t,)
+    decay = jnp.exp(g_tot + m_prev - m_new)
+    c_scr[...] = decay * c_prev + k.T @ (src[:, None] * v)
+    n_scr[...] = decay * n_prev + (k.T @ src[:, None])
+    m_scr[0, 0] = m_new
+
+
+def mlstm_scan(q, k, v, i_g, f_g, *, chunk: int = 64,
+               interpret: bool = False):
+    """q, k: (B, H, S, dqk); v: (B, H, S, dv); i_g, f_g: (B, H, S).
+    Returns h (B, H, S, dv).  S must be a multiple of ``chunk``."""
+    b, h, s, dqk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0
+    bh = b * h
+    qf = q.reshape(bh, s, dqk)
+    kf = k.reshape(bh, s, dqk)
+    vf = v.reshape(bh, s, dv)
+    i_f = i_g.reshape(bh, s)
+    f_f = f_g.reshape(bh, s)
+
+    kernel = functools.partial(_kernel, t=chunk, dqk=dqk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dqk), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dqk), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bi, ci: (bi, ci)),
+            pl.BlockSpec((1, chunk), lambda bi, ci: (bi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dqk, dv), jnp.float32),
+            pltpu.VMEM((dqk, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, i_f, f_f)
+    return out.reshape(b, h, s, dv)

@@ -1,0 +1,87 @@
+"""Fused MoE top-k gating Pallas TPU kernel (Mixtral router hot path).
+
+One pass over router logits produces, per token: the top-k expert ids, the
+softmax-over-top-k gate weights, and the token's *arrival rank* within each
+chosen expert (the dispatch slot).  The rank needs a running per-expert
+counter across token blocks — the TPU grid is sequential, so the counter is
+an (1, E) VMEM scratch accumulator (GPU versions need global atomics here;
+the sequential grid is the TPU-native substitute).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38
+
+
+def _kernel(l_ref, idx_ref, gate_ref, pos_ref, cnt_scr, *, k: int, bt: int,
+            e: int, n_tokens: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    logits = l_ref[...].astype(jnp.float32)               # (bt, E)
+    rows = ti * bt + jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+    live = rows < n_tokens                                # (bt, 1)
+    logits = jnp.where(live, logits, NEG)
+
+    # iterative top-k (k small): max + mask
+    vals = jnp.zeros((bt, k), jnp.float32)
+    idxs = jnp.zeros((bt, k), jnp.int32)
+    cur = logits
+    for j in range(k):
+        m = jnp.max(cur, axis=-1)
+        am = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        vals = vals.at[:, j].set(m)
+        idxs = idxs.at[:, j].set(am)
+        hit = jax.lax.broadcasted_iota(jnp.int32, (bt, e), 1) == am[:, None]
+        cur = jnp.where(hit, NEG, cur)
+
+    gates = jax.nn.softmax(vals, axis=-1)
+
+    # arrival ranks: one-hot cumsum within the block + running counters
+    flat = idxs.reshape(bt * k)                           # row-major (t, j)
+    oh = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, e), 1)
+          == flat[:, None]).astype(jnp.int32)
+    live_flat = jnp.repeat(live[:, 0], k)[:, None].astype(jnp.int32)
+    oh = oh * live_flat
+    within = jnp.cumsum(oh, axis=0) - oh                  # exclusive
+    base = cnt_scr[...]                                   # (1, E)
+    pos_flat = jnp.sum((within + base) * oh, axis=-1)     # (bt*k,)
+    cnt_scr[...] = base + jnp.sum(oh, axis=0, keepdims=True)
+
+    idx_ref[...] = idxs
+    gate_ref[...] = gates
+    pos_ref[...] = pos_flat.reshape(bt, k)
+
+
+def moe_gating(logits, k: int, *, block_t: int = 256,
+               interpret: bool = False):
+    """logits (T, E) -> (idx (T,k) int32, gates (T,k) fp32, pos (T,k) int32).
+    ``pos`` is the row-major arrival rank within each expert (capacity
+    filtering `pos < C` is the caller's one-liner)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    n_tb = pl.cdiv(t, bt)
+    kernel = functools.partial(_kernel, k=k, bt=bt, e=e, n_tokens=t)
+    idx, gates, pos = pl.pallas_call(
+        kernel,
+        grid=(n_tb,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_tb * bt, k), jnp.int32),
+                   jax.ShapeDtypeStruct((n_tb * bt, k), jnp.float32),
+                   jax.ShapeDtypeStruct((n_tb * bt, k), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, e), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return idx[:t], gates[:t], pos[:t]

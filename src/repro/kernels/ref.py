@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically transparent implementation that the
+kernels/tests assert_allclose against across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, hd).astype(f32) / math.sqrt(hd)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(f32))
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(f32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: (B, H, hd); caches (B, S, KV, hd); pos (S,) int32 (-1 = empty)."""
+    b, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(f32) / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(f32))
+    valid = (pos >= 0)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(f32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def topk_ref(scores, k: int):
+    """scores (N,) -> (values desc (k,), indices (k,))."""
+    v, i = jax.lax.top_k(scores.astype(f32), k)
+    return v, i
+
+
+def borda_ref(ballots, n_items: int):
+    """ballots (R, S) int32 item indices (-1 pads) -> points (n_items,)."""
+    r, s = ballots.shape
+    pts = jnp.arange(s, 0, -1, dtype=f32)                 # position points
+    onehot = jax.nn.one_hot(jnp.where(ballots < 0, n_items, ballots),
+                            n_items + 1, dtype=f32)[..., :n_items]
+    return jnp.einsum("rsn,s->n", onehot, pts)
+
+
+def ssm_scan_ref(x, dt, b_t, c_t, a, h0=None):
+    """Sequential selective-scan oracle.
+    x, dt: (B, S, D); b_t, c_t: (B, S, N); a: (D, N).
+    Returns (y (B, S, D), h_final (B, D, N))."""
+    bsz, s, d = x.shape
+    n = a.shape[1]
+    h = jnp.zeros((bsz, d, n), f32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * a)                  # (B, D, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(f32), dt.transpose(1, 0, 2).astype(f32),
+          b_t.transpose(1, 0, 2).astype(f32), c_t.transpose(1, 0, 2).astype(f32))
+    h_f, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2), h_f
+
+
+def mlstm_ref(q, k, v, i_g, f_g):
+    """Per-step mLSTM oracle.  q,k: (B,H,S,dqk); v: (B,H,S,dv);
+    i_g,f_g: (B,H,S).  Returns h (B,H,S,dv)."""
+    bsz, hh, s, dqk = q.shape
+    dv = v.shape[-1]
+    qs = q.astype(f32) / math.sqrt(dqk)
+
+    def step(carry, t):
+        c, n, m = carry
+        lf = jax.nn.log_sigmoid(f_g[:, :, t])
+        m2 = jnp.maximum(lf + m, i_g[:, :, t])
+        decay = jnp.exp(lf + m - m2)
+        inj = jnp.exp(i_g[:, :, t] - m2)
+        c = decay[..., None, None] * c + inj[..., None, None] * (
+            k[:, :, t, :, None].astype(f32) * v[:, :, t, None, :].astype(f32))
+        n = decay[..., None] * n + inj[..., None] * k[:, :, t].astype(f32)
+        num = jnp.einsum("bhkv,bhk->bhv", c, qs[:, :, t])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qs[:, :, t])),
+                          jnp.exp(-m2))
+        return (c, n, m2), num / den[..., None]
+
+    c0 = jnp.zeros((bsz, hh, dqk, dv), f32)
+    n0 = jnp.zeros((bsz, hh, dqk), f32)
+    m0 = jnp.zeros((bsz, hh), f32)
+    _, hs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(s))
+    return hs.transpose(1, 2, 0, 3)                        # (B,H,S,dv)
+
+
+def moe_gating_ref(logits, k: int, capacity: int):
+    """logits (T, E) -> (idx (T,k), gates (T,k), pos (T,k), keep (T,k)).
+    Position = arrival rank within each expert (row-major over (T, k))."""
+    t, e = logits.shape
+    top_vals, top_idx = jax.lax.top_k(logits.astype(f32), k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    flat = top_idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)
+    pos_flat = jnp.cumsum(onehot, axis=0) - 1
+    pos = pos_flat[jnp.arange(t * k), flat].reshape(t, k)
+    keep = pos < capacity
+    return top_idx, gates, pos, keep

@@ -1,0 +1,70 @@
+"""Chunked selective-scan (Mamba) Pallas TPU kernel — Hymba's SSM heads.
+
+Grid (batch, d_inner_blocks, seq_chunks) with chunks innermost: the fp32 SSM
+state h (Bd, N) lives in VMEM scratch and persists across the sequential
+chunk dimension, so the recurrence never round-trips HBM.  Inputs stay in
+their compact forms (x, dt, B_t, C_t) — the (S, D, N) outer products exist
+only chunk-at-a-time in VMEM, which is the whole point of the blocking (the
+GPU version materializes them in shared memory; VMEM plays that role here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, h_scr, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)                    # (bd, N)
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)           # (bd,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)         # (bd,)
+        bt = b_ref[0, t, :].astype(jnp.float32)           # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)           # (N,)
+        da = jnp.exp(dtt[:, None] * a)                    # (bd, N)
+        h = da * h + (dtt * xt)[:, None] * bt[None, :]
+        o_ref[0, t, :] = (h @ ct).astype(o_ref.dtype)     # (bd,)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+
+def ssm_scan(x, dt, b_t, c_t, a, *, block_d: int = 256, chunk: int = 64,
+             interpret: bool = False):
+    """x, dt: (B, S, D); b_t, c_t: (B, S, N); a: (D, N) -> y (B, S, D).
+    S must be a multiple of ``chunk`` and D of ``block_d`` (callers pad)."""
+    bsz, s, d = x.shape
+    n = a.shape[1]
+    bd = min(block_d, d)
+    n_db = pl.cdiv(d, bd)
+    n_ch = s // chunk
+    assert s % chunk == 0 and d % bd == 0
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bsz, n_db, n_ch),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((bd, n), lambda bi, di, ci: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda bi, di, ci: (bi, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b_t, c_t, a)
+    return out

@@ -1,0 +1,63 @@
+"""Blocked top-k selection Pallas TPU kernel — the value-based
+``ORDER BY ... LIMIT K`` hot path (sort N pointwise scores, keep K).
+
+TPU adaptation of GPU warp-bitonic selection: the score vector is tiled into
+VPU-aligned blocks; each grid step extracts its block's local top-k by k
+iterations of (max, mask) over an (8, bn/8) VMEM tile — a vectorized
+reduction the VPU executes natively — writing (k values, k global indices)
+per block.  The ops.py wrapper reduces the (n_blocks, k) candidates with one
+final jnp.top_k (n_blocks*k << N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.0e38
+
+
+def _kernel(s_ref, v_ref, i_ref, *, k: int, bn: int, n: int):
+    bi = pl.program_id(0)
+    base = bi * bn
+    s = s_ref[...].astype(jnp.float32)                    # (1, bn)
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    s = jnp.where(idx < n, s, NEG_INF)
+
+    def body(j, carry):
+        s_cur, vals, idxs = carry
+        m = jnp.max(s_cur, axis=-1)                       # (1,)
+        am = jnp.argmax(s_cur, axis=-1)                   # (1,)
+        vals = vals.at[:, j].set(m)
+        idxs = idxs.at[:, j].set(base + am.astype(jnp.int32))
+        hit = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1) == am[:, None]
+        return jnp.where(hit, NEG_INF, s_cur), vals, idxs
+
+    vals0 = jnp.full((1, k), NEG_INF, jnp.float32)
+    idxs0 = jnp.zeros((1, k), jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, (s, vals0, idxs0))
+    v_ref[...] = vals
+    i_ref[...] = idxs
+
+
+def topk_scores(scores, k: int, *, block_n: int = 1024,
+                interpret: bool = False):
+    """scores (N,) -> (block-candidate values (n_blocks, k), indices).
+    Compose with a final jnp top_k over the flattened candidates (ops.py)."""
+    n = scores.shape[0]
+    bn = min(block_n, max(k, pl.next_power_of_2(min(n, block_n))))
+    n_blocks = pl.cdiv(n, bn)
+    kernel = functools.partial(_kernel, k=k, bn=bn, n=n)
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, bn), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, k), jnp.float32),
+                   jax.ShapeDtypeStruct((n_blocks, k), jnp.int32)],
+        interpret=interpret,
+    )(scores.reshape(1, n))
+    return vals, idxs

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline, train, serve.
+
+NOTE: import ``repro.launch.dryrun`` only as a __main__ entry point — its
+first two lines set XLA_FLAGS to 512 host devices, which locks the device
+count for the whole process.
+"""
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below runs with 512 placeholder host devices ---------------
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Any, Optional  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, list_archs                    # noqa: E402
+from repro.distributed.sharding import (ShardingPlan, batch_specs,  # noqa: E402
+                                        cache_specs, named,
+                                        param_specs, zero1_specs)
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.launch.roofline import (collective_bytes_by_kind,        # noqa: E402
+                                   roofline_terms)
+from repro.launch.specs import (batch_specs_for, cache_specs_for,   # noqa: E402
+                                cell_applicable, decode_token_spec,
+                                input_specs)
+from repro.models.config import SHAPES                              # noqa: E402
+from repro.models.model import LM                                   # noqa: E402
+from repro.training.optimizer import OptimConfig, apply_updates     # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results")
+
+
+def _abstract_params(lm: LM):
+    return jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0)))
+
+
+def _abstract_opt(params_shape):
+    from repro.training.optimizer import init_opt_state
+    return jax.eval_shape(lambda: init_opt_state(params_shape))
+
+
+def _mem_analysis(compiled) -> dict:
+    out: dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # backend-dependent availability
+        out["error"] = str(e)
+    return out
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                plan: ShardingPlan = ShardingPlan(), verbose: bool = True,
+                save_hlo: Optional[str] = None, unroll: bool = True,
+                seq_parallel: bool = False,
+                cfg_overrides: Optional[dict] = None) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; returns the record.
+
+    ``unroll=True`` unrolls layer-stack scans so cost_analysis counts every
+    layer (needed for the single-pod roofline table).  The multi-pod sweep —
+    which only proves shardability — uses ``unroll=False`` (10x faster
+    compiles, identical partitioning decisions).
+    """
+    t0 = time.time()
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch), scan_unroll=unroll,
+                              **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": int(n_chips), "kind": shape.kind,
+        "plan": {"fsdp": plan.fsdp, "zero1": plan.zero1,
+                 "seq_parallel": seq_parallel, "unroll": unroll,
+                 **(cfg_overrides or {})},
+    }
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        rec["skipped"] = why
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {why}")
+        return rec
+
+    lm = LM(cfg)
+    params_shape = _abstract_params(lm)
+    pspecs = param_specs(params_shape, mesh, plan)
+    p_shard = named(mesh, pspecs)
+
+    import contextlib
+    from repro.distributed.context import (activation_spec, shard_context,
+                                           sequence_parallel_spec)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    act_ctx = (activation_spec(sequence_parallel_spec(dp))
+               if seq_parallel else contextlib.nullcontext())
+    sm_ctx = (shard_context(mesh, dp, "model")
+              if cfg.moe_impl == "sharded" else contextlib.nullcontext())
+    with mesh, act_ctx, sm_ctx:
+        if shape.kind == "train":
+            opt_shape = _abstract_opt(params_shape)
+            ospecs = zero1_specs(opt_shape["m"], pspecs, mesh, plan)
+            state_shape = {"params": params_shape,
+                           "opt": {"m": opt_shape["m"], "v": opt_shape["v"],
+                                   "step": opt_shape["step"]}}
+            state_shard = {"params": p_shard,
+                           "opt": {"m": named(mesh, ospecs),
+                                   "v": named(mesh, ospecs),
+                                   "step": None}}
+            batch_shape = batch_specs_for(cfg, shape)
+            b_shard = named(mesh, batch_specs(batch_shape, mesh))
+            ocfg = OptimConfig()
+
+            def train_step(state, batch):
+                (loss, _), grads = jax.value_and_grad(
+                    lm.loss, has_aux=True)(state["params"], batch)
+                p2, o2, info = apply_updates(state["params"], grads,
+                                             state["opt"], ocfg)
+                return {"params": p2, "opt": o2}, (loss, info["grad_norm"])
+
+            jitted = jax.jit(train_step,
+                             in_shardings=(state_shard, b_shard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, batch_shape)
+        elif shape.kind == "prefill":
+            batch_shape = batch_specs_for(cfg, shape)
+            b_shard = named(mesh, batch_specs(batch_shape, mesh))
+            # pin the emitted caches' layout (unconstrained out-shardings let
+            # GSPMD pick gather-happy layouts — §Perf E)
+            out_shape = jax.eval_shape(lm.prefill, params_shape, batch_shape)
+            c_shard = named(mesh, cache_specs(out_shape[1], mesh, plan))
+            jitted = jax.jit(lm.prefill, in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(params_shape, batch_shape)
+        else:  # decode
+            caches_shape = cache_specs_for(cfg, shape)
+            c_shard = named(mesh, cache_specs(caches_shape, mesh, plan))
+            tok_shape = decode_token_spec(cfg, shape)
+            t_shard = named(mesh, batch_specs(tok_shape, mesh))
+            jitted = jax.jit(lm.decode_step,
+                             in_shardings=(p_shard, c_shard, t_shard, None),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, caches_shape, tok_shape,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    rec["lower_s"] = round(t_lower - t0, 1)
+    rec["compile_s"] = round(t_compile - t_lower, 1)
+    rec["memory_analysis"] = _mem_analysis(compiled)
+    rec["cost_analysis"] = _cost_analysis(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes_by_kind(hlo)
+    rec["roofline"] = roofline_terms(rec, cfg, shape)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    if verbose:
+        ca = rec["cost_analysis"]
+        print(f"[ok] {arch} x {shape_name} ({'2-pod 512' if multi_pod else '1-pod 256'}) "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+        print(f"     memory_analysis: {rec['memory_analysis']}")
+        print(f"     cost_analysis: flops/device={ca.get('flops', float('nan')):.3e} "
+              f"bytes/device={ca.get('bytes accessed', float('nan')):.3e}")
+        print(f"     collectives (per-device bytes): {rec['collectives']}")
+        print(f"     roofline: {rec['roofline']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="rolled layer scans: fast compiles, FLOP counts "
+                         "undercount loop bodies (use for multi-pod pass)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-shard the residual stream over 'model'")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["einsum", "bf16", "qchunk"],
+                    help="attention implementation override (perf iteration)")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--moe-impl", default=None, choices=["global", "sharded"])
+    ap.add_argument("--scan-chunk", type=int, default=None,
+                    help="SSM/mLSTM chunkwise length override")
+    ap.add_argument("--cache-layout", default=None,
+                    choices=["feature", "seq"],
+                    help="decode cache sharding layout (§Perf D)")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    plan = ShardingPlan(fsdp=args.fsdp, zero1=not args.no_zero1,
+                        cache_layout=args.cache_layout or "feature")
+    overrides = {}
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+    if args.attn_chunk:
+        overrides["attn_chunk"] = args.attn_chunk
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    if args.scan_chunk:
+        overrides["scan_chunk"] = args.scan_chunk
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = dryrun_cell(arch, shape, multi_pod=mp, plan=plan,
+                                      save_hlo=args.save_hlo,
+                                      unroll=not args.no_unroll,
+                                      seq_parallel=args.seq_parallel,
+                                      cfg_overrides=overrides or None)
+                except Exception as e:
+                    n_fail += 1
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"[FAIL] {arch} x {shape}: {e}")
+                    traceback.print_exc()
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

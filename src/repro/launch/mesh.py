@@ -1,0 +1,26 @@
+"""Production mesh definition (TPU v5e, 256 chips/pod).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state — device count is locked on first jax init, and only dryrun.py (which
+sets XLA_FLAGS before any import) may build the 256/512-device meshes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link

@@ -1,0 +1,56 @@
+"""Close the loop: derive the ORDER BY optimizer's PriceSheet from OUR OWN
+serving roofline, instead of an external API's price list.
+
+The paper bills oracle calls at an API's $/Mtoken.  When the oracle is a
+model this framework serves, the honest price is
+
+    $/token = (chips x $/chip-hour / 3600) / (tokens/s at the roofline bound)
+
+with prefill tokens priced off the prefill_32k cell and decode tokens off
+decode_32k.  ``price_sheet_from_roofline`` reads dry-run records and returns
+a :class:`repro.core.oracles.base.PriceSheet` the optimizer consumes
+unchanged — cost-based access-path selection end-to-end on our own pods.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from ..core.oracles.base import PriceSheet
+from ..models.config import SHAPES
+
+
+def _bound(rec: dict) -> float:
+    return rec["roofline"]["step_time_bound_s"]
+
+
+def price_sheet_from_records(recs: list[dict], arch: str,
+                             chip_hour_usd: float = 1.20,
+                             utilization: float = 0.6) -> PriceSheet:
+    """PriceSheet for ``arch`` from its prefill/decode roofline bounds.
+
+    ``utilization`` discounts ideal roofline throughput to a realistic
+    serving duty cycle.
+    """
+    by = {(r["arch"], r["shape"]): r for r in recs
+          if "roofline" in r and not r.get("multi_pod")}
+    pre = by.get((arch, "prefill_32k"))
+    dec = by.get((arch, "decode_32k"))
+    if pre is None or dec is None:
+        raise KeyError(f"no prefill/decode records for {arch}")
+    chips = pre["chips"]
+    pod_usd_per_s = chips * chip_hour_usd / 3600.0
+
+    pre_tok_s = SHAPES["prefill_32k"].tokens_per_step / _bound(pre) * utilization
+    dec_tok_s = SHAPES["decode_32k"].tokens_per_step / _bound(dec) * utilization
+    return PriceSheet(
+        input_per_mtok=pod_usd_per_s / pre_tok_s * 1e6,
+        output_per_mtok=pod_usd_per_s / dec_tok_s * 1e6,
+        name=f"{arch}@self-hosted",
+    )
+
+
+def price_sheet_from_file(path: str, arch: str, **kw) -> PriceSheet:
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    return price_sheet_from_records(recs, arch, **kw)

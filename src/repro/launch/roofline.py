@@ -1,0 +1,149 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_global   / (chips * 197e12  bf16 FLOP/s)
+  memory     = HLO_bytes_global   / (chips * 819e9   B/s HBM)
+  collective = coll_bytes_global  / (chips * 50e9    B/s ICI link)
+
+``compiled.cost_analysis()`` and the post-partitioning HLO text are
+*per-device* (SPMD emits one program), so global = per-device x chips; the
+two conventions cancel and each term equals per-device quantity / per-chip
+bandwidth.  Collective bytes are the RESULT buffer sizes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op (for a ring all-reduce the wire traffic is ~2x the buffer; we report the
+buffer convention and note it in EXPERIMENTS.md).
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) convention with
+N = active params (MoE: top-k experts only), D = tokens processed; the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute, attention FLOPs,
+and padding/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from ..models.config import InputShape, ModelConfig
+from .mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result type(s) of an HLO instruction: "f32[128,1024]{1,0}" or a tuple
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, Any]:
+    """Per-device result bytes of every collective op, by kind + count.
+    Ops inside while-loop bodies are counted once per body occurrence
+    (trip-count weighting is applied by the caller via layer counts when
+    needed; scan-over-layers collectives appear once in the body)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        out[op] += _type_bytes(type_str)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _while_trip_counts(hlo_text: str) -> list[int]:
+    """Best-effort trip counts from XLA's while-loop analysis comments."""
+    return [int(x) for x in re.findall(r"trip_count=(\d+)", hlo_text)]
+
+
+def inner_scan_flop_correction(cfg: ModelConfig, shape: InputShape) -> float:
+    """GLOBAL FLOPs that XLA's cost analysis misses because they sit inside
+    rolled inner recurrence scans (counted once instead of trip_count times).
+
+    Outer layer-stack and loss scans are fully unrolled for the dry-run
+    (cfg.scan_unroll), so only the SSM / mLSTM chunk scans and the sLSTM
+    per-step scan need correction.  Matmul terms only (elementwise undercount
+    is <1% of these blocks); train cells get the standard fwd+bwd multiplier
+    of 3x.
+    """
+    if shape.kind == "decode":
+        return 0.0  # decode has no inner scans (single-step recurrences)
+    toks = shape.global_batch * shape.seq_len
+    s = shape.seq_len
+    t = cfg.scan_chunk
+    mult = 3.0 if shape.kind == "train" else 1.0
+    missing = 0.0
+    for kind, n_layers in cfg.pattern:
+        if kind in ("hymba_g", "hymba_l"):
+            di, ns = cfg.d_inner, cfg.ssm_state
+            per_tok = 2 * di * ns * 3          # assoc-scan compose + y-einsum
+            n_chunks = max(s // t, 1)
+            missing += n_layers * per_tok * toks * (n_chunks - 1) / n_chunks
+        elif kind == "mlstm":
+            h, dqk, dv = cfg.n_heads, cfg.qk, cfg.hd
+            n_chunks = max(s // t, 1)
+            body = (2 * h * (3 * t * t * max(dqk, dv)          # scores/intra/n
+                             + 3 * t * dqk * dv)               # inter + carry
+                    * shape.global_batch)
+            missing += n_layers * body * (n_chunks - 1)
+        elif kind == "slstm":
+            h, hd = cfg.n_heads, cfg.hd
+            per_step = 8 * h * hd * hd * shape.global_batch   # 4 rec matmuls
+            missing += n_layers * per_step * (s - 1)
+    return missing * mult
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.active_param_count()
+    toks = shape.tokens_per_step
+    if shape.kind == "train":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks
+
+
+def roofline_terms(rec: dict, cfg: ModelConfig, shape: InputShape) -> dict:
+    chips = rec["chips"]
+    ca = rec.get("cost_analysis", {})
+    flops_dev = ca.get("flops", 0.0) or 0.0
+    bytes_dev = ca.get("bytes accessed", 0.0) or 0.0
+    coll_dev = rec.get("collectives", {}).get("total_bytes", 0) or 0
+
+    correction = inner_scan_flop_correction(cfg, shape)
+    hlo_global = flops_dev * chips + correction
+    compute_s = hlo_global / (chips * PEAK_FLOPS_BF16)
+    memory_s = (bytes_dev * chips) / (chips * HBM_BW)
+    collective_s = (coll_dev * chips) / (chips * ICI_LINK_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=lambda k: terms[k])
+    mf = model_flops(cfg, shape)
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": float(f"{mf:.6g}"),
+        "hlo_flops_global": float(f"{hlo_global:.6g}"),
+        "inner_scan_correction": float(f"{correction:.6g}"),
+        "useful_ratio": float(f"{(mf / hlo_global if hlo_global else 0):.4g}"),
+        "step_time_bound_s": float(f"{max(terms.values()):.6g}"),
+    }

@@ -1,0 +1,65 @@
+"""Serving launcher: hosts a model behind the ORDER BY ModelOracle and runs
+semantic ORDER BY queries against it.
+
+``python -m repro.launch.serve --arch stablelm-1.6b --query "positivity" ...``
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.core import PathParams, as_keys, llm_order_by
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.models import LM
+from repro.serving import BatchScheduler, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--query", default="degree of positivity")
+    ap.add_argument("--path", default="auto")
+    ap.add_argument("--strategy", default="borda")
+    ap.add_argument("--limit", type=int, default=5)
+    ap.add_argument("--budget", type=float, default=None)
+    ap.add_argument("--items", nargs="*", default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(lm, params, max_new_tokens=16)
+    oracle = ModelOracle(engine)
+
+    items = args.items or [
+        "absolutely loved it, best purchase ever",
+        "terrible, broke after one day",
+        "it is fine, nothing special",
+        "pretty good overall, minor flaws",
+        "worst experience of my life",
+        "exceeded every expectation",
+        "mediocre at best",
+        "would recommend with reservations",
+    ]
+    keys = as_keys(items)
+    result, report = llm_order_by(
+        keys, args.query, oracle, path=args.path, descending=True,
+        limit=args.limit, budget=args.budget, strategy=args.strategy,
+        sample_size=min(8, len(keys)))
+    print(f"arch={cfg.name} path={result.path} calls={result.n_calls} "
+          f"cost=${result.cost:.5f}")
+    if report is not None:
+        print(f"optimizer: chose={report.chosen.label} reason={report.reason} "
+              f"membership={report.membership_rate:.2f}")
+    for i, k in enumerate(result.order):
+        print(f"  {i+1}. {k.text}")
+    print(f"engine stats: {engine.stats}")
+
+
+if __name__ == "__main__":
+    main()

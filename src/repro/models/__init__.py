@@ -1,0 +1,5 @@
+"""Model substrate: unified LM API over the 10 assigned architectures."""
+from .config import InputShape, ModelConfig, MoESpec, SHAPES
+from .model import LM
+
+__all__ = ["InputShape", "ModelConfig", "MoESpec", "SHAPES", "LM"]

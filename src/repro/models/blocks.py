@@ -1,0 +1,320 @@
+"""Block kinds and scanned stacks.
+
+Every model is a sequence of homogeneous *stacks* (see config.py); a stack of
+``n`` layers is executed as ``jax.lax.scan`` over stacked parameters with the
+activation as carry and per-layer caches as xs/ys.  All kinds share one
+signature::
+
+    apply_block(kind, cfg, p, x, ctx, cache, mode) -> (x', cache')
+
+``mode``: "train" (no cache), "prefill" (emit cache), "decode" (one token,
+read+update cache).  ``ctx`` carries rope angles, encoder output, and the
+scalar decode position.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (KVCache, apply_rope, causal_mask, dense_init, dtype_of,
+                     f32, full_mask, gqa_attention, rms_norm, swiglu)
+from .moe import init_moe_params, moe_ffn
+from .ssm import (SSMState, init_ssm_params, init_ssm_state, ssm_prefill_state,
+                  ssm_sequence, ssm_step)
+from .xlstm import (MLSTMState, SLSTMState, init_mlstm_params,
+                    init_mlstm_state, init_slstm_params, init_slstm_state,
+                    mlstm_sequence, mlstm_step, slstm_sequence, slstm_step)
+
+WINDOWED = {"swa", "moe_swa", "hymba_l"}
+HAS_FFN = {"attn", "swa", "moe", "moe_swa", "hymba_g", "hymba_l", "enc", "xdec"}
+
+
+# ----------------------------------------------------------------- init: one
+def _init_attn(rng, cfg: ModelConfig, dtype, prefix=""):
+    ks = jax.random.split(rng, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    depth_scale = 1.0 / math.sqrt(2.0 * max(cfg.decoder_layers(), 1))
+    return {
+        f"{prefix}wq": dense_init(ks[0], d, h * hd, dtype),
+        f"{prefix}wk": dense_init(ks[1], d, kv * hd, dtype),
+        f"{prefix}wv": dense_init(ks[2], d, kv * hd, dtype),
+        f"{prefix}wo": dense_init(ks[3], h * hd, d, dtype, scale=depth_scale),
+    }
+
+
+def _init_ffn(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    depth_scale = 1.0 / math.sqrt(2.0 * max(cfg.decoder_layers(), 1))
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype, scale=depth_scale),
+    }
+
+
+def init_block(rng, kind: str, cfg: ModelConfig):
+    dtype = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    p: dict[str, Any] = {"norm1": jnp.zeros((d,), f32)}
+    if kind in ("attn", "swa", "enc"):
+        p.update(_init_attn(ks[0], cfg, dtype))
+        p["norm2"] = jnp.zeros((d,), f32)
+        p["ffn"] = _init_ffn(ks[1], cfg, dtype)
+    elif kind in ("moe", "moe_swa"):
+        p.update(_init_attn(ks[0], cfg, dtype))
+        p["norm2"] = jnp.zeros((d,), f32)
+        p["moe"] = init_moe_params(ks[1], d, cfg.d_ff, cfg.moe, dtype)
+    elif kind in ("hymba_g", "hymba_l"):
+        p.update(_init_attn(ks[0], cfg, dtype))
+        p["ssm"] = init_ssm_params(ks[1], d, cfg.d_inner, cfg.ssm_state,
+                                   cfg.ssm_conv_width, dtype)
+        p["fuse_a"] = jnp.zeros((d,), f32)
+        p["fuse_s"] = jnp.zeros((d,), f32)
+        p["norm2"] = jnp.zeros((d,), f32)
+        p["ffn"] = _init_ffn(ks[2], cfg, dtype)
+    elif kind == "xdec":
+        p.update(_init_attn(ks[0], cfg, dtype))
+        p["norm_x"] = jnp.zeros((d,), f32)
+        p.update(_init_attn(ks[1], cfg, dtype, prefix="x_"))
+        p["norm2"] = jnp.zeros((d,), f32)
+        p["ffn"] = _init_ffn(ks[2], cfg, dtype)
+    elif kind == "mlstm":
+        p.update(init_mlstm_params(ks[0], d, cfg.n_heads, cfg.qk, cfg.hd, dtype))
+    elif kind == "slstm":
+        p.update(init_slstm_params(ks[0], d, cfg.n_heads, cfg.hd, dtype))
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def init_stack(rng, kind: str, n: int, cfg: ModelConfig):
+    return jax.vmap(lambda r: init_block(r, kind, cfg))(jax.random.split(rng, n))
+
+
+# ------------------------------------------------------------------- caches
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     enc_len: int = 0):
+    """Cache pytree for ONE layer of ``kind`` (stacked by vmap for a stack)."""
+    dtype = dtype_of(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if kind in ("attn", "moe"):
+        return KVCache.init(batch, cache_len, kv, hd, dtype)
+    if kind in ("swa", "moe_swa"):
+        return KVCache.init(batch, min(cfg.sliding_window, cache_len), kv, hd, dtype)
+    if kind == "hymba_g":
+        return (KVCache.init(batch, cache_len, kv, hd, dtype),
+                init_ssm_state(batch, cfg.d_inner, cfg.ssm_state,
+                               cfg.ssm_conv_width, dtype))
+    if kind == "hymba_l":
+        return (KVCache.init(batch, min(cfg.sliding_window, cache_len), kv, hd, dtype),
+                init_ssm_state(batch, cfg.d_inner, cfg.ssm_state,
+                               cfg.ssm_conv_width, dtype))
+    if kind == "xdec":
+        return (KVCache.init(batch, cache_len, kv, hd, dtype),
+                jnp.zeros((batch, enc_len, kv, hd), dtype),   # cross K
+                jnp.zeros((batch, enc_len, kv, hd), dtype))   # cross V
+    if kind == "mlstm":
+        return init_mlstm_state(batch, cfg.n_heads, cfg.qk, cfg.hd)
+    if kind == "slstm":
+        return init_slstm_state(batch, cfg.n_heads, cfg.hd)
+    if kind == "enc":
+        return ()
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- attention
+def _qkv(p, x, cfg: ModelConfig, angles, prefix=""):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p[f"{prefix}wq"]).reshape(b, s, h, hd)
+    k = (x @ p[f"{prefix}wk"]).reshape(b, s, kv, hd)
+    v = (x @ p[f"{prefix}wv"]).reshape(b, s, kv, hd)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    return q, k, v
+
+
+def _attn_seq(p, x, cfg, angles, window: int, bidir: bool = False):
+    from .layers import gqa_attention_bf16, gqa_attention_qchunk
+    q, k, v = _qkv(p, x, cfg, angles)
+    s = x.shape[1]
+    if cfg.attn_impl == "qchunk" and not bidir:
+        out = gqa_attention_qchunk(q, k, v, causal=True, window=window,
+                                   chunk=cfg.attn_chunk,
+                                   unroll=cfg.scan_unroll)
+    else:
+        mask = full_mask(s, s) if bidir else causal_mask(s, s, window)
+        fn = gqa_attention_bf16 if cfg.attn_impl in ("bf16", "qchunk") \
+            else gqa_attention
+        out = fn(q, k, v, mask)
+    return out.reshape(*x.shape[:2], -1) @ p["wo"], (k, v)
+
+
+def _attn_decode(p, x, cfg, angles, cache: KVCache, position):
+    q, k, v = _qkv(p, x, cfg, angles)
+    cache = cache.update(k, v, position)
+    out = gqa_attention(q, cache.k, cache.v, cache.decode_mask())
+    return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
+
+
+def _cross_attn(p, x, cfg, enc_kv=None, enc_out=None):
+    """Cross-attention: q from x (no rope), k/v from encoder output (cached
+    after prefill)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["x_wq"]).reshape(b, s, h, hd)
+    if enc_kv is None:
+        se = enc_out.shape[1]
+        k = (enc_out @ p["x_wk"]).reshape(b, se, kv, hd)
+        v = (enc_out @ p["x_wv"]).reshape(b, se, kv, hd)
+    else:
+        k, v = enc_kv
+    mask = full_mask(s, k.shape[1])
+    out = gqa_attention(q, k, v, mask)
+    return out.reshape(b, s, -1) @ p["x_wo"], (k, v)
+
+
+# ------------------------------------------------------------------- apply
+def apply_block(kind: str, cfg: ModelConfig, p, x, ctx, cache, mode: str):
+    rs = cfg.residual_scale
+    eps = cfg.norm_eps
+    angles = ctx.get("angles")
+    window = cfg.sliding_window if kind in WINDOWED else 0
+
+    def resid(x, branch):
+        return x + rs * branch
+
+    new_cache = cache
+    if kind in ("attn", "swa", "moe", "moe_swa", "enc"):
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            a, new_cache = _attn_decode(p, h, cfg, angles, cache, ctx["position"])
+        else:
+            a, (k, v) = _attn_seq(p, h, cfg, angles, window, bidir=(kind == "enc"))
+            if mode == "prefill":
+                new_cache = KVCache.from_prefill(k, v, window,
+                                                 ctx.get("reserve", 0))
+        x = resid(x, a)
+        h = rms_norm(x, p["norm2"], eps)
+        if kind in ("moe", "moe_swa"):
+            from ..distributed.context import get_shard_context
+            sctx = get_shard_context()
+            if cfg.moe_impl == "sharded" and sctx is not None:
+                from .moe import moe_ffn_sharded
+                mesh, dp_axes, model_axis = sctx
+                x = resid(x, moe_ffn_sharded(p["moe"], h, cfg.moe, mesh,
+                                             dp_axes, model_axis))
+            else:
+                x = resid(x, moe_ffn(p["moe"], h, cfg.moe))
+        else:
+            x = resid(x, swiglu(h, **p["ffn"]))
+        return x, new_cache
+
+    if kind in ("hymba_g", "hymba_l"):
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            kvc, sst = cache
+            a, kvc = _attn_decode(p, h, cfg, angles, kvc, ctx["position"])
+            s_out, sst = ssm_step(p["ssm"], h, sst)
+            new_cache = (kvc, sst)
+        else:
+            a, (k, v) = _attn_seq(p, h, cfg, angles, window)
+            if mode == "prefill":
+                s_out, sst = ssm_prefill_state(p["ssm"], h, chunk=cfg.scan_chunk)
+                new_cache = (KVCache.from_prefill(k, v, window,
+                                                  ctx.get("reserve", 0)), sst)
+            else:
+                s_out, _ = ssm_sequence(p["ssm"], h, chunk=cfg.scan_chunk)
+        fused = 0.5 * (rms_norm(a, p["fuse_a"], eps) + rms_norm(s_out, p["fuse_s"], eps))
+        x = resid(x, fused)
+        h = rms_norm(x, p["norm2"], eps)
+        x = resid(x, swiglu(h, **p["ffn"]))
+        return x, new_cache
+
+    if kind == "xdec":
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            kvc, xk, xv = cache
+            a, kvc = _attn_decode(p, h, cfg, angles, kvc, ctx["position"])
+            x = resid(x, a)
+            h = rms_norm(x, p["norm_x"], eps)
+            a, _ = _cross_attn(p, h, cfg, enc_kv=(xk, xv))
+            new_cache = (kvc, xk, xv)
+        else:
+            a, (k, v) = _attn_seq(p, h, cfg, angles, 0)
+            x = resid(x, a)
+            h = rms_norm(x, p["norm_x"], eps)
+            a, (xk, xv) = _cross_attn(p, h, cfg, enc_out=ctx["enc_out"])
+            if mode == "prefill":
+                new_cache = (KVCache.from_prefill(k, v, 0, ctx.get("reserve", 0)),
+                             xk, xv)
+        x = resid(x, a)
+        h = rms_norm(x, p["norm2"], eps)
+        x = resid(x, swiglu(h, **p["ffn"]))
+        return x, new_cache
+
+    if kind == "mlstm":
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            y, new_cache = mlstm_step(p, h, cfg.n_heads, cfg.qk, cfg.hd, cache)
+        else:
+            st0 = cache if mode == "prefill" else None
+            y, st = mlstm_sequence(p, h, cfg.n_heads, cfg.qk, cfg.hd,
+                                   chunk=cfg.scan_chunk, state=st0)
+            if mode == "prefill":
+                new_cache = st
+        return resid(x, y), new_cache
+
+    if kind == "slstm":
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            y, new_cache = slstm_step(p, h, cfg.n_heads, cfg.hd, cache)
+        else:
+            st0 = cache if mode == "prefill" else None
+            y, st = slstm_sequence(p, h, cfg.n_heads, cfg.hd, state=st0)
+            if mode == "prefill":
+                new_cache = st
+        return resid(x, y), new_cache
+
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- stacks
+def apply_stack(kind: str, cfg: ModelConfig, stack, x, ctx, cache=None,
+                mode: str = "train"):
+    """Scan ``apply_block`` over a stacked-parameter stack.
+
+    cache: stacked (leading dim n) cache pytree or None.  Returns
+    (x, new_cache_stacked_or_None).
+    """
+    from ..distributed.context import constrain
+
+    def body(xc, layer):
+        p, c = layer
+        x2, c2 = apply_block(kind, cfg, p, xc, ctx, c, mode)
+        return constrain(x2), c2
+
+    if mode == "train" and cfg.remat == "dots":
+        # saves weight-matmul outputs but NOT attention scores / other
+        # batch-dim dots (flash-attention-compatible activation budget)
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    elif mode == "train" and cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    unroll = True if cfg.scan_unroll else 1
+    if mode == "decode":
+        return jax.lax.scan(body, x, (stack, cache), unroll=unroll)
+    # train & prefill start cache-less; prefill emits per-layer caches as ys
+    x_out, ys = jax.lax.scan(lambda xc, p: body(xc, (p, None)), x, stack,
+                             unroll=unroll)
+    return x_out, (ys if mode == "prefill" else None)

@@ -1,0 +1,242 @@
+"""Shared neural-net layers: RMSNorm, RoPE / M-RoPE, GQA attention (full /
+sliding-window / cross / decode-with-cache), SwiGLU.
+
+Conventions:
+ * activations bf16, softmax and norms accumulate in fp32;
+ * attention caches are rings: ``slot = position % cache_len`` with an
+   absolute-position array ``pos`` per slot (-1 = empty), which makes full and
+   sliding-window caches the same code path (a full cache is a ring that never
+   wraps);
+ * all shapes (B, S, ...); heads split as (B, S, n_heads, head_dim).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# --------------------------------------------------------------- init helpers
+def dense_init(rng, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), f32) * std).astype(dtype)
+
+
+def stacked_dense_init(rng, n: int, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(rng, (n, d_in, d_out), f32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(f32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(f32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_angles(positions, rot_dim: int, theta: float, sections=()):
+    """positions: (B, S) int32, or (3, B, S) for M-RoPE with ``sections``
+    (t, h, w) frequency-group sizes summing to rot_dim // 2.
+    Returns (B, S, rot_dim//2) fp32 angles."""
+    half = rot_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=f32) / half))
+    if positions.ndim == 2:
+        return positions.astype(f32)[..., None] * inv_freq  # (B, S, half)
+    assert positions.ndim == 3 and sections, "M-RoPE needs (3,B,S) + sections"
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (half,)
+    pos = jnp.take(positions, sec_ids, axis=0)        # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(f32)        # (B, S, half)
+    return pos * inv_freq
+
+
+def apply_rope(x, angles):
+    """x: (B, S, N, hd); angles: (B, S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+NEG_INF = -1e30
+
+
+def gqa_attention(q, k, v, mask):
+    """Reference attention: q (B, Sq, H, hd); k,v (B, Sk, KV, hd); mask
+    broadcastable to (B, KV, G, Sq, Sk).  Materializes fp32 scores."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(f32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def gqa_attention_bf16(q, k, v, mask):
+    """bf16 score storage, single-pass softmax.
+
+    v1 of this function upcast scores to fp32 around max/exp separately,
+    which MATERIALIZED extra fp32 copies and made HBM traffic 16% WORSE than
+    the fp32 baseline (§Perf C1, refuted).  v2 keeps the whole softmax in
+    bf16 (max is exact in any dtype; exp/sum lose <1e-2 relative, validated
+    against the fp32 path in tests), so the (Sq, Sk) transient is touched in
+    2-byte precision end to end."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = (q / math.sqrt(hd)).reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k)           # bf16
+    scores = jnp.where(mask, scores, jnp.asarray(-3e38, scores.dtype))
+    w = jax.nn.softmax(scores, axis=-1)                       # bf16 softmax
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def gqa_attention_qchunk(q, k, v, *, causal: bool, window: int,
+                         chunk: int = 512, unroll: bool = False):
+    """Flash-style query blocking at the XLA level (the dry-run-visible proxy
+    for the Pallas flash_attention kernel): scan over query blocks so the
+    score transient is (chunk, Sk) not (Sq, Sk), with bf16 storage.  For
+    sliding-window attention each query block additionally SLICES its live
+    KV range — O(S*(window+chunk)) flops/bytes instead of O(S^2).
+    Self-attention only (Sq == Sk)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    c = min(chunk, sq)
+    while sq % c:
+        c -= 1
+    n_blocks = sq // c
+    qg = (q / math.sqrt(hd)).reshape(b, sq, kv, g, hd)
+    qb = qg.reshape(b, n_blocks, c, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    # static live-KV width per block: window + chunk (rounded to full array)
+    wlen = min(sq, window + c) if window else sq
+    rows_base = jnp.arange(c)
+
+    def block(_, args):
+        qi, qc = args
+        rows = qi * c + rows_base                         # absolute q rows
+        if window and wlen < sq:
+            start = jnp.clip(qi * c + c - wlen, 0, sq - wlen)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, wlen, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, wlen, axis=1)
+            cols = start + jnp.arange(wlen)               # absolute kv cols
+        else:
+            ks, vs = k, v
+            cols = jnp.arange(sq)
+        m = jnp.ones((c, cols.shape[0]), bool)
+        if causal:
+            m &= cols[None, :] <= rows[:, None]
+        if window:
+            m &= cols[None, :] > rows[:, None] - window
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qc, ks)   # (B,KV,G,c,wlen)
+        scores = jnp.where(m[None, None, None], scores,
+                           jnp.asarray(-3e38 if scores.dtype == jnp.bfloat16
+                                       else NEG_INF, scores.dtype))
+        w = jax.nn.softmax(scores, axis=-1)                # native-dtype
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, vs)       # (B,c,KV,G,hd)
+        return None, out
+
+    _, outs = jax.lax.scan(block, None, (jnp.arange(n_blocks), qb),
+                           unroll=True if unroll else 1)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h * hd)
+    return out.reshape(b, sq, h, hd)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0, q_offset: int = 0):
+    """(1, 1, 1, sq, sk) bool; window=0 => unbounded causal."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m[None, None, None]
+
+
+def full_mask(sq: int, sk: int):
+    return jnp.ones((1, 1, 1, sq, sk), dtype=bool)
+
+
+# ------------------------------------------------------------------ KV cache
+class KVCache(NamedTuple):
+    """Ring cache.  k/v: (B, S_c, KV, hd); pos: (S_c,) absolute positions,
+    -1 where empty.  Full attention uses S_c = max_len (ring never wraps);
+    sliding window uses S_c = window."""
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(batch: int, cache_len: int, n_kv: int, hd: int, dtype) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((batch, cache_len, n_kv, hd), dtype),
+            v=jnp.zeros((batch, cache_len, n_kv, hd), dtype),
+            pos=jnp.full((cache_len,), -1, jnp.int32),
+        )
+
+    @staticmethod
+    def from_prefill(k, v, window: int = 0, reserve: int = 0) -> "KVCache":
+        """Build a cache from prefill-computed k/v (B, S, KV, hd).  For SWA,
+        keep only the trailing ``window`` positions, ring-placed.  For full
+        attention, allocate ``reserve`` extra slots so subsequent decode
+        positions never wrap the ring."""
+        b, s, n_kv, hd = k.shape
+        if window and window < s:
+            slots = jnp.arange(s - window, s) % window
+            kr = jnp.zeros((b, window, n_kv, hd), k.dtype).at[:, slots].set(k[:, s - window:])
+            vr = jnp.zeros((b, window, n_kv, hd), v.dtype).at[:, slots].set(v[:, s - window:])
+            pr = jnp.full((window,), -1, jnp.int32).at[slots].set(jnp.arange(s - window, s))
+            return KVCache(kr, vr, pr)
+        if window and window >= s:
+            kr = jnp.pad(k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+            vr = jnp.pad(v, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+            pr = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                  jnp.full((window - s,), -1, jnp.int32)])
+            return KVCache(kr, vr, pr)
+        if reserve:
+            k = jnp.pad(k, ((0, 0), (0, reserve), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, reserve), (0, 0), (0, 0)))
+            pr = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                  jnp.full((reserve,), -1, jnp.int32)])
+            return KVCache(k, v, pr)
+        return KVCache(k, v, jnp.arange(s, dtype=jnp.int32))
+
+    def update(self, k_new, v_new, position) -> "KVCache":
+        """Insert one token (B, 1, KV, hd) at absolute ``position`` (scalar)."""
+        s_c = self.k.shape[1]
+        slot = position % s_c
+        k = jax.lax.dynamic_update_slice(self.k, k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(self.v, v_new, (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(self.pos, position[None].astype(jnp.int32), (slot,))
+        return KVCache(k, v, pos)
+
+    def decode_mask(self):
+        """(1, 1, 1, 1, S_c) validity mask: ring invariant guarantees every
+        non-empty slot is in-window."""
+        return (self.pos >= 0)[None, None, None, None, :]
+
+
+# -------------------------------------------------------------------- SwiGLU
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

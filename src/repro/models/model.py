@@ -1,0 +1,201 @@
+"""Unified LM API over the block-stack patterns.
+
+    lm = LM(cfg)
+    params = lm.init(rng)                       # or jax.eval_shape for dry-run
+    loss, metrics = lm.loss(params, batch)      # training objective
+    logits, caches = lm.prefill(params, batch)  # serve: context ingestion
+    logits, caches = lm.decode_step(params, caches, token, position)
+
+Batch dict keys:
+  tokens      (B, S) int32          decoder token ids
+  embeds      (B, S, D) bf16        precomputed frontend embeddings (vlm/audio
+                                    stubs) — used instead of tokens
+  enc_embeds  (B, S_enc, D) bf16    encoder input (enc-dec archs)
+  positions   (B, S) or (3, B, S)   optional; default arange (M-RoPE archs
+                                    take the 3D form)
+
+Cross-entropy is computed in sequence chunks (never materializing the full
+(B, S, V) logits) with the vocab dim sharded over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import apply_stack, init_block_cache, init_stack
+from .config import ModelConfig, InputShape
+from .layers import dtype_of, f32, rms_norm, rope_angles
+
+LOSS_CHUNK = 128
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.dtype)
+        n_stacks = len(cfg.pattern) + len(cfg.enc_pattern)
+        ks = jax.random.split(rng, n_stacks + 3)
+        params: dict[str, Any] = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), f32)
+                      / math.sqrt(cfg.d_model)).astype(dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), f32),
+            "stacks": [init_stack(ks[i + 1], kind, n, cfg)
+                       for i, (kind, n) in enumerate(cfg.pattern)],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(ks[n_stacks + 1],
+                                  (cfg.d_model, cfg.vocab_size), f32)
+                / math.sqrt(cfg.d_model)).astype(dtype)
+        if cfg.enc_pattern:
+            off = len(cfg.pattern)
+            params["enc_stacks"] = [
+                init_stack(ks[off + i + 1], kind, n, cfg)
+                for i, (kind, n) in enumerate(cfg.enc_pattern)]
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), f32)
+        return params
+
+    # ------------------------------------------------------------- embedding
+    def _embed_in(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if batch.get("embeds") is not None:
+            return batch["embeds"].astype(dtype_of(cfg.dtype))
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return x * cfg.embed_scale
+
+    def _angles(self, positions, seq: int, batch_dim: int):
+        cfg = self.cfg
+        if not any(k not in ("mlstm", "slstm") for k, _ in
+                   tuple(cfg.pattern) + tuple(cfg.enc_pattern)):
+            return None  # pure-recurrent arch: no RoPE anywhere
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                         (batch_dim, seq))
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(positions, (3, batch_dim, seq))
+        return rope_angles(positions, cfg.hd, cfg.rope_theta,
+                           cfg.mrope_sections)
+
+    def _encode(self, params, batch, ctx_base) -> Optional[jax.Array]:
+        cfg = self.cfg
+        if not cfg.enc_pattern:
+            return None
+        xe = batch["enc_embeds"].astype(dtype_of(cfg.dtype))
+        be, se, _ = xe.shape
+        enc_ctx = dict(ctx_base)
+        enc_ctx["angles"] = self._angles(None, se, be)
+        for stack, (kind, n) in zip(params["enc_stacks"], cfg.enc_pattern):
+            xe, _ = apply_stack(kind, cfg, stack, xe, enc_ctx, None, "train")
+        return rms_norm(xe, params["enc_norm"], cfg.norm_eps)
+
+    def _head(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return (x @ head) * cfg.logit_scale
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, mode: str = "train", caches=None,
+                position=None, reserve: int = 0):
+        """Returns (hidden (B,S,D), new_caches_or_None)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        ctx: dict[str, Any] = {"reserve": reserve}
+        if mode == "decode":
+            pos_arr = jnp.full((b, 1), position, jnp.int32)
+            if cfg.mrope_sections:
+                pos_arr = jnp.broadcast_to(pos_arr, (3, b, 1))
+            ctx["angles"] = self._angles(pos_arr, 1, b)
+            ctx["position"] = position
+        else:
+            ctx["angles"] = self._angles(batch.get("positions"), s, b)
+        enc_out = self._encode(params, batch, ctx) if mode != "decode" else None
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+
+        new_caches = []
+        for i, (stack, (kind, n)) in enumerate(zip(params["stacks"], cfg.pattern)):
+            c = caches[i] if caches is not None else None
+            x, c2 = apply_stack(kind, cfg, stack, x, ctx, c, mode)
+            new_caches.append(c2)
+        return x, (new_caches if mode != "train" else None)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch):
+        """Next-token CE (enc-dec: over decoder tokens), chunked over S."""
+        cfg = self.cfg
+        x, _ = self.forward(params, batch, mode="train")
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        inputs_h = x[:, :-1]
+        targets = tokens[:, 1:]
+        sl = s - 1
+        chunk = min(LOSS_CHUNK, sl)
+        n_chunks = sl // chunk
+        rem = sl - n_chunks * chunk
+
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+        def ce(h, t):
+            logits = (h @ head).astype(f32) * cfg.logit_scale
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+
+        def body(tot, i):
+            h = jax.lax.dynamic_slice_in_dim(inputs_h, i * chunk, chunk, axis=1)
+            t = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+            return tot + ce(h, t), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), f32), jnp.arange(n_chunks),
+                                unroll=True if cfg.scan_unroll else 1)
+        if rem:
+            total = total + ce(inputs_h[:, n_chunks * chunk:],
+                               targets[:, n_chunks * chunk:])
+        ntok = b * sl
+        loss = total / ntok
+        return loss, {"loss": loss, "tokens": jnp.asarray(ntok, f32)}
+
+    # ------------------------------------------------------------- serving
+    def init_caches(self, batch_size: int, cache_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        caches = []
+        for kind, n in cfg.pattern:
+            one = init_block_cache(kind, cfg, batch_size, cache_len, enc_len)
+            caches.append(jax.tree.map(
+                lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), one))
+        return caches
+
+    def prefill(self, params, batch, reserve: int = 0):
+        """Ingest the full context; returns (last_logits (B, V), caches).
+        ``reserve`` extra full-attention cache slots for subsequent decode."""
+        x, caches = self.forward(params, batch, mode="prefill", reserve=reserve)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, caches, token_or_embed, position):
+        """One token: token ids (B, 1) int32 or embeds (B, 1, D).
+        Returns (logits (B, V), caches)."""
+        if token_or_embed.dtype in (jnp.int32, jnp.int64):
+            batch = {"tokens": token_or_embed}
+        else:
+            batch = {"embeds": token_or_embed}
+        x, caches = self.forward(params, batch, mode="decode", caches=caches,
+                                 position=position)
+        logits = self._head(params, x)[:, 0]
+        return logits, caches
+
+    def score_hidden(self, params, batch):
+        """Mean-pooled final hidden state — the scoring read-out used by the
+        ModelOracle's pointwise path."""
+        x, _ = self.forward(params, batch, mode="train")
+        return jnp.mean(x.astype(f32), axis=1)

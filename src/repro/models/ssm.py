@@ -1,0 +1,141 @@
+"""Mamba-style selective SSM used by Hymba's parallel SSM heads.
+
+Sequence mode runs a *chunked* selective scan: ``lax.scan`` over chunks of
+``chunk`` timesteps, parallel (associative scan) within a chunk — the same
+blocking the ``kernels/ssm_scan`` Pallas kernel uses on TPU (state resident in
+VMEM per chunk).  Decode mode is the O(1) single-step recurrence with a conv
+ring buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, f32
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, cw-1, di) last conv inputs
+    h: jax.Array      # (B, di, n) fp32 SSM state
+
+
+def init_ssm_params(rng, d_model: int, d_inner: int, n_state: int,
+                    conv_width: int, dtype):
+    ks = jax.random.split(rng, 8)
+    dt_rank = max(16, d_model // 16)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, d_inner), f32)
+                   / math.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_dt_in": dense_init(ks[2], d_inner, dt_rank, dtype),
+        "w_dt_out": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -2.0, f32),  # softplus^-1(~0.12)
+        "w_B": dense_init(ks[4], d_inner, n_state, dtype),
+        "w_C": dense_init(ks[5], d_inner, n_state, dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n_state + 1, dtype=f32),
+                                  (d_inner, 1))),
+        "D_skip": jnp.ones((d_inner,), f32),
+        "w_out": dense_init(ks[6], d_inner, d_model, dtype),
+    }
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv: x (B, S, di), w (cw, di)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    return out + b
+
+
+def _ssm_coeffs(p, x_c):
+    """x_c (B, S, di) -> dA (B,S,di,n) decay, dBx (B,S,di,n) input, C (B,S,n)."""
+    dt = jax.nn.softplus((x_c @ p["w_dt_in"] @ p["w_dt_out"]).astype(f32)
+                         + p["dt_bias"])                      # (B,S,di)
+    a = -jnp.exp(p["A_log"])                                  # (di,n)
+    b_t = (x_c @ p["w_B"]).astype(f32)                        # (B,S,n)
+    c_t = (x_c @ p["w_C"]).astype(f32)                        # (B,S,n)
+    da = jnp.exp(dt[..., None] * a)                           # (B,S,di,n)
+    dbx = (dt * x_c.astype(f32))[..., None] * b_t[:, :, None, :]
+    return da, dbx, c_t
+
+
+def pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (exactness over padding)."""
+    for c in range(min(chunk, s), 0, -1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def ssm_sequence(p, x, chunk: int = 128, h0=None):
+    """x: (B, S, D) -> (y (B, S, D), final SSMState-h (B, di, n)).
+
+    The chunk length snaps to the largest divisor of S <= ``chunk``; assigned
+    shapes are powers of two so this is the identity there.
+    """
+    btype = x.dtype
+    xz = x @ p["w_in"]
+    di = xz.shape[-1] // 2
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_c = jax.nn.silu(_conv_causal(x_in, p["conv_w"], p["conv_b"]))
+
+    bsz, s, _ = x_c.shape
+    n = p["A_log"].shape[1]
+    h0 = jnp.zeros((bsz, di, n), f32) if h0 is None else h0
+    chunk = pick_chunk(s, chunk)
+    n_chunks = s // chunk
+    xc_ch = x_c.reshape(bsz, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    def scan_chunk(h_prev, xck):
+        da, dbx, c_t = _ssm_coeffs(p, xck)                    # (B,T,di,n)
+        # intra-chunk associative scan: (a, b) composition (a2a1, a2b1+b2)
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        a_sc, b_sc = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+        h_t = b_sc + a_sc * h_prev[:, None]                    # (B,T,di,n)
+        y = jnp.einsum("btdn,btn->btd", h_t, c_t)
+        y = y + p["D_skip"] * xck.astype(f32)
+        return h_t[:, -1], y.astype(btype)
+
+    h_fin, ys = jax.lax.scan(scan_chunk, h0, xc_ch)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], h_fin
+
+
+def ssm_prefill_state(p, x, chunk: int = 128):
+    """Run the sequence and also return the conv ring for decode."""
+    y, h = ssm_sequence(p, x, chunk=chunk)
+    cw = p["conv_w"].shape[0]
+    xz = x @ p["w_in"]
+    di = xz.shape[-1] // 2
+    x_in = xz[..., :di]
+    conv_ring = x_in[:, -(cw - 1):, :]
+    return y, SSMState(conv=conv_ring, h=h)
+
+
+def ssm_step(p, x, state: SSMState):
+    """x: (B, 1, D) -> (y (B, 1, D), new state)."""
+    btype = x.dtype
+    xz = x @ p["w_in"]
+    di = xz.shape[-1] // 2
+    x_in, z = xz[..., :di], xz[..., di:]                       # (B,1,di)
+    hist = jnp.concatenate([state.conv, x_in], axis=1)         # (B,cw,di)
+    x_c = jax.nn.silu((hist * p["conv_w"]).sum(axis=1, keepdims=True)
+                      + p["conv_b"])                           # (B,1,di)
+    da, dbx, c_t = _ssm_coeffs(p, x_c)                         # (B,1,di,n)
+    h = da[:, 0] * state.h + dbx[:, 0]                         # (B,di,n)
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None, :]
+    y = y + p["D_skip"] * x_c.astype(f32)
+    y = (y.astype(btype) * jax.nn.silu(z))
+    return y @ p["w_out"], SSMState(conv=hist[:, 1:], h=h)
+
+
+def init_ssm_state(batch: int, d_inner: int, n_state: int, conv_width: int,
+                   dtype) -> SSMState:
+    return SSMState(conv=jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+                    h=jnp.zeros((batch, d_inner, n_state), f32))

@@ -1,0 +1,241 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential recurrence with block-diagonal recurrent weights).
+
+The mLSTM sequence form follows the stabilized chunkwise algorithm (intra-
+chunk parallel attention-like term + inter-chunk recurrent carry), which is
+also what the ``kernels/mlstm`` Pallas kernel implements; the per-step
+recurrence in :func:`mlstm_step` doubles as its correctness oracle.
+
+Recurrence (per head, stabilizer m):
+    m_t = max(logsig(f_t) + m_{t-1}, i_t)
+    C_t = e^{logsig(f_t)+m_{t-1}-m_t} C_{t-1} + e^{i_t-m_t} k_t v_t^T
+    n_t = e^{logsig(f_t)+m_{t-1}-m_t} n_{t-1} + e^{i_t-m_t} k_t
+    h_t = o_t * (C_t^T q_t) / max(|n_t . q_t|, e^{-m_t})
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, f32
+
+NEG = -1e30
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, qk, hv) fp32
+    n: jax.Array   # (B, H, qk) fp32
+    m: jax.Array   # (B, H) fp32
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd) fp32
+    n: jax.Array   # (B, H, hd) fp32
+    m: jax.Array   # (B, H, hd) fp32
+    h: jax.Array   # (B, H, hd) fp32
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm_params(rng, d_model: int, n_heads: int, qk: int, hv: int, dtype):
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_q": dense_init(ks[0], d_model, n_heads * qk, dtype),
+        "w_k": dense_init(ks[1], d_model, n_heads * qk, dtype),
+        "w_v": dense_init(ks[2], d_model, n_heads * hv, dtype),
+        "w_i": dense_init(ks[3], d_model, n_heads, dtype),
+        "w_f": dense_init(ks[4], d_model, n_heads, dtype),
+        "w_og": dense_init(ks[5], d_model, n_heads * hv, dtype),
+        "gn_scale": jnp.zeros((n_heads * hv,), f32),
+        "w_out": dense_init(ks[6], n_heads * hv, d_model, dtype,
+                            scale=1.0 / math.sqrt(2.0)),
+    }
+
+
+def _mlstm_qkvif(p, x, n_heads: int, qk: int, hv: int):
+    b, s, _ = x.shape
+    q = (x @ p["w_q"]).reshape(b, s, n_heads, qk).transpose(0, 2, 1, 3)
+    k = (x @ p["w_k"]).reshape(b, s, n_heads, qk).transpose(0, 2, 1, 3)
+    v = (x @ p["w_v"]).reshape(b, s, n_heads, hv).transpose(0, 2, 1, 3)
+    i_g = (x @ p["w_i"]).astype(f32).transpose(0, 2, 1)         # (B,H,S)
+    f_g = (x @ p["w_f"]).astype(f32).transpose(0, 2, 1)
+    q = q / math.sqrt(qk)
+    return q, k, v, i_g, f_g
+
+
+def _group_norm(h, scale, n_heads: int):
+    """Per-head RMS norm over the value dim; h (B, S, H*hv)."""
+    b, s, dh = h.shape
+    hv = dh // n_heads
+    hf = h.reshape(b, s, n_heads, hv).astype(f32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + 1e-6)
+    hf = hf.reshape(b, s, dh) * (1.0 + scale)
+    return hf
+
+
+def mlstm_sequence(p, x, n_heads: int, qk: int, hv: int, chunk: int = 128,
+                   state: MLSTMState | None = None):
+    """x: (B, S, D) -> (y, final MLSTMState).  Chunk snaps to a divisor of S."""
+    from .ssm import pick_chunk
+    btype = x.dtype
+    b, s, d = x.shape
+    q, k, v, i_g, f_g = _mlstm_qkvif(p, x, n_heads, qk, hv)
+    if state is None:
+        state = init_mlstm_state(b, n_heads, qk, hv)
+
+    t = pick_chunk(s, chunk)
+    nck = s // t
+    # (nck, B, H, t, ...)
+    qc = q.reshape(b, n_heads, nck, t, qk).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, n_heads, nck, t, qk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_heads, nck, t, hv).transpose(2, 0, 1, 3, 4)
+    ic = i_g.reshape(b, n_heads, nck, t).transpose(2, 0, 1, 3)
+    fc = f_g.reshape(b, n_heads, nck, t).transpose(2, 0, 1, 3)
+
+    def scan_fn(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qq, kk, vv, ii, ff = inp
+        lf = jax.nn.log_sigmoid(ff)                      # (B,H,t)
+        bcum = jnp.cumsum(lf, axis=-1)                   # b_t
+        g_tot = bcum[..., -1]
+        # intra-chunk log decay matrix D[t,s] = b_t - b_s + i_s  (s <= t)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + ii[..., None, :]
+        tri = jnp.tril(jnp.ones((t, t), bool))
+        dmat = jnp.where(tri, dmat, NEG)
+        inter_log = bcum + m_prev[..., None]             # (B,H,t)
+        m_row = jnp.maximum(jnp.max(dmat, axis=-1), inter_log)
+        m_row = jnp.maximum(m_row, -m_prev[..., None] * 0 - 50.0)  # floor
+        w_intra = jnp.exp(dmat - m_row[..., None])       # (B,H,t,t)
+        w_inter = jnp.exp(inter_log - m_row)             # (B,H,t)
+        scores = jnp.einsum("bhtk,bhsk->bhts", qq.astype(f32), kk.astype(f32))
+        h_intra = jnp.einsum("bhts,bhsv->bhtv", w_intra * scores, vv.astype(f32))
+        h_inter = jnp.einsum("bhtk,bhkv->bhtv", qq.astype(f32), c_prev) * w_inter[..., None]
+        n_comb = (jnp.einsum("bhts,bhsk->bhtk", w_intra, kk.astype(f32))
+                  + n_prev[:, :, None, :] * w_inter[..., None])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhtk,bhtk->bht",
+                                               n_comb, qq.astype(f32))),
+                            jnp.exp(-m_row))
+        h_t = (h_intra + h_inter) / denom[..., None]
+
+        # chunk-end carry
+        m_new = jnp.maximum(g_tot + m_prev,
+                            jnp.max(g_tot[..., None] - bcum + ii, axis=-1))
+        src_w = jnp.exp(g_tot[..., None] - bcum + ii - m_new[..., None])
+        c_new = (jnp.exp(g_tot + m_prev - m_new)[..., None, None] * c_prev
+                 + jnp.einsum("bhs,bhsk,bhsv->bhkv", src_w,
+                              kk.astype(f32), vv.astype(f32)))
+        n_new = (jnp.exp(g_tot + m_prev - m_new)[..., None] * n_prev
+                 + jnp.einsum("bhs,bhsk->bhk", src_w, kk.astype(f32)))
+        return (c_new, n_new, m_new), h_t
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(scan_fn, (state.c, state.n, state.m),
+                                       (qc, kc, vc, ic, fc))
+    # (nck, B, H, t, hv) -> (B, S, H*hv)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, n_heads * hv)
+    o = jax.nn.sigmoid((x @ p["w_og"]).astype(f32))
+    h = _group_norm(h, p["gn_scale"], n_heads) * o
+    return (h.astype(btype) @ p["w_out"]), MLSTMState(c_f, n_f, m_f)
+
+
+def mlstm_step(p, x, n_heads: int, qk: int, hv: int, state: MLSTMState):
+    """x: (B, 1, D) -> (y, state).  The per-step oracle recurrence."""
+    btype = x.dtype
+    b = x.shape[0]
+    q, k, v, i_g, f_g = _mlstm_qkvif(p, x, n_heads, qk, hv)
+    qq, kk, vv = (a[:, :, 0].astype(f32) for a in (q, k, v))   # (B,H,dim)
+    ii, ff = i_g[:, :, 0], f_g[:, :, 0]                        # (B,H)
+    lf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(lf + state.m, ii)
+    decay = jnp.exp(lf + state.m - m_new)
+    inject = jnp.exp(ii - m_new)
+    c_new = decay[..., None, None] * state.c + inject[..., None, None] * (
+        kk[..., :, None] * vv[..., None, :])
+    n_new = decay[..., None] * state.n + inject[..., None] * kk
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, qq)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qq)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, n_heads * hv)
+    o = jax.nn.sigmoid((x @ p["w_og"]).astype(f32))
+    h = _group_norm(h, p["gn_scale"], n_heads) * o
+    return (h.astype(btype) @ p["w_out"]), MLSTMState(c_new, n_new, m_new)
+
+
+def init_mlstm_state(batch: int, n_heads: int, qk: int, hv: int) -> MLSTMState:
+    return MLSTMState(c=jnp.zeros((batch, n_heads, qk, hv), f32),
+                      n=jnp.zeros((batch, n_heads, qk), f32),
+                      m=jnp.full((batch, n_heads), 0.0, f32))
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm_params(rng, d_model: int, n_heads: int, hd: int, dtype):
+    ks = jax.random.split(rng, 10)
+    dh = n_heads * hd
+    p = {"gn_scale": jnp.zeros((dh,), f32),
+         "w_out": dense_init(ks[8], dh, d_model, dtype,
+                             scale=1.0 / math.sqrt(2.0))}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = dense_init(ks[i], d_model, dh, dtype)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + i], (n_heads, hd, hd), f32)
+                       / math.sqrt(hd)).astype(dtype)
+        p[f"b_{g}"] = jnp.zeros((dh,), f32)
+    return p
+
+
+def _slstm_cell(p, xw, state: SLSTMState, n_heads: int, hd: int):
+    """xw: dict gate -> (B, H, hd) input contributions (x @ w_g)."""
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", state.h.astype(p[f"r_{g}"].dtype),
+                          p[f"r_{g}"]).astype(f32)
+    b = state.h.shape[0]
+    bias = {g: p[f"b_{g}"].reshape(n_heads, hd) for g in "zifo"}
+    z = jnp.tanh(xw["z"] + rec("z") + bias["z"])
+    i_t = xw["i"] + rec("i") + bias["i"]
+    f_t = xw["f"] + rec("f") + bias["f"]
+    o = jax.nn.sigmoid(xw["o"] + rec("o") + bias["o"])
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + state.m, i_t)
+    decay = jnp.exp(lf + state.m - m_new)
+    inject = jnp.exp(i_t - m_new)
+    c_new = decay * state.c + inject * z
+    n_new = decay * state.n + inject
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, m_new, h_new)
+
+
+def slstm_sequence(p, x, n_heads: int, hd: int, state: SLSTMState | None = None):
+    btype = x.dtype
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(b, n_heads, hd)
+    xw = {g: (x @ p[f"w_{g}"]).astype(f32).reshape(b, s, n_heads, hd)
+          for g in "zifo"}
+    xw_t = jnp.stack([xw[g] for g in "zifo"], axis=0).transpose(2, 0, 1, 3, 4)
+
+    def step(st, xin):
+        gates = {g: xin[i] for i, g in enumerate("zifo")}
+        st2 = _slstm_cell(p, gates, st, n_heads, hd)
+        return st2, st2.h
+
+    st_f, hs = jax.lax.scan(step, state, xw_t)               # hs (S,B,H,hd)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, n_heads * hd)
+    h = _group_norm(h, p["gn_scale"], n_heads)
+    return (h.astype(btype) @ p["w_out"]), st_f
+
+
+def slstm_step(p, x, n_heads: int, hd: int, state: SLSTMState):
+    btype = x.dtype
+    b = x.shape[0]
+    xw = {g: (x[:, 0] @ p[f"w_{g}"]).astype(f32).reshape(b, n_heads, hd)
+          for g in "zifo"}
+    st = _slstm_cell(p, xw, state, n_heads, hd)
+    h = st.h.reshape(b, 1, n_heads * hd)
+    h = _group_norm(h, p["gn_scale"], n_heads)
+    return (h.astype(btype) @ p["w_out"]), st
+
+
+def init_slstm_state(batch: int, n_heads: int, hd: int) -> SLSTMState:
+    z = jnp.zeros((batch, n_heads, hd), f32)
+    return SLSTMState(c=z, n=z, m=z, h=z)

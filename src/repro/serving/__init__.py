@@ -1,0 +1,4 @@
+from .engine import ServeEngine, ServeStats
+from .scheduler import BatchScheduler, Request
+
+__all__ = ["ServeEngine", "ServeStats", "BatchScheduler", "Request"]

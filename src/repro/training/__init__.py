@@ -1,0 +1,7 @@
+from .optimizer import OptimConfig, apply_updates, init_opt_state, schedule
+from .train_loop import TrainConfig, Trainer
+from . import checkpoint, compression, fault_tolerance
+
+__all__ = ["OptimConfig", "apply_updates", "init_opt_state", "schedule",
+           "TrainConfig", "Trainer", "checkpoint", "compression",
+           "fault_tolerance"]

@@ -1,0 +1,96 @@
+"""AdamW + learning-rate schedules (cosine and MiniCPM's WSD), no optax.
+
+Moments are fp32 regardless of param dtype; updates are computed in fp32 and
+cast back.  Global-norm clipping before the update.  ``schedule`` is a pure
+function of the (traced) step so the whole update stays inside one jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"      # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # WSD (warmup-stable-decay, MiniCPM): stable until decay_start, then
+    # exponential-ish decay over the final window.
+    decay_start_frac: float = 0.9
+
+
+def schedule(cfg: OptimConfig, step) -> jax.Array:
+    s = step.astype(f32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        return cfg.lr * warm * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    if cfg.schedule == "wsd":
+        ds = cfg.decay_start_frac
+        decay = jnp.where(t < ds, 1.0,
+                          0.5 ** ((t - ds) / jnp.maximum(1 - ds, 1e-6) * 4))
+        return cfg.lr * warm * decay
+    raise ValueError(cfg.schedule)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, f32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(f32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2  # decay only matrices (norms/bias vectors exempt)
+
+
+def apply_updates(params, grads, opt_state, cfg: OptimConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(f32)
+    c2 = 1.0 - b2 ** step.astype(f32)
+
+    def upd(p, g, m, v):
+        g = g.astype(f32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+        if cfg.weight_decay and _is_matrix(p):
+            u = u + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * u).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,156 @@
+"""The training driver: jit-compiled update step with microbatch gradient
+accumulation, optional int8 error-feedback gradient compression, sharded
+state, async checkpointing, auto-resume, straggler watchdog, and failure
+injection hooks.
+
+Single-device (tests, examples) and production-mesh (launch/train.py) share
+this code — the mesh only changes the shardings passed to jit.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import LM
+from . import checkpoint as ckpt
+from .compression import compressed_grads, init_error_state
+from .fault_tolerance import FailureInjector, StragglerWatchdog
+from .optimizer import OptimConfig, apply_updates, init_opt_state
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    grad_accum: int = 1            # microbatches per step
+    compression: bool = False      # int8 error-feedback grads
+    optim: OptimConfig = OptimConfig()
+
+
+class Trainer:
+    def __init__(self, lm: LM, train_cfg: TrainConfig,
+                 state_shardings=None, batch_sharding=None):
+        self.lm = lm
+        self.cfg = train_cfg
+        self._step_fn = self._build_step(state_shardings, batch_sharding)
+        self.watchdog = StragglerWatchdog()
+        self.injector = FailureInjector()
+        self._ckpt = (ckpt.AsyncCheckpointer(train_cfg.ckpt_dir)
+                      if train_cfg.ckpt_dir and train_cfg.ckpt_async else None)
+
+    # ------------------------------------------------------------------ state
+    def init_state(self, rng) -> dict:
+        params = self.lm.init(rng)
+        state = {"params": params, "opt": init_opt_state(params)}
+        if self.cfg.compression:
+            state["err"] = init_error_state(params)
+        return state
+
+    # ------------------------------------------------------------------- step
+    def _build_step(self, state_shardings, batch_sharding):
+        cfg = self.cfg
+        lm = self.lm
+
+        def loss_fn(params, batch):
+            loss, metrics = lm.loss(params, batch)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def step_fn(state, batch):
+            params = state["params"]
+            a = cfg.grad_accum
+            if a > 1:
+                # microbatch scan: per-microbatch grads accumulate in fp32;
+                # the (implicit) DP all-reduce happens once on the total.
+                def micro(acc, mb):
+                    (l, m), g = grad_fn(params, mb)
+                    acc = jax.tree.map(lambda x, y: x + y.astype(f32), acc, g)
+                    return acc, l
+                batch_m = jax.tree.map(
+                    lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                    batch)
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+                grads, losses = jax.lax.scan(micro, zero, batch_m)
+                grads = jax.tree.map(lambda g: g / a, grads)
+                loss = jnp.mean(losses)
+            else:
+                (loss, _), grads = grad_fn(params, batch)
+
+            new_state = dict(state)
+            if cfg.compression:
+                grads, new_state["err"] = compressed_grads(grads, state["err"])
+            new_params, new_opt, info = apply_updates(
+                params, grads, state["opt"], cfg.optim)
+            new_state["params"] = new_params
+            new_state["opt"] = new_opt
+            metrics = {"loss": loss, **info}
+            return new_state, metrics
+
+        kw: dict[str, Any] = {"donate_argnums": (0,)}
+        if state_shardings is not None:
+            kw["in_shardings"] = (state_shardings, batch_sharding)
+            kw["out_shardings"] = (state_shardings, None)
+        return jax.jit(step_fn, **kw)
+
+    # -------------------------------------------------------------------- run
+    def run(self, state: Optional[dict], batches: Iterator[dict],
+            resume: bool = True,
+            on_step: Optional[Callable[[int, dict], None]] = None) -> dict:
+        """Runs to cfg.steps; auto-resumes from the newest committed
+        checkpoint when ``resume``.  Returns {"state", "history"}."""
+        cfg = self.cfg
+        start = 0
+        if resume and cfg.ckpt_dir:
+            last = ckpt.latest_step(cfg.ckpt_dir)
+            if last is not None:
+                assert state is not None, "need a template state to restore into"
+                state, _ = ckpt.restore(cfg.ckpt_dir, last, state)
+                start = last
+        assert state is not None
+
+        history: list[dict] = []
+        it = iter(batches)
+        # fast-forward the deterministic pipeline to the resume point
+        for _ in range(start):
+            next(it)
+        for step in range(start, cfg.steps):
+            batch = jax.tree.map(jnp.asarray, next(it))
+            self.watchdog.start()
+            state, metrics = self._step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = self.watchdog.stop(step)
+            rec = {"step": step + 1, "loss": loss,
+                   "lr": float(metrics["lr"]),
+                   "grad_norm": float(metrics["grad_norm"]), "dt": dt}
+            history.append(rec)
+            if on_step:
+                on_step(step + 1, rec)
+            if cfg.log_every and (step + 1) % cfg.log_every == 0:
+                print(f"step {step+1:5d} loss {loss:.4f} "
+                      f"lr {rec['lr']:.2e} |g| {rec['grad_norm']:.3f} "
+                      f"{dt*1e3:.0f}ms")
+            if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+                self._save(step + 1, state)
+            self.injector.maybe_fail(step + 1)  # after ckpt: worst-case drill
+        if cfg.ckpt_dir:
+            self._save(cfg.steps, state)
+            if self._ckpt:
+                self._ckpt.wait()
+        return {"state": state, "history": history}
+
+    def _save(self, step: int, state: dict) -> None:
+        if self._ckpt is not None:
+            self._ckpt.submit(step, state)
+        else:
+            ckpt.save(self.cfg.ckpt_dir, step, state)

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(interpret=True executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.borda_count import borda_count
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.moe_gating import moe_gating
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels.topk_scores import topk_scores
+from repro.kernels import ops
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd,win,bq,bk", [
+    (2, 4, 2, 128, 64, 0, 64, 64),
+    (1, 4, 4, 256, 32, 0, 128, 64),
+    (2, 8, 2, 128, 64, 64, 64, 64),
+    (1, 2, 1, 96, 64, 32, 64, 64),
+    (1, 2, 2, 160, 128, 0, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kv, s, hd, win, bq, bk, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=win)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd,fill,bk", [
+    (2, 8, 2, 256, 64, 256, 64),
+    (1, 4, 4, 128, 128, 100, 64),
+    (2, 4, 1, 96, 64, 50, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, s, hd, fill, bk, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    pos = jnp.where(jnp.arange(s) < fill, jnp.arange(s), -1).astype(jnp.int32)
+    out = decode_attention(q, kc, vc, pos, block_k=bk, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("n,k,bn", [(1000, 10, 256), (4096, 16, 1024),
+                                    (77, 5, 64), (128, 1, 32)])
+def test_topk(n, k, bn):
+    sc = jax.random.normal(RNG, (n,), jnp.float32)
+    bv, bi = topk_scores(sc, k, block_n=bn, interpret=True)
+    cand_v, cand_i = bv.reshape(-1), bi.reshape(-1)
+    vals, sel = jax.lax.top_k(cand_v, k)
+    got_i = cand_i[sel]
+    rv, ri = ref.topk_ref(sc, k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-6)
+    assert (np.asarray(got_i) == np.asarray(ri)).all()
+
+
+@pytest.mark.parametrize("r,s,n", [(6, 20, 20), (3, 10, 50), (9, 15, 130),
+                                   (1, 5, 5)])
+def test_borda(r, s, n):
+    ballots = np.stack([np.random.default_rng(i).permutation(n)[:s]
+                        for i in range(r)]).astype(np.int32)
+    if r > 1:
+        ballots[0, -2:] = -1  # truncated ballot
+    out = borda_count(jnp.asarray(ballots), n, block_items=64,
+                      block_ballots=4, interpret=True)
+    want = ref.borda_ref(jnp.asarray(ballots), n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,s,d,n,bd,ch", [(2, 128, 64, 16, 32, 32),
+                                           (1, 64, 128, 8, 128, 16)])
+def test_ssm_scan(b, s, d, n, bd, ch):
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d))) * 0.2
+    bt = jax.random.normal(ks[2], (b, s, n), jnp.float32)
+    ct = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    a = -jnp.abs(jax.random.normal(RNG, (d, n), jnp.float32))
+    y = ssm_scan(x, dt, bt, ct, a, block_d=bd, chunk=ch, interpret=True)
+    want, _ = ref.ssm_scan_ref(x, dt, bt, ct, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,s,dq,dv,ch", [(1, 2, 128, 32, 64, 32),
+                                            (2, 2, 64, 16, 16, 16)])
+def test_mlstm_scan(b, h, s, dq, dv, ch):
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (b, h, s, dq), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, dq), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, dv), jnp.float32)
+    ig = jax.random.normal(ks[3], (b, h, s), jnp.float32)
+    fg = jax.random.normal(ks[4], (b, h, s), jnp.float32) + 2.0
+    y = mlstm_scan(q, k, v, ig, fg, chunk=ch, interpret=True)
+    want = ref.mlstm_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=2e-3)
+
+
+@pytest.mark.parametrize("t,e,k,bt", [(100, 8, 2, 32), (256, 16, 4, 64),
+                                      (40, 4, 1, 16)])
+def test_moe_gating(t, e, k, bt):
+    logits = jax.random.normal(RNG, (t, e), jnp.float32)
+    idx, g, pos = moe_gating(logits, k, block_t=bt, interpret=True)
+    ri, rg, rp, _ = ref.moe_gating_ref(logits, k, capacity=1 << 30)
+    assert (np.asarray(idx) == np.asarray(ri)).all()
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), atol=1e-6)
+    assert (np.asarray(pos) == np.asarray(rp)).all()
+
+
+def test_ops_wrappers_dispatch_interpret_on_cpu():
+    assert not ops.on_tpu()
+    q = jax.random.normal(RNG, (1, 2, 64, 32), jnp.float32)
+    k = jax.random.normal(RNG, (1, 2, 64, 32), jnp.float32)
+    out = ops.flash_attention(q, k, k, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    vals, idx = ops.topk_scores(jax.random.normal(RNG, (300,)), 7)
+    rv, ri = ref.topk_ref(jax.random.normal(RNG, (300,)), 7)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-6)

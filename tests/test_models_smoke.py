@@ -1,0 +1,121 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of each
+family, one forward/train step on CPU asserting output shapes + no NaNs,
+plus prefill/decode consistency against the full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.models import LM, SHAPES
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, rng, b=2, s=16, extra=0):
+    toks = jax.random.randint(rng, (b, s + extra), 0, cfg.vocab_size)
+    if cfg.input_mode == "embeds":
+        emb = jax.random.normal(rng, (b, s + extra, cfg.d_model), jnp.bfloat16)
+        return {"embeds": emb, "tokens": toks}
+    if cfg.input_mode == "encdec":
+        enc = jax.random.normal(rng, (b, 8, cfg.d_model), jnp.bfloat16)
+        return {"tokens": toks, "enc_embeds": enc}
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = lm.init(rng)
+    batch = make_batch(cfg, rng)
+    h, _ = jax.jit(lambda p, b: lm.forward(p, b, mode="train"))(params, batch)
+    b, s = batch["tokens"].shape
+    if cfg.input_mode == "encdec":
+        assert h.shape == (b, s, cfg.d_model)
+    else:
+        assert h.shape[0] == b and h.shape[-1] == cfg.d_model
+    assert not bool(jnp.any(jnp.isnan(h.astype(jnp.float32))))
+
+    loss, metrics = jax.jit(lm.loss)(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    grads = jax.jit(jax.grad(lambda p: lm.loss(p, batch)[0]))(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = lm.init(rng)
+    S = 16
+    full = make_batch(cfg, rng, b=2, s=S, extra=1)
+    if cfg.input_mode == "embeds":
+        pre = {"embeds": full["embeds"][:, :S]}
+        step_in = full["embeds"][:, S:S + 1]
+        ref_batch = {"embeds": full["embeds"]}
+    elif cfg.input_mode == "encdec":
+        pre = {"tokens": full["tokens"][:, :S], "enc_embeds": full["enc_embeds"]}
+        step_in = full["tokens"][:, S:S + 1]
+        ref_batch = full
+    else:
+        pre = {"tokens": full["tokens"][:, :S]}
+        step_in = full["tokens"][:, S:S + 1]
+        ref_batch = full
+    ref = jax.jit(lambda p, b: lm._head(p, lm.forward(p, b, mode="train")[0])
+                  )(params, ref_batch)[:, -1]
+    _, caches = jax.jit(lambda p, b: lm.prefill(p, b, reserve=4))(params, pre)
+    logits, _ = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, jnp.int32(S))
+                        )(params, caches, step_in)
+    err = float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                - logits.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+    assert err / scale < 0.04, f"{arch}: rel err {err/scale}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyper-parameters."""
+    spec = {
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec
+    assert cfg.decoder_layers() == cfg.n_layers
+    if arch == "mixtral-8x22b" or arch == "mixtral-8x7b":
+        assert cfg.moe.n_experts == 8 and cfg.moe.top_k == 2
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16
+    # param sanity: within 40% of the headline size
+    approx = {"minicpm-2b": 2.7e9, "phi4-mini-3.8b": 3.8e9,
+              "stablelm-1.6b": 1.6e9, "llama3-8b": 8e9,
+              "mixtral-8x22b": 141e9, "mixtral-8x7b": 47e9,
+              "seamless-m4t-medium": 1.2e9, "qwen2-vl-7b": 7.6e9,
+              "hymba-1.5b": 1.5e9, "xlstm-1.3b": 1.3e9}[arch]
+    n = cfg.param_count()
+    assert 0.6 * approx < n < 1.5 * approx, f"{arch}: {n:.3g} vs {approx:.3g}"
+
+
+def test_long_context_eligibility():
+    ok = {a for a in ARCHS if get_config(a).long_context_ok}
+    assert ok == {"mixtral-8x22b", "mixtral-8x7b", "hymba-1.5b", "xlstm-1.3b"}
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()

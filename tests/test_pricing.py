@@ -1,0 +1,39 @@
+"""Roofline-derived serving prices feeding the ORDER BY optimizer."""
+import pytest
+
+from repro.core import SimulatedOracle, llm_order_by
+from repro.core.datasets import passages
+from repro.launch.pricing import price_sheet_from_records
+
+
+def fake_records():
+    def rec(arch, shape, bound):
+        return {"arch": arch, "shape": shape, "chips": 256, "multi_pod": False,
+                "roofline": {"step_time_bound_s": bound}}
+    return [rec("llama3-8b", "prefill_32k", 8.28),
+            rec("llama3-8b", "decode_32k", 0.341)]
+
+
+def test_price_sheet_math():
+    ps = price_sheet_from_records(fake_records(), "llama3-8b",
+                                  chip_hour_usd=1.2, utilization=1.0)
+    pod_usd_s = 256 * 1.2 / 3600
+    pre_tok_s = 32 * 32768 / 8.28
+    assert ps.input_per_mtok == pytest.approx(pod_usd_s / pre_tok_s * 1e6)
+    assert ps.output_per_mtok > ps.input_per_mtok  # decode >> prefill $/tok
+    assert "self-hosted" in ps.name
+
+
+def test_optimizer_runs_on_selfhosted_prices():
+    ps = price_sheet_from_records(fake_records(), "llama3-8b")
+    task = passages(n=40, seed=50)
+    oracle = SimulatedOracle(task.profile, prices=ps)
+    res, rep = llm_order_by(task.keys, task.criteria, oracle, path="auto",
+                            descending=True, limit=10)
+    assert rep.total_cost == pytest.approx(oracle.spend(), rel=1e-6)
+    assert res.cost > 0
+
+
+def test_missing_arch_raises():
+    with pytest.raises(KeyError):
+        price_sheet_from_records(fake_records(), "qwen2-vl-7b")

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ExactOracle, PathParams, as_keys, make_path
+from repro.core.optimizer.borda import borda_consensus, borda_matrix, borda_scores
+from repro.core.metrics import kendall_tau, kendall_tau_between, ndcg_at_k
+from repro.core.types import SortSpec
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+latents = st.lists(
+    st.floats(min_value=-100, max_value=100, allow_nan=False, width=32),
+    min_size=1, max_size=48, unique=True)
+paths = st.sampled_from(["pointwise", "ext_pointwise", "quick", "ext_bubble",
+                         "ext_merge"])
+
+
+@given(latents=latents, path=paths, desc=st.booleans(),
+       m=st.integers(2, 8), v=st.integers(1, 3),
+       limit=st.one_of(st.none(), st.integers(1, 10)))
+@settings(**SETTINGS)
+def test_exact_oracle_invariants(latents, path, desc, m, v, limit):
+    """With a perfect comparator every path returns exactly the sorted
+    prefix: correct order, correct length, a subset-permutation of input."""
+    keys = as_keys([f"k{i}" for i in range(len(latents))], latents)
+    res = make_path(path, PathParams(batch_size=m, votes=v)).execute(
+        keys, ExactOracle(), SortSpec("c", descending=desc, limit=limit))
+    want = sorted(latents, reverse=desc)
+    k = len(latents) if limit is None else min(limit, len(latents))
+    got = [kk.latent for kk in res.order]
+    assert got == want[:k]
+    assert len(set(res.uids())) == len(res.order)
+
+
+@given(latents=latents, desc=st.booleans())
+@settings(**SETTINGS)
+def test_kendall_tau_bounds_and_perfection(latents, desc):
+    keys = as_keys([str(i) for i in range(len(latents))], latents)
+    ordered = sorted(keys, key=lambda k: k.latent, reverse=desc)
+    assert kendall_tau(ordered, descending=desc) == 1.0
+    assert -1.0 <= kendall_tau(keys, descending=desc) <= 1.0
+    if len(keys) > 1:
+        assert kendall_tau(list(reversed(ordered)), descending=desc) == -1.0
+
+
+@given(st.lists(st.permutations(list(range(12))), min_size=1, max_size=7),
+       st.permutations(list(range(7))))
+@settings(**SETTINGS)
+def test_borda_ballot_order_invariance(ballots, shuffle_order):
+    """Borda consensus is invariant to the order ballots arrive in."""
+    universe = list(range(12))
+    shuffled = [ballots[i % len(ballots)] for i in shuffle_order]
+    assert (borda_consensus(ballots, universe)
+            == borda_consensus(ballots[::-1], universe))
+    s1 = borda_scores(ballots, universe)
+    s2 = borda_scores(ballots[::-1], universe)
+    assert s1 == s2
+
+
+@given(st.integers(2, 10), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_borda_unanimous_winner_tops(n_items, n_ballots):
+    """If every ballot ranks item 0 first, consensus puts it first."""
+    base = list(range(n_items))
+    ballots = []
+    for b in range(n_ballots):
+        rest = base[1:]
+        rng = np.random.default_rng(b)
+        rng.shuffle(rest)
+        ballots.append([0] + rest)
+    assert borda_consensus(ballots, base)[0] == 0
+
+
+@given(st.lists(st.permutations(list(range(10))), min_size=1, max_size=5))
+@settings(**SETTINGS)
+def test_borda_matrix_matches_dict_scores(ballots):
+    universe = list(range(10))
+    scores = borda_scores(ballots, universe)
+    mat = borda_matrix(np.asarray(ballots, np.int32), 10)
+    for u in universe:
+        assert scores[u] == mat[u]
+
+
+@given(latents=latents)
+@settings(**SETTINGS)
+def test_ndcg_perfect_is_one(latents):
+    keys = as_keys([str(i) for i in range(len(latents))], latents)
+    rel = {k.uid: max(0.0, k.latent) for k in keys}
+    best = sorted(keys, key=lambda k: rel[k.uid], reverse=True)
+    if sum(rel.values()) > 0:
+        assert ndcg_at_k(best, rel, k=10) == 1.0 or abs(
+            ndcg_at_k(best, rel, k=10) - 1.0) < 1e-9
+
+
+@given(st.permutations(list(range(15))))
+@settings(**SETTINGS)
+def test_kendall_between_self_and_reverse(perm):
+    assert kendall_tau_between(perm, perm) == 1.0
+    assert kendall_tau_between(perm, perm[::-1]) == -1.0

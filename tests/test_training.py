@@ -1,0 +1,127 @@
+"""Training substrate: convergence, schedules, grad accumulation,
+compression, checkpoint round-trips."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import DataConfig, DataPipeline
+from repro.models import LM
+from repro.training import (OptimConfig, TrainConfig, Trainer, checkpoint,
+                            init_opt_state, schedule)
+from repro.training.compression import (compressed_grads, init_error_state)
+
+
+def small_setup(arch="stablelm-1.6b", steps=20, **tc_kw):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    tc = TrainConfig(steps=steps, log_every=0,
+                     optim=OptimConfig(lr=5e-3, warmup_steps=3,
+                                       total_steps=steps), **tc_kw)
+    pipe = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                   global_batch=8))
+    return lm, tc, pipe
+
+
+def test_loss_decreases():
+    lm, tc, pipe = small_setup(steps=25)
+    tr = Trainer(lm, tc)
+    out = tr.run(tr.init_state(jax.random.PRNGKey(0)), iter(pipe), resume=False)
+    h = out["history"]
+    assert h[-1]["loss"] < h[0]["loss"] * 0.95
+
+
+def test_wsd_schedule_shape():
+    cfg = OptimConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                      total_steps=100, decay_start_frac=0.8)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < 0.2                      # warmup from ~0
+    assert lrs[10] == pytest.approx(1.0)     # warm
+    assert lrs[50] == pytest.approx(1.0)     # stable plateau
+    assert lrs[100] < 0.1                    # decayed
+    cos = OptimConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                      total_steps=100)
+    assert float(schedule(cos, jnp.asarray(55))) < 1.0
+
+
+def test_grad_accum_matches_single_batch():
+    """accum=2 over a batch == one step over the same batch (same grads)."""
+    lm, _, pipe = small_setup()
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    state = {"params": lm.init(jax.random.PRNGKey(0))}
+    state["opt"] = init_opt_state(state["params"])
+
+    tc1 = TrainConfig(steps=1, grad_accum=1, log_every=0,
+                      optim=OptimConfig(lr=1e-3, warmup_steps=0, total_steps=1,
+                                        schedule="const"))
+    tc2 = TrainConfig(steps=1, grad_accum=2, log_every=0, optim=tc1.optim)
+    s1, _ = Trainer(lm, tc1)._step_fn(jax.tree.map(jnp.copy, state), batch)
+    s2, _ = Trainer(lm, tc2)._step_fn(jax.tree.map(jnp.copy, state), batch)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_compression_error_feedback():
+    lm, _, pipe = small_setup()
+    params = lm.init(jax.random.PRNGKey(0))
+    grads = jax.grad(lambda p: lm.loss(p, jax.tree.map(jnp.asarray,
+                                                       pipe.batch(0)))[0])(params)
+    err = init_error_state(params)
+    deq, err2 = compressed_grads(grads, err)
+    # dequantized grads approximate the originals
+    for g, d in zip(jax.tree.leaves(grads), jax.tree.leaves(deq)):
+        g = np.asarray(g, np.float32)
+        scale = np.abs(g).max() + 1e-12
+        np.testing.assert_allclose(np.asarray(d), g, atol=scale / 100)
+    # error feedback: residual bounded by one quantization step
+    for g, e in zip(jax.tree.leaves(grads), jax.tree.leaves(err2)):
+        step = (np.abs(np.asarray(g, np.float32)).max() + 1e-12) / 127.0
+        assert np.abs(np.asarray(e)).max() <= step * 1.01
+
+
+def test_compressed_training_still_converges():
+    lm, tc, pipe = small_setup(steps=25, compression=True)
+    tr = Trainer(lm, tc)
+    out = tr.run(tr.init_state(jax.random.PRNGKey(0)), iter(pipe), resume=False)
+    h = out["history"]
+    assert h[-1]["loss"] < h[0]["loss"] * 0.95
+
+
+def test_checkpoint_roundtrip_bitwise():
+    lm, _, _ = small_setup()
+    params = lm.init(jax.random.PRNGKey(7))
+    state = {"params": params, "opt": init_opt_state(params)}
+    with tempfile.TemporaryDirectory() as td:
+        checkpoint.save(td, 12, state, extra={"note": "x"})
+        assert checkpoint.latest_step(td) == 12
+        restored, manifest = checkpoint.restore(td, 12, state)
+        assert manifest["step"] == 12 and manifest["extra"]["note"] == "x"
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_uncommitted_checkpoint_ignored():
+    lm, _, _ = small_setup()
+    params = {"w": jnp.ones((4,))}
+    with tempfile.TemporaryDirectory() as td:
+        checkpoint.save(td, 5, params)
+        # fake a torn write: step dir without COMMITTED marker
+        os.makedirs(os.path.join(td, "step_9"))
+        assert checkpoint.latest_step(td) == 5
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as td:
+        ac = checkpoint.AsyncCheckpointer(td, keep=2)
+        for s in (1, 2, 3):
+            ac.submit(s, {"x": jnp.full((8,), s)})
+        ac.wait()
+        assert checkpoint.latest_step(td) == 3
+        kept = checkpoint.latest_step_all(td)
+        assert len(kept) <= 2  # gc keeps the newest two
