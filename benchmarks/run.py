@@ -9,7 +9,8 @@ import sys
 import time
 
 from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
-               roofline, table1_calls, table2_cost_est, table3_samples)
+               roofline, table1_calls, table2_cost_est, table3_samples,
+               table4_submissions)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -20,6 +21,7 @@ SUITES = {
     "table3": table3_samples.main,     # sample-size sensitivity
     "fig5": fig5_budget.main,          # budget-constrained selection
     "roofline": roofline.main,         # dry-run roofline table
+    "table4": table4_submissions.main, # round batching: serving submissions
 }
 
 

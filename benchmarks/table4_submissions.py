@@ -1,0 +1,72 @@
+"""Table 4 (repo-specific): serving submissions saved by round batching.
+
+Runs each access path on the REAL ModelOracle backend twice — once with the
+seed's sequential point-call structure (``PathParams.coalesce=False``) and
+once with round-based batched execution — and reports serving submissions
+(``engine.stats.calls``), logical LLM calls (ledger), and wall-clock.  Output
+order and ledger accounting are identical in both modes (uniform-length keys
+keep padding identical); only the number of padded prefill submissions — and
+therefore wall-clock — changes.
+
+    PYTHONPATH=src python -m benchmarks.table4_submissions [N ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import PathParams, as_keys, make_path
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.core.types import SortSpec
+
+PATHS = ("quick", "ext_merge", "ext_bubble", "pointwise", "ext_pointwise")
+
+
+def _engine(max_new: int = 8):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return ServeEngine(lm, params, max_new_tokens=max_new)
+
+
+def main() -> None:
+    sizes = [int(a) for a in sys.argv[1:] if a.isdigit()] or [64]
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    print("path,n,mode,submissions,logical_calls,seconds,order_identical")
+    for n in sizes:
+        keys = as_keys([f"doc {i:04d}" for i in range(n)],
+                       list(rng.standard_normal(n)))
+        spec = SortSpec("relevance", True, None)
+        for path in PATHS:
+            out = {}
+            for coalesce in (False, True):
+                # warm the jit cache so wall-clock measures steady-state
+                # serving, not XLA compiles of first-seen shapes
+                make_path(path, PathParams(batch_size=4, coalesce=coalesce)
+                          ).execute(keys[: min(n, 16)], ModelOracle(eng),
+                                    spec)
+                oracle = ModelOracle(eng)
+                c0 = eng.stats.calls
+                t0 = time.perf_counter()
+                res = make_path(path, PathParams(batch_size=4,
+                                                 coalesce=coalesce)
+                                ).execute(keys, oracle, spec)
+                out[coalesce] = (eng.stats.calls - c0, oracle.ledger.n_calls,
+                                 time.perf_counter() - t0, res.uids())
+            same = out[False][3] == out[True][3]
+            for coalesce in (False, True):
+                subs, calls, secs, _ = out[coalesce]
+                mode = "rounds" if coalesce else "sequential"
+                print(f"{path},{n},{mode},{subs},{calls},{secs:.3f},{same}")
+            assert out[True][0] <= out[False][0], (path, n)
+
+
+if __name__ == "__main__":
+    main()

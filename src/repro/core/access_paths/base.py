@@ -9,6 +9,12 @@ verbs so the algorithms themselves are direction-free:
  * ``before(a, b)``      — True iff ``a`` must precede ``b`` in the output,
  * ``window(keys)``      — listwise window ranking in output order.
 
+Round verbs: algorithms emit *rounds of independent calls* wherever their
+structure allows (``before_many``, ``scores_each``, ``scores_many``,
+``windows``); the oracle executes a round as one backend submission where it
+can (ModelOracle: one padded prefill) and as a sequential loop otherwise,
+with identical results and ledger records either way.  See DESIGN.md.
+
 Cost models: Table 1 of the paper, used both for optimizer cost extrapolation
 (Sec. 5.1) and for the Table-1 benchmark that checks our empirical call counts
 against the asymptotics.
@@ -27,7 +33,10 @@ from ..oracles.base import Oracle
 class Ordering:
     """Direction-folding adapter over an Oracle, with retry/split fallback for
     structurally invalid listwise outputs (production behavior: one salted
-    retry, then binary split)."""
+    retry, then binary split).  Point verbs (``before``/``scores``/``window``)
+    have round counterparts (``before_many``/``scores_each``/``scores_many``/
+    ``windows``) that submit a whole set of independent calls at once,
+    preserving the fallback per sub-batch."""
 
     def __init__(self, oracle: Oracle, spec: SortSpec):
         self.oracle = oracle
@@ -46,15 +55,88 @@ class Ordering:
         except InvalidOutputError:
             if len(keys) == 1:
                 raise
+            return self._score_split(keys)
+
+    def _score_split(self, keys: list[Key]) -> list[float]:
+        """Binary-split re-derivation after a (billed) structural failure;
+        only valid for len(keys) >= 2."""
+        mid = len(keys) // 2
+        return (self._score_with_fallback(keys[:mid])
+                + self._score_with_fallback(keys[mid:]))
+
+    def scores_each(self, keys: Sequence[Key]) -> list[float]:
+        """One round of independent single-key scores (pointwise billing),
+        executed as one backend submission where the oracle supports it.
+        A single-key structural failure is unrecoverable (nothing to split),
+        so it propagates as InvalidOutputError — matching the sequential
+        pointwise loop — except that the whole round has already been
+        attempted and billed by then, not just the keys before the failure."""
+        keys = list(keys)
+        if not keys:
+            return []
+        try:
+            raw = self.oracle.try_score_each(keys, self.spec.criteria)
+        except InvalidOutputError:  # wholesale backend failure: split round
+            if len(keys) == 1:
+                return self.scores(keys)  # point-call path (may re-raise)
             mid = len(keys) // 2
-            return (self._score_with_fallback(keys[:mid])
-                    + self._score_with_fallback(keys[mid:]))
+            return self.scores_each(keys[:mid]) + self.scores_each(keys[mid:])
+        out = []
+        for k, v in zip(keys, raw):
+            if v is None:  # billed failure; nothing to split at size 1
+                raise InvalidOutputError(
+                    f"single-key score failed for uid={k.uid}")
+            out.append(self.sign * v)
+        return out
+
+    def scores_many(self, chunks: Sequence[Sequence[Key]]) -> list[list[float]]:
+        """One round of independent m-key scoring calls (external pointwise),
+        one backend submission where supported.  Per-chunk failure isolation:
+        only a structurally failing chunk takes the (already billed) binary
+        split path, exactly as it would when executed sequentially."""
+        chunks = [list(c) for c in chunks]
+        if not chunks:
+            return []
+        try:
+            raw = self.oracle.try_score_batches(chunks, self.spec.criteria)
+        except InvalidOutputError:  # wholesale backend failure: split round
+            if len(chunks) == 1:
+                return [self.scores(chunks[0])]
+            mid = len(chunks) // 2
+            return self.scores_many(chunks[:mid]) + self.scores_many(chunks[mid:])
+        out: list[list[float]] = []
+        for c, vals in zip(chunks, raw):
+            if vals is None:  # billed failure: split (or give up at size 1)
+                if len(c) == 1:
+                    raise InvalidOutputError(
+                        f"single-key score failed for uid={c[0].uid}")
+                vals = self._score_split(c)
+            out.append([self.sign * s for s in vals])
+        return out
 
     # -- pairwise --------------------------------------------------------------
     def before(self, a: Key, b: Key) -> bool:
         """True iff a precedes b in the output order."""
         cmp = self.oracle.compare(a, b, self.spec.criteria)  # +1: a larger
         return (cmp > 0) if self.spec.descending else (cmp < 0)
+
+    def before_many(self, pairs: Sequence[tuple[Key, Key]]) -> list[bool]:
+        """One round of independent comparisons — ``[a precedes b in output]``
+        per pair — executed as one backend submission where the oracle
+        supports it, with binary-split retry per sub-batch on failure."""
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        try:
+            cmps = self.oracle.compare_batch(pairs, self.spec.criteria)
+        except InvalidOutputError:
+            if len(pairs) == 1:
+                return [self.before(*pairs[0])]
+            mid = len(pairs) // 2
+            return self.before_many(pairs[:mid]) + self.before_many(pairs[mid:])
+        if self.spec.descending:
+            return [c > 0 for c in cmps]
+        return [c < 0 for c in cmps]
 
     # -- listwise ----------------------------------------------------------------
     def window(self, keys: Sequence[Key]) -> list[Key]:
@@ -65,41 +147,55 @@ class Ordering:
 
     def windows(self, batches: Sequence[Sequence[Key]]) -> list[list[Key]]:
         """Batched windows (parallel run generation): one backend submission
-        where the oracle supports it, with per-window fallback on failure."""
+        where the oracle supports it.  Per-window failure isolation
+        (``try_rank_batches``): a structurally failing window takes its own
+        (already billed) split path; its round-mates are not re-billed."""
+        batches = [list(b) for b in batches]
+        if not batches:
+            return []
         try:
-            ranked = self.oracle.rank_batches([list(b) for b in batches],
-                                              self.spec.criteria)
-        except InvalidOutputError:
-            return [self.window(b) for b in batches]
-        if self.spec.descending:
-            ranked = [list(reversed(r)) for r in ranked]
-        return ranked
+            ranked = self.oracle.try_rank_batches(batches, self.spec.criteria)
+        except InvalidOutputError:  # wholesale backend failure: split round
+            if len(batches) == 1:
+                return [self.window(batches[0])]
+            mid = len(batches) // 2
+            return self.windows(batches[:mid]) + self.windows(batches[mid:])
+        out: list[list[Key]] = []
+        for b, r in zip(batches, ranked):
+            if r is None:
+                r = self._rank_split(b)
+            out.append(list(reversed(r)) if self.spec.descending else list(r))
+        return out
 
     def _rank_with_fallback(self, keys: list[Key]) -> list[Key]:
         try:
             return self.oracle.rank_batch(keys, self.spec.criteria)
         except InvalidOutputError:
-            if len(keys) <= 2:
-                # degrade to a pairwise comparison
-                if len(keys) < 2:
-                    return keys
-                a, b = keys
-                return [a, b] if self.oracle.compare(a, b, self.spec.criteria) < 0 else [b, a]
-            mid = len(keys) // 2
-            lo = self._rank_with_fallback(keys[:mid])
-            hi = self._rank_with_fallback(keys[mid:])
-            # cheap interleave by a final attempt on the halves' concatenation:
-            # merge by latent-free round-robin is meaningless, so re-rank halves
-            # pairwise-merged via compare of run heads (bounded extra calls).
-            out: list[Key] = []
-            i = j = 0
-            while i < len(lo) and j < len(hi):
-                if self.oracle.compare(lo[i], hi[j], self.spec.criteria) < 0:
-                    out.append(lo[i]); i += 1
-                else:
-                    out.append(hi[j]); j += 1
-            out.extend(lo[i:]); out.extend(hi[j:])
-            return out
+            return self._rank_split(keys)
+
+    def _rank_split(self, keys: list[Key]) -> list[Key]:
+        """Split re-ranking after a (billed) structural failure."""
+        if len(keys) <= 2:
+            # degrade to a pairwise comparison
+            if len(keys) < 2:
+                return keys
+            a, b = keys
+            return [a, b] if self.oracle.compare(a, b, self.spec.criteria) < 0 else [b, a]
+        mid = len(keys) // 2
+        lo = self._rank_with_fallback(keys[:mid])
+        hi = self._rank_with_fallback(keys[mid:])
+        # cheap interleave by a final attempt on the halves' concatenation:
+        # merge by latent-free round-robin is meaningless, so re-rank halves
+        # pairwise-merged via compare of run heads (bounded extra calls).
+        out: list[Key] = []
+        i = j = 0
+        while i < len(lo) and j < len(hi):
+            if self.oracle.compare(lo[i], hi[j], self.spec.criteria) < 0:
+                out.append(lo[i]); i += 1
+            else:
+                out.append(hi[j]); j += 1
+        out.extend(lo[i:]); out.extend(hi[j:])
+        return out
 
 
 @dataclass(frozen=True)
@@ -109,6 +205,12 @@ class PathParams:
     max_batch: int = 32      # M cap in Alg. 1
     agreement: float = 0.9   # θ in Alg. 1
     agreement_atol: float = 0.35  # |Δscore| tolerance counted as agreement
+    # Round batching: emit each level's independent oracle calls as one
+    # backend submission (ModelOracle -> one padded prefill).  False restores
+    # the seed's sequential point-call structure — same outputs under any
+    # deterministic-per-prompt oracle, more serving submissions; kept as a
+    # diagnostic baseline for benchmarks/table4_submissions.py.
+    coalesce: bool = True
 
 
 class AccessPath(abc.ABC):

@@ -21,6 +21,55 @@ from ..types import Key, SortSpec
 from .base import AccessPath, Ordering, PathParams, _log2, register
 
 
+class _MergeCursor:
+    """State of one in-flight two-way merge (Alg. 5): run pointers, emitted
+    output, and the current window buffer awaiting an LLM ranking.  Encodes
+    exactly the emission/consistency-repair logic of the sequential
+    ``_merge`` so lockstep execution is call-for-call identical."""
+
+    def __init__(self, l1: list[Key], l2: list[Key], h: int):
+        self.l1, self.l2, self.h = l1, l2, h
+        self.i = self.j = 0
+        self.out: list[Key] = []
+        self.done = False
+        self._fast_forward()
+
+    def _fast_forward(self) -> None:
+        """Emit the tail without an oracle call once one run is exhausted."""
+        if self.done:
+            return
+        if self.i >= len(self.l1):
+            self.out.extend(self.l2[self.j:]); self.done = True
+        elif self.j >= len(self.l2):
+            self.out.extend(self.l1[self.i:]); self.done = True
+
+    def buffer(self) -> list[Key]:
+        """The next window to rank (only valid while not done)."""
+        t1 = min(self.h, len(self.l1) - self.i)
+        t2 = min(self.h, len(self.l2) - self.j)
+        return self.l1[self.i:self.i + t1] + self.l2[self.j:self.j + t2]
+
+    def consume(self, ranked: list[Key]) -> None:
+        """Apply one ranked buffer: emit (projected onto the runs) until one
+        side's buffered portion is exhausted, then advance the pointers."""
+        t1 = min(self.h, len(self.l1) - self.i)
+        t2 = min(self.h, len(self.l2) - self.j)
+        in_l1 = {k.uid for k in self.l1[self.i:self.i + t1]}
+        e1 = e2 = 0
+        for x in ranked:
+            if x.uid in in_l1:
+                self.out.append(self.l1[self.i + e1])  # next unconsumed, run 1
+                e1 += 1
+            else:
+                self.out.append(self.l2[self.j + e2])  # next unconsumed, run 2
+                e2 += 1
+            if e1 == t1 or e2 == t2:
+                break  # one side exhausted within this window -> refill
+        self.i += e1
+        self.j += e2
+        self._fast_forward()
+
+
 @register("ext_merge")
 class ExternalMergeSort(AccessPath):
     def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
@@ -34,17 +83,43 @@ class ExternalMergeSort(AccessPath):
         chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
         runs: list[list[Key]] = ordering.windows(chunks)
 
-        # Phase 2: iterative two-way merging.
+        # Phase 2: iterative two-way merging.  With ``coalesce`` every merge
+        # of a round advances in lockstep: each iteration gathers the current
+        # window buffer of every unfinished merge and submits them as ONE
+        # batched windows call, so a round costs max-refills submissions
+        # instead of sum-of-refills.
         while len(runs) > 1:
             nxt: list[list[Key]] = []
-            for i in range(0, len(runs), 2):
-                if i + 1 < len(runs):
-                    merged = self._merge(runs[i], runs[i + 1], m, ordering)
-                    if cap is not None:
+            if self.params.coalesce:
+                h = max(m // 2, 1)
+                slots: list = []  # per output slot: cursor | carried run
+                for i in range(0, len(runs), 2):
+                    if i + 1 < len(runs):
+                        slots.append(_MergeCursor(runs[i], runs[i + 1], h))
+                    else:
+                        slots.append(runs[i])  # odd run carried forward
+                while True:
+                    active = [c for c in slots
+                              if isinstance(c, _MergeCursor) and not c.done]
+                    if not active:
+                        break
+                    ranked = ordering.windows([c.buffer() for c in active])
+                    for c, r in zip(active, ranked):
+                        c.consume(r)
+                for s in slots:
+                    merged = s.out if isinstance(s, _MergeCursor) else s
+                    if cap is not None and isinstance(s, _MergeCursor):
                         merged = merged[:cap]
                     nxt.append(merged)
-                else:
-                    nxt.append(runs[i])  # odd run carried forward
+            else:
+                for i in range(0, len(runs), 2):
+                    if i + 1 < len(runs):
+                        merged = self._merge(runs[i], runs[i + 1], m, ordering)
+                        if cap is not None:
+                            merged = merged[:cap]
+                        nxt.append(merged)
+                    else:
+                        nxt.append(runs[i])  # odd run carried forward
             runs = nxt
         return runs[0] if runs else []
 

@@ -25,6 +25,9 @@ def _stable_sort_by(keys: Sequence[Key], values: Sequence[float]) -> list[Key]:
 @register("pointwise")
 class Pointwise(AccessPath):
     def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+        if self.params.coalesce:
+            # all N single-key calls are independent: one round
+            return _stable_sort_by(keys, ordering.scores_each(keys))
         vals: list[float] = []
         for k in keys:
             vals.extend(ordering.scores([k]))
@@ -72,9 +75,12 @@ class ExternalPointwise(AccessPath):
         m = self.choose_batch_size(keys, ordering) if self.params.batch_size == 0 \
             else self.params.batch_size
         self._chosen_m = m
-        vals: list[float] = []
-        for i in range(0, len(keys), m):
-            vals.extend(ordering.scores(keys[i:i + m]))
+        chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
+        if self.params.coalesce:
+            # all N/m m-key calls are independent: one round
+            vals = [v for vs in ordering.scores_many(chunks) for v in vs]
+        else:
+            vals = [v for c in chunks for v in ordering.scores(c)]
         return _stable_sort_by(keys, vals)
 
     def describe_params(self) -> dict:

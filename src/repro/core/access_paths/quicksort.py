@@ -14,6 +14,7 @@ partitions are recursed into, giving O(v(N + K log K)) calls.
 """
 from __future__ import annotations
 
+import hashlib
 import math
 from typing import Optional, Sequence
 
@@ -26,7 +27,11 @@ from .base import AccessPath, Ordering, PathParams, _log2, register
 def _det_sample(pool: list[Key], k: int, seed_parts) -> list[Key]:
     if k <= 0 or not pool:
         return []
-    rng = np.random.default_rng(abs(hash(seed_parts)) % (2**63))
+    # stable digest, NOT builtin hash(): str hashing is randomized per
+    # process (PYTHONHASHSEED), which made peer sampling — and therefore
+    # quick-sort outputs — vary run to run
+    h = hashlib.blake2b(repr(seed_parts).encode(), digest_size=8)
+    rng = np.random.default_rng(int.from_bytes(h.digest(), "little"))
     idx = rng.choice(len(pool), size=min(k, len(pool)), replace=False)
     return [pool[i] for i in idx]
 
@@ -57,9 +62,19 @@ class QuickSort(AccessPath):
         return out
 
     # ---- Algorithm 3 partition ---------------------------------------------
+    # Round structure: every comparison in the partition is independent once
+    # its inputs are known, so the whole partition is at most TWO rounds —
+    # round 1: all |rest| pivot comparisons; round 2: all peer votes (peers
+    # are sampled from the round-1 split).  With ``coalesce`` each round is
+    # one backend submission; otherwise the seed's sequential point calls.
     def _partition(self, pivot: Key, rest: list[Key], ordering: Ordering):
         v = self.params.votes
-        initial = {x.uid: ordering.before(x, pivot) for x in rest}
+        coalesce = self.params.coalesce
+        if coalesce:  # round 1: all pivot comparisons in one submission
+            flags = ordering.before_many([(x, pivot) for x in rest])
+            initial = {x.uid: f for x, f in zip(rest, flags)}
+        else:
+            initial = {x.uid: ordering.before(x, pivot) for x in rest}
         if v <= 1:
             front = [x for x in rest if initial[x.uid]]
             back = [x for x in rest if not initial[x.uid]]
@@ -67,6 +82,24 @@ class QuickSort(AccessPath):
 
         init_front = [x for x in rest if initial[x.uid]]
         init_back = [x for x in rest if not initial[x.uid]]
+
+        # round 2: every item's peer votes (sampled from the opposite
+        # round-1 partition) — all independent, one submission.
+        peers_of: dict[int, list[Key]] = {}
+        for x in rest:
+            pool = init_back if initial[x.uid] else init_front
+            peers_of[x.uid] = _det_sample(
+                [y for y in pool if y.uid != x.uid], v - 1,
+                ("qs-peers", x.uid, pivot.uid))
+        if coalesce:
+            flat = [(x, y) for x in rest for y in peers_of[x.uid]]
+            flat_res = iter(ordering.before_many(flat))
+            results_of = {x.uid: [next(flat_res) for _ in peers_of[x.uid]]
+                          for x in rest}
+        else:
+            results_of = {x.uid: [ordering.before(x, y) for y in peers_of[x.uid]]
+                          for x in rest}
+
         front: list[Key] = []
         back: list[Key] = []
         placed: dict[int, bool] = {}  # uid -> placed-in-front?
@@ -74,10 +107,8 @@ class QuickSort(AccessPath):
 
         for x in rest:
             r_init = initial[x.uid]
-            pool = init_back if r_init else init_front
-            peers = _det_sample([y for y in pool if y.uid != x.uid], v - 1,
-                                ("qs-peers", x.uid, pivot.uid))
-            peer_results = [ordering.before(x, y) for y in peers]
+            peers = peers_of[x.uid]
+            peer_results = results_of[x.uid]
             allres = [r_init] + peer_results
             if all(allres):
                 front.append(x); placed[x.uid] = True

@@ -16,7 +16,9 @@ from ..oracles.base import Oracle
 def membership_rate(sample: Sequence[Key], oracle: Oracle, criteria: str) -> float:
     if not sample:
         return 0.0
-    hits = sum(1 for k in sample if oracle.inquire(k, criteria))
+    # one round: all inquiries are independent, so the ModelOracle executes
+    # them as a single padded serving submission (billed per key)
+    hits = sum(oracle.inquire_batch(list(sample), criteria))
     return hits / len(sample)
 
 

@@ -2,16 +2,20 @@
 
 Pipeline (choose_and_execute):
   1. draw a deterministic sample of ``sample_size`` keys;
-  2. **world-knowledge gate** — Inquiry Prompt on the sample; 100% membership
-     => execute pointwise directly (Sec. 5.2);
+  2. **world-knowledge gate** — Inquiry Prompt on the sample, issued as ONE
+     round (``Oracle.inquire_batch``: a single serving submission on the
+     ModelOracle backend, billed per key); 100% membership => execute
+     pointwise directly (Sec. 5.2);
   3. run every candidate on the sample, recording actual sampled cost and the
      sample ranking each produces (failed/structurally-invalid candidates are
      dropped);
   4. **cost extrapolation** — scale sampled cost by the Table-1 complexity
      ratio; filter candidates whose estimated full-run cost violates the
      user budget (Sec. 5.1/5.3, Fig. 5);
-  5. **selection** — 'judge' (optimistic, Sec. 5.4), 'borda' (pessimistic,
-     Sec. 5.5), or 'oracle' (ground-truth upper-bound used in Table 3);
+  5. **selection** — 'judge' (optimistic, Sec. 5.4; the judge's candidate
+     probes ride one batched submission on the ModelOracle), 'borda'
+     (pessimistic, Sec. 5.5), or 'oracle' (ground-truth upper-bound used in
+     Table 3);
   6. execute the winner once over the full dataset.
 """
 from __future__ import annotations

@@ -19,7 +19,7 @@ import abc
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
-from ..types import Key
+from ..types import InvalidOutputError, Key
 
 
 @dataclass(frozen=True)
@@ -148,12 +148,84 @@ class Oracle(abc.ABC):
               candidates: Sequence[Sequence[Key]]) -> int:
         """LLM-as-Judge (Prompt Block 5): index of the best candidate ranking."""
 
+    # ---- round (batch) verbs --------------------------------------------
+    # Access paths are written against *rounds of independent calls*: at each
+    # step they hand the oracle every call whose inputs are already known and
+    # that no other call in the set depends on.  The defaults below execute
+    # a round as a sequential loop over the point verbs, so results and
+    # ledger records are identical call-for-call; ModelOracle overrides them
+    # to execute one round as ONE padded serving submission (shared-prefix
+    # prefill amortization — the batching economics of Sec. 4) while still
+    # billing N logical calls, matching the ``rank_batches`` convention.
+
     def rank_batches(self, batches: Sequence[Sequence[Key]],
                      criteria: str) -> list[list[Key]]:
         """Batched listwise ranking — the paper's parallel run generation
         (Alg. 4 Phase 1).  Default: sequential loop; the ModelOracle
         overrides this with ONE padded serving batch for all windows."""
         return [self.rank_batch(list(b), criteria) for b in batches]
+
+    def compare_batch(self, pairs: Sequence[tuple[Key, Key]],
+                      criteria: str) -> list[int]:
+        """One round of independent pairwise comparisons: ``+1``/``-1`` per
+        pair, aligned with ``pairs`` (same semantics as :meth:`compare`)."""
+        return [self.compare(a, b, criteria) for a, b in pairs]
+
+    def inquire_batch(self, keys: Sequence[Key], criteria: str) -> list[bool]:
+        """One round of independent membership inquiries (Prompt Block 4)."""
+        return [self.inquire(k, criteria) for k in keys]
+
+    def score_each(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        """One round of independent POINTWISE scores: each key is a logical
+        single-key ``score_batch`` call (pointwise noise regime, pointwise
+        billing) — unlike ``score_batch(keys)``, which is one m-key call."""
+        return [self.score_batch([k], criteria)[0] for k in keys]
+
+    def score_batches(self, batches: Sequence[Sequence[Key]],
+                      criteria: str) -> list[list[float]]:
+        """One round of independent m-key scoring calls (external pointwise):
+        each batch is billed/noised as its own ``score_batch`` call."""
+        return [self.score_batch(list(b), criteria) for b in batches]
+
+    # ---- failure-isolating round execution ------------------------------
+    # A round's calls are independent by definition, so ONE structurally
+    # invalid element must not poison its round-mates: the ``try_`` variants
+    # return ``None`` in place of each failing element (the failed attempt
+    # is still billed, as production billing would).  Defaults catch per
+    # element around the point verbs; backends whose batched implementation
+    # cannot fail per element (ModelOracle logit probes) delegate straight
+    # to the batched verb.  ``Ordering`` uses these so its retry/split
+    # fallback re-runs ONLY the failing elements, keeping ledger accounting
+    # identical to sequential execution even under failures.
+
+    def try_rank_batches(self, batches: Sequence[Sequence[Key]],
+                         criteria: str) -> list:
+        out = []
+        for b in batches:
+            try:
+                out.append(self.rank_batch(list(b), criteria))
+            except InvalidOutputError:
+                out.append(None)
+        return out
+
+    def try_score_batches(self, batches: Sequence[Sequence[Key]],
+                          criteria: str) -> list:
+        out = []
+        for b in batches:
+            try:
+                out.append(self.score_batch(list(b), criteria))
+            except InvalidOutputError:
+                out.append(None)
+        return out
+
+    def try_score_each(self, keys: Sequence[Key], criteria: str) -> list:
+        out = []
+        for k in keys:
+            try:
+                out.append(self.score_batch([k], criteria)[0])
+            except InvalidOutputError:
+                out.append(None)
+        return out
 
     # ---- billing helpers -------------------------------------------------
     def _charge_score(self, keys: Sequence[Key], tag: str = "") -> None:

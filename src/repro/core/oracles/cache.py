@@ -57,6 +57,87 @@ class CachingOracle(Oracle):
         ck = ("inquire", key.uid, criteria)
         return self._memo(ck, lambda: self.inner.inquire(key, criteria))
 
+    # ---- round (batch) verbs: per-element memoization ---------------------
+    # Each element of a round shares its cache entry with the equivalent
+    # point call; only the misses are forwarded, still as one round (one
+    # serving submission on a ModelOracle inner).
+
+    def _memo_round(self, cache_keys, items, forward):
+        # forward must not return None elements (the batch verbs never do);
+        # the try_ variant handles the general case
+        return self._memo_try_round(cache_keys, items, forward)
+
+    def compare_batch(self, pairs, criteria: str) -> list[int]:
+        cks = [("compare", a.uid, b.uid, criteria) for a, b in pairs]
+        return self._memo_round(
+            cks, list(pairs), lambda ps: self.inner.compare_batch(ps, criteria))
+
+    def inquire_batch(self, keys: Sequence[Key], criteria: str) -> list[bool]:
+        cks = [("inquire", k.uid, criteria) for k in keys]
+        return self._memo_round(
+            cks, list(keys), lambda ks: self.inner.inquire_batch(ks, criteria))
+
+    def score_each(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        # same cache keys (and list-valued entries) as score_batch([k])
+        cks = [("score", (k.uid,), criteria) for k in keys]
+        out = self._memo_round(
+            cks, list(keys),
+            lambda ks: [[v] for v in self.inner.score_each(ks, criteria)])
+        return [float(v[0]) for v in out]
+
+    def score_batches(self, batches, criteria: str) -> list[list[float]]:
+        cks = [("score", tuple(k.uid for k in b), criteria) for b in batches]
+        return [list(v) for v in self._memo_round(
+            cks, [list(b) for b in batches],
+            lambda bs: self.inner.score_batches(bs, criteria))]
+
+    # failure-isolating rounds: misses forward as one round; a None result
+    # (structural failure) is returned but never cached, so a later retry
+    # reaches the backend again.
+    def _memo_try_round(self, cache_keys, items, forward):
+        # dedup within the round: repeats are hits (a sequential loop would
+        # serve the second occurrence from cache); only unique misses
+        # forward, still as one round.  A None element (structural failure)
+        # is returned but never cached, so a later retry reaches the
+        # backend again.
+        missing, seen = [], set()
+        for i, ck in enumerate(cache_keys):
+            if ck in self._cache or ck in seen:
+                self.hits += 1
+            else:
+                self.misses += 1
+                seen.add(ck)
+                missing.append(i)
+        fresh = {}
+        if missing:
+            vals = forward([items[i] for i in missing])
+            for i, val in zip(missing, vals):
+                fresh[cache_keys[i]] = val
+                if val is not None:
+                    self._cache[cache_keys[i]] = val
+        return [self._cache.get(ck, fresh.get(ck))
+                for ck in cache_keys]
+
+    def try_rank_batches(self, batches, criteria: str) -> list:
+        cks = [("rank", tuple(k.uid for k in b), criteria) for b in batches]
+        return self._memo_try_round(
+            cks, [list(b) for b in batches],
+            lambda bs: self.inner.try_rank_batches(bs, criteria))
+
+    def try_score_batches(self, batches, criteria: str) -> list:
+        cks = [("score", tuple(k.uid for k in b), criteria) for b in batches]
+        return self._memo_try_round(
+            cks, [list(b) for b in batches],
+            lambda bs: self.inner.try_score_batches(bs, criteria))
+
+    def try_score_each(self, keys: Sequence[Key], criteria: str) -> list:
+        cks = [("score", (k.uid,), criteria) for k in keys]
+        out = self._memo_try_round(
+            cks, list(keys),
+            lambda ks: [None if v is None else [v]
+                        for v in self.inner.try_score_each(ks, criteria)])
+        return [None if v is None else float(v[0]) for v in out]
+
     def judge(self, keys, criteria, candidates):
         ck = ("judge", tuple(k.uid for k in keys), criteria,
               tuple(tuple(k.uid for k in c) for c in candidates))

@@ -40,6 +40,19 @@ class ModelOracle(Oracle):
         self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2)
         return self.engine.compare(a.text, b.text, criteria)
 
+    def compare_batch(self, pairs, criteria: str) -> list[int]:
+        """One round of independent comparisons in ONE padded serving
+        submission; billed as len(pairs) logical compare calls (same records
+        as the sequential default, same convention as rank_batches)."""
+        if not pairs:
+            return []
+        for a, b in pairs:
+            inp = (self.costs.compare_prefix + self._real_tokens(a.text)
+                   + self._real_tokens(b.text))
+            self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2)
+        return self.engine.compare_many(
+            [(a.text, b.text) for a, b in pairs], criteria)
+
     def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
         inp = self.costs.rank_prefix + sum(self._real_tokens(k.text) for k in keys)
         self.ledger.charge("rank", inp, self.costs.rank_out_per_key * len(keys),
@@ -68,13 +81,63 @@ class ModelOracle(Oracle):
             out.append([b[j] for j in order])
         return out
 
+    def score_each(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        """N logical single-key score calls, ONE serving submission."""
+        if not keys:
+            return []
+        for k in keys:
+            self.ledger.charge("score",
+                               self.costs.score_prefix + self._real_tokens(k.text),
+                               self.costs.score_out_per_key, n_keys=1)
+        return self.engine.score([k.text for k in keys], criteria)
+
+    def score_batches(self, batches, criteria: str) -> list[list[float]]:
+        """N logical m-key score calls, ONE serving submission."""
+        flat = [k.text for b in batches for k in b]
+        if not flat:
+            return [[] for _ in batches]
+        for b in batches:
+            inp = self.costs.score_prefix + sum(self._real_tokens(k.text) for k in b)
+            self.ledger.charge("score", inp, self.costs.score_out_per_key * len(b),
+                               n_keys=len(b))
+        scores = self.engine.score(flat, criteria)
+        out, i = [], 0
+        for b in batches:
+            out.append(scores[i:i + len(b)])
+            i += len(b)
+        return out
+
+    # logit probes cannot fail structurally: the failure-isolating round
+    # variants are exactly the batched submissions
+    def try_rank_batches(self, batches, criteria: str) -> list:
+        return self.rank_batches(batches, criteria)
+
+    def try_score_batches(self, batches, criteria: str) -> list:
+        return self.score_batches(batches, criteria)
+
+    def try_score_each(self, keys: Sequence[Key], criteria: str) -> list:
+        return self.score_each(keys, criteria)
+
+    def _inquire_prompt(self, key: Key, criteria: str) -> str:
+        return (f"You have seen the following {criteria}: \"{key.text}\" in "
+                f"your training data? Answer Y or N:")
+
     def inquire(self, key: Key, criteria: str) -> bool:
         self.ledger.charge("inquire",
                            self.costs.inquire_prefix + self._real_tokens(key.text),
                            self.costs.inquire_out)
-        return self.engine.yes_no(
-            f"You have seen the following {criteria}: \"{key.text}\" in your "
-            f"training data? Answer Y or N:")
+        return self.engine.yes_no(self._inquire_prompt(key, criteria))
+
+    def inquire_batch(self, keys: Sequence[Key], criteria: str) -> list[bool]:
+        """One round of membership inquiries in ONE serving submission."""
+        if not keys:
+            return []
+        for k in keys:
+            self.ledger.charge("inquire",
+                               self.costs.inquire_prefix + self._real_tokens(k.text),
+                               self.costs.inquire_out)
+        return self.engine.yes_no_many(
+            [self._inquire_prompt(k, criteria) for k in keys])
 
     def judge(self, keys: Sequence[Key], criteria: str,
               candidates: Sequence[Sequence[Key]]) -> int:

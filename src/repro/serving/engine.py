@@ -1,8 +1,12 @@
 """Batched serving engine: prefill + greedy decode over the unified LM API,
-plus the three ranking read-outs the ModelOracle needs (score / compare /
-rank-window).
+plus the ranking read-outs the ModelOracle needs (score / compare /
+rank-window / yes-no), all funneled through ONE probe pathway
+(:meth:`ServeEngine.submit_probes`) so a round of independent logical calls
+costs a single padded prefill submission (``stats.calls`` counts
+submissions).  Submission shapes are bucketed to powers of two to bound XLA
+compiles under variable round sizes (see DESIGN.md).
 
-Prompts are byte-tokenized, right-padded per batch, and executed with two
+Prompts are byte-tokenized, left-padded per batch, and executed with two
 jit-compiled programs (prefill, decode_step) shared across calls; on the
 production mesh the same functions are lowered with sharded params/caches by
 launch/serve.py.  Read-outs follow standard logit-probe practice:
@@ -39,8 +43,13 @@ class ServeStats:
     calls: int = 0
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
 class ServeEngine:
-    def __init__(self, lm: LM, params, max_new_tokens: int = 32):
+    def __init__(self, lm: LM, params, max_new_tokens: int = 32,
+                 bucket_shapes: bool = True, max_probe_batch: int = 256):
         self.lm = lm
         self.params = params
         self.tok = ByteTokenizer()
@@ -48,6 +57,17 @@ class ServeEngine:
             f"model vocab {lm.cfg.vocab_size} < tokenizer vocab "
             f"{self.tok.vocab_size}: special ids would index out of range")
         self.max_new = max_new_tokens
+        # Shape bucketing: round (rows, seq_len) of every submission up to the
+        # next power of two, so the round-batched access paths — whose batch
+        # size varies call to call — reuse a handful of compiled programs
+        # instead of triggering an XLA compile per novel shape.  Dummy rows
+        # are all-PAD and their logits are discarded.
+        self.bucket_shapes = bucket_shapes
+        # Memory ceiling for one probe submission: a round of N logical
+        # calls becomes ceil(N / max_probe_batch) submissions, so huge
+        # rounds (pointwise over thousands of keys) cannot build one
+        # device-filling prefill batch.
+        self.max_probe_batch = max_probe_batch
         self.stats = ServeStats()
         self._prefill = jax.jit(partial(lm.prefill, reserve=max_new_tokens))
         self._decode = jax.jit(lm.decode_step)
@@ -57,7 +77,11 @@ class ServeEngine:
     def _batch_tokens(self, prompts: Sequence[str]) -> np.ndarray:
         ids = [self.tok.encode(p) for p in prompts]
         maxlen = max(len(i) for i in ids)
-        arr = np.full((len(ids), maxlen), PAD, np.int32)
+        rows = len(ids)
+        if self.bucket_shapes:
+            maxlen = _next_pow2(max(maxlen, 16))
+            rows = _next_pow2(rows)
+        arr = np.full((rows, maxlen), PAD, np.int32)
         for r, i in enumerate(ids):
             arr[r, maxlen - len(i):] = i          # left-pad: last pos = live
         return arr
@@ -77,27 +101,78 @@ class ServeEngine:
         return batch
 
     # --------------------------------------------------------------- probes
+    def submit_probes(self, prompts: Sequence[str],
+                      max_batch: Optional[int] = None) -> np.ndarray:
+        """THE probe pathway: run a round of independent single-token probes
+        as one (or, when ``max_batch`` bounds padded batch size, a few
+        length-bucketed) padded prefill submissions; returns last-position
+        logits aligned with ``prompts``.  Every oracle read-out (score /
+        compare / yes-no / judge) funnels through here, so ``stats.calls``
+        counts *serving submissions*, not logical LLM calls.  ``max_batch``
+        defaults to the engine's ``max_probe_batch`` memory ceiling.
+
+        Prompts are grouped by PADDED-LENGTH CLASS (the power-of-two bucket
+        with ``bucket_shapes``, exact token length without), never mixing
+        classes in one submission.  The model has no PAD attention mask, so
+        a row's logits depend on its padded length; same-class grouping
+        makes each prompt's padding a function of its own length only —
+        batched results are bit-identical to sequential point submissions."""
+        n = len(prompts)
+        if n == 0:
+            return np.zeros((0, self.lm.cfg.vocab_size), np.float32)
+        if max_batch is None:
+            max_batch = self.max_probe_batch
+        by_class: dict[int, list[int]] = {}
+        for i, p in enumerate(prompts):
+            ln = len(self.tok.encode(p))
+            cls = _next_pow2(max(ln, 16)) if self.bucket_shapes else ln
+            by_class.setdefault(cls, []).append(i)
+        groups = []
+        for cls in sorted(by_class):
+            idx = by_class[cls]
+            # max_batch None here means the engine was built with
+            # max_probe_batch=None: explicitly unbounded submissions
+            step = len(idx) if max_batch is None else max_batch
+            groups.extend(idx[i:i + step] for i in range(0, len(idx), step))
+        out = np.zeros((n, self.lm.cfg.vocab_size), np.float32)
+        for g in groups:
+            tokens = self._batch_tokens([prompts[i] for i in g])
+            logits, _ = self._prefill(self.params, self._make_batch(tokens))
+            self.stats.prefill_tokens += int(tokens.size)
+            self.stats.calls += 1
+            out[np.asarray(g)] = np.asarray(
+                logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
+        return out
+
     def last_logits(self, prompts: Sequence[str]) -> np.ndarray:
-        tokens = self._batch_tokens(prompts)
-        logits, _ = self._prefill(self.params, self._make_batch(tokens))
-        self.stats.prefill_tokens += int(tokens.size)
-        self.stats.calls += 1
-        return np.asarray(logits.astype(jnp.float32))
+        return self.submit_probes(prompts)
 
     def score(self, texts: Sequence[str], criteria: str) -> list[float]:
         prompts = [f"Criteria: {criteria}\nItem: {t}\nRating:" for t in texts]
-        logits = self.last_logits(prompts)
+        logits = self.submit_probes(prompts)
         return [float(l[TOK_HI] - l[TOK_LO]) for l in logits]
 
+    def _compare_prompt(self, a: str, b: str, criteria: str) -> str:
+        return (f"Criteria: {criteria}\nPassage A: {a}\nPassage B: {b}\n"
+                f"Which ranks higher? Answer:")
+
     def compare(self, a: str, b: str, criteria: str) -> int:
-        p = (f"Criteria: {criteria}\nPassage A: {a}\nPassage B: {b}\n"
-             f"Which ranks higher? Answer:")
-        logits = self.last_logits([p])[0]
-        return 1 if logits[TOK_A] > logits[TOK_B] else -1
+        return self.compare_many([(a, b)], criteria)[0]
+
+    def compare_many(self, pairs: Sequence[tuple[str, str]],
+                     criteria: str) -> list[int]:
+        """A round of independent comparisons in one probe submission."""
+        logits = self.submit_probes(
+            [self._compare_prompt(a, b, criteria) for a, b in pairs])
+        return [1 if l[TOK_A] > l[TOK_B] else -1 for l in logits]
 
     def yes_no(self, prompt: str) -> bool:
-        logits = self.last_logits([prompt])[0]
-        return bool(logits[TOK_YES] > logits[TOK_NO])
+        return self.yes_no_many([prompt])[0]
+
+    def yes_no_many(self, prompts: Sequence[str]) -> list[bool]:
+        """A round of independent Y/N probes in one probe submission."""
+        logits = self.submit_probes(prompts)
+        return [bool(l[TOK_YES] > l[TOK_NO]) for l in logits]
 
     def rank_window(self, texts: Sequence[str], criteria: str) -> list[int]:
         """Permutation (ascending by score) from one shared-criteria batch."""
@@ -105,24 +180,37 @@ class ServeEngine:
         return list(np.argsort(np.asarray(scores), kind="stable"))
 
     # ------------------------------------------------------------- generate
-    def generate(self, prompts: Sequence[str], max_new: Optional[int] = None
-                 ) -> list[str]:
+    def generate(self, prompts: Sequence[str], max_new: Optional[int] = None,
+                 max_new_per: Optional[Sequence[int]] = None) -> list[str]:
+        """Batched greedy decode.  ``max_new_per`` gives each row its own
+        decode budget (the scheduler batches requests with differing
+        ``max_new``); rows that hit their budget are masked done and emit
+        EOS while the rest of the batch keeps decoding."""
         max_new = min(max_new or self.max_new, self.max_new)
+        n = len(prompts)
         tokens = self._batch_tokens(prompts)
-        b, s = tokens.shape
+        b, s = tokens.shape                       # b >= n with bucket_shapes
+        if max_new_per is None:
+            limits = np.full((n,), max_new, np.int64)
+        else:
+            assert len(max_new_per) == n
+            limits = np.minimum(np.asarray(max_new_per, np.int64), self.max_new)
+        limits = np.concatenate([limits, np.zeros((b - n,), np.int64)])
+        horizon = int(limits.max(initial=0))
         logits, caches = self._prefill(self.params, self._make_batch(tokens))
         self.stats.prefill_tokens += int(tokens.size)
         self.stats.calls += 1
-        out = np.zeros((b, max_new), np.int64)
+        out = np.full((b, horizon), EOS, np.int64)  # unwritten tail decodes empty
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        done = np.zeros((b,), bool)
-        for t in range(max_new):
+        done = limits <= 0
+        for t in range(horizon):
             out[:, t] = np.where(done, EOS, np.asarray(cur[:, 0]))
             done |= np.asarray(cur[:, 0]) == EOS
+            done |= (t + 1) >= limits
             if done.all():
                 break
             logits, caches = self._decode(self.params, caches, cur,
                                           jnp.int32(s + t))
-            self.stats.decode_tokens += b
+            self.stats.decode_tokens += int((~done).sum())
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return [self.tok.decode(row) for row in out]
+        return [self.tok.decode(row) for row in out[:n]]

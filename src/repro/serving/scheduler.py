@@ -6,12 +6,28 @@ padding waste), and each batch runs prefill+decode to completion.  Token-
 level interleaving (paged attention) is documented as out of scope in
 DESIGN.md; batch-level scheduling is what the ORDER BY workloads need — the
 access paths submit many short, similar-length scoring prompts.
+
+Two request classes share the queue discipline:
+
+ * **generate** requests (``submit`` / ``run``) — prefill + greedy decode,
+   each request honoring its own ``max_new`` even when batched with longer
+   requests (the engine masks per-row decode budgets);
+ * **probe** requests (``submit_probe`` / ``run_probes``) — single-token
+   read-outs (score / compare / yes-no), drained through
+   :meth:`ServeEngine.submit_probes` in length-bucketed submissions.  The
+   ModelOracle's round-batched verbs call ``engine.submit_probes``
+   directly (one operator, one round, no queueing needed); this queue is
+   the multi-client front for the same pathway — concurrent ORDER BY
+   operators sharing one engine submit probes here and get them coalesced
+   across operators.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
+
+import numpy as np
 
 from .engine import ServeEngine
 
@@ -30,27 +46,58 @@ class Request:
         return self.output is not None
 
 
+@dataclass
+class ProbeRequest:
+    rid: int
+    prompt: str
+    logits: Optional[np.ndarray] = None
+
+
 class BatchScheduler:
     def __init__(self, engine: ServeEngine, max_batch: int = 16):
         self.engine = engine
         self.max_batch = max_batch
         self.queue: list[Request] = []
+        self.probe_queue: list[ProbeRequest] = []
         self.completed: dict[int, Request] = {}
 
+    # ------------------------------------------------------------- generate
     def submit(self, prompt: str, max_new: int = 32) -> int:
         r = Request(next(_ids), prompt, max_new)
         self.queue.append(r)
         return r.rid
 
     def run(self) -> dict[int, str]:
-        """Drain the queue; returns {rid: output}."""
+        """Drain the queue; returns {rid: output} for THIS drain only.
+        (Earlier drains remain queryable via ``self.completed``.)"""
+        drained: dict[int, str] = {}
         while self.queue:
             batch = self.queue[: self.max_batch]
             self.queue = self.queue[self.max_batch:]
             batch.sort(key=lambda r: len(r.prompt))
             outs = self.engine.generate([r.prompt for r in batch],
-                                        max_new=max(r.max_new for r in batch))
+                                        max_new=max(r.max_new for r in batch),
+                                        max_new_per=[r.max_new for r in batch])
             for r, o in zip(batch, outs):
                 r.output = o
                 self.completed[r.rid] = r
-        return {rid: r.output for rid, r in self.completed.items()}
+                drained[r.rid] = o
+        return drained
+
+    # --------------------------------------------------------------- probes
+    def submit_probe(self, prompt: str) -> int:
+        r = ProbeRequest(next(_ids), prompt)
+        self.probe_queue.append(r)
+        return r.rid
+
+    def run_probes(self) -> dict[int, np.ndarray]:
+        """Drain the probe queue through length-bucketed padded submissions;
+        returns {rid: last-position logits} for this drain."""
+        pending, self.probe_queue = self.probe_queue, []
+        if not pending:
+            return {}
+        logits = self.engine.submit_probes([r.prompt for r in pending],
+                                           max_batch=self.max_batch)
+        for r, l in zip(pending, logits):
+            r.logits = l
+        return {r.rid: r.logits for r in pending}

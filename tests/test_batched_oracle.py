@@ -1,0 +1,209 @@
+"""Round-based batched oracle execution.
+
+Invariants of the round refactor:
+
+ * every batch verb agrees element-for-element with its sequential default on
+   all three oracle backends (Exact, Simulated, Model);
+ * ledger call/token accounting is identical whether a round is executed
+   batched or as point calls (billed as N logical calls, executed as one
+   submission);
+ * every access path produces byte-identical output order with round
+   batching on vs off (``PathParams.coalesce``) under deterministic oracles;
+ * on the ModelOracle backend, round batching strictly reduces serving
+   submissions (``engine.stats.calls``) while leaving the ledger unchanged.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ExactOracle, CachingOracle, PathParams,
+                        SimulatedOracle, as_keys, available_paths, make_path)
+from repro.core.oracles.simulated import FACTUAL, REASONING
+from repro.core.types import SortSpec
+
+
+def _keys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return as_keys([f"key {i:03d}" for i in range(n)],
+                   list(rng.standard_normal(n)))
+
+
+def _ledger_tuple(oracle):
+    return (oracle.ledger.n_calls, oracle.ledger.input_tokens,
+            oracle.ledger.output_tokens,
+            [(r.kind, r.n_keys) for r in oracle.ledger.records])
+
+
+ORACLES = [lambda: ExactOracle(), lambda: SimulatedOracle(REASONING),
+           lambda: SimulatedOracle(FACTUAL)]
+
+
+# ---------------------------------------------------------------- batch verbs
+@pytest.mark.parametrize("mk", ORACLES)
+def test_compare_batch_matches_sequential(mk):
+    keys = _keys(10)
+    pairs = [(keys[i], keys[j]) for i in range(10) for j in range(i + 1, 10)]
+    o1, o2 = mk(), mk()
+    batched = o1.compare_batch(pairs, "c")
+    pointwise = [o2.compare(a, b, "c") for a, b in pairs]
+    assert batched == pointwise
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+@pytest.mark.parametrize("mk", ORACLES)
+def test_inquire_batch_matches_sequential(mk):
+    keys = _keys(12)
+    o1, o2 = mk(), mk()
+    assert o1.inquire_batch(keys, "c") == [o2.inquire(k, "c") for k in keys]
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+@pytest.mark.parametrize("mk", ORACLES)
+def test_score_each_matches_sequential(mk):
+    keys = _keys(9)
+    o1, o2 = mk(), mk()
+    assert o1.score_each(keys, "c") == [o2.score_batch([k], "c")[0]
+                                        for k in keys]
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+@pytest.mark.parametrize("mk", ORACLES)
+def test_score_batches_matches_sequential(mk):
+    keys = _keys(9)
+    chunks = [keys[:3], keys[3:6], keys[6:]]
+    o1, o2 = mk(), mk()
+    assert (o1.score_batches(chunks, "c")
+            == [o2.score_batch(c, "c") for c in chunks])
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+def test_empty_rounds():
+    o = ExactOracle()
+    assert o.compare_batch([], "c") == []
+    assert o.inquire_batch([], "c") == []
+    assert o.score_each([], "c") == []
+    assert o.score_batches([], "c") == []
+    assert o.ledger.n_calls == 0
+
+
+def test_caching_oracle_round_verbs_share_point_cache():
+    keys = _keys(8)
+    inner = ExactOracle()
+    c = CachingOracle(inner)
+    pairs = [(keys[0], keys[1]), (keys[2], keys[3])]
+    seq = [c.compare(a, b, "c") for a, b in pairs]
+    calls_after_seq = inner.ledger.n_calls
+    assert c.compare_batch(pairs, "c") == seq           # all hits
+    assert inner.ledger.n_calls == calls_after_seq       # nothing re-billed
+    # misses flow through as one round, then hit
+    more = [(keys[4], keys[5]), (keys[0], keys[1])]
+    got = c.compare_batch(more, "c")
+    assert got[1] == seq[0]
+    assert c.inquire_batch(keys[:4], "c") == [c.inquire(k, "c")
+                                              for k in keys[:4]]
+    assert c.score_each(keys[:4], "c") == [c.score_batch([k], "c")[0]
+                                           for k in keys[:4]]
+
+
+# --------------------------------------------------- coalesce on/off identity
+@pytest.mark.parametrize("path", sorted(available_paths()))
+@pytest.mark.parametrize("mk", ORACLES)
+@pytest.mark.parametrize("desc,limit,votes", [(False, None, 1), (True, 7, 3)])
+def test_paths_byte_identical_with_and_without_rounds(path, mk, desc, limit,
+                                                      votes):
+    keys = _keys(33)
+    spec = SortSpec("c", desc, limit)
+    o_on, o_off = mk(), mk()
+    on = make_path(path, PathParams(batch_size=4, votes=votes,
+                                    coalesce=True)).execute(keys, o_on, spec)
+    off = make_path(path, PathParams(batch_size=4, votes=votes,
+                                     coalesce=False)).execute(keys, o_off, spec)
+    assert on.uids() == off.uids()
+
+
+@pytest.mark.parametrize("path", sorted(available_paths()))
+@pytest.mark.parametrize("mk", ORACLES)
+def test_paths_ledger_identical_with_and_without_rounds(path, mk):
+    """Same logical calls and token totals either way — including under
+    SimulatedOracle's structural failures (per-element failure isolation:
+    a bad window/chunk is split-retried alone, round-mates aren't
+    re-billed).  Record ORDER may differ (lockstep merge interleaves
+    windows across run-pairs), so compare the multiset plus totals."""
+    keys = _keys(32)
+    spec = SortSpec("c", True, None)
+    o_on, o_off = mk(), mk()
+    make_path(path, PathParams(batch_size=4, votes=3,
+                               coalesce=True)).execute(keys, o_on, spec)
+    make_path(path, PathParams(batch_size=4, votes=3,
+                               coalesce=False)).execute(keys, o_off, spec)
+
+    def norm(o):
+        n, i, t, recs = _ledger_tuple(o)
+        return n, i, t, sorted(recs)
+    assert norm(o_on) == norm(o_off)
+
+
+def test_before_many_split_fallback_degrades_to_point_calls():
+    from repro.core.access_paths.base import Ordering
+    from repro.core.types import InvalidOutputError
+
+    class FlakyCompareBatch(ExactOracle):
+        def compare_batch(self, pairs, criteria):
+            if len(pairs) > 2:
+                raise InvalidOutputError(f"round of {len(pairs)}")
+            return super().compare_batch(pairs, criteria)
+
+    keys = _keys(8)
+    pairs = [(keys[i], keys[i + 1]) for i in range(7)]
+    ordering = Ordering(FlakyCompareBatch(), SortSpec("c"))
+    exact = Ordering(ExactOracle(), SortSpec("c"))
+    assert ordering.before_many(pairs) == [exact.before(a, b)
+                                           for a, b in pairs]
+
+
+# ------------------------------------------------------- ModelOracle backend
+@pytest.mark.slow
+class TestModelOracleRounds:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        import jax
+        from repro.configs import get_reduced
+        from repro.models import LM
+        from repro.serving import ServeEngine
+        cfg = get_reduced("llama3-8b")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        return ServeEngine(lm, params, max_new_tokens=8)
+
+    def test_batch_verbs_match_sequential(self, engine):
+        from repro.core.oracles.model_oracle import ModelOracle
+        # variable-length texts: padded-length-class grouping keeps batched
+        # logits bit-identical to sequential point submissions
+        keys = as_keys([f"key {'x' * (3 * i)} {i}" for i in range(8)],
+                       list(range(8)))
+        pairs = [(keys[i], keys[j]) for i in range(4) for j in range(4, 8)]
+        o1, o2 = ModelOracle(engine), ModelOracle(engine)
+        assert o1.compare_batch(pairs, "c") == [o2.compare(a, b, "c")
+                                                for a, b in pairs]
+        assert o1.inquire_batch(keys, "c") == [o2.inquire(k, "c")
+                                               for k in keys]
+        s1 = o1.score_each(keys, "c")
+        s2 = [o2.score_batch([k], "c")[0] for k in keys]
+        assert s1 == pytest.approx(s2)
+        assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+    def test_rounds_cut_submissions_not_billing(self, engine):
+        from repro.core.oracles.model_oracle import ModelOracle
+        keys = _keys(24)
+        spec = SortSpec("c", True, None)
+        out = {}
+        for co in (False, True):
+            o = ModelOracle(engine)
+            c0 = engine.stats.calls
+            res = make_path("quick", PathParams(votes=1, coalesce=co)).execute(
+                keys, o, spec)
+            out[co] = (engine.stats.calls - c0, _ledger_tuple(o), res.uids())
+        subs_off, ledger_off, uids_off = out[False]
+        subs_on, ledger_on, uids_on = out[True]
+        assert subs_on < subs_off
+        assert ledger_on == ledger_off
+        assert uids_on == uids_off

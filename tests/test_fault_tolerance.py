@@ -7,6 +7,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # training-loop forward passes: heavyweight
+
 from repro.configs import get_reduced
 from repro.data import DataConfig, DataPipeline
 from repro.models import LM

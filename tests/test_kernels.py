@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
 from repro.kernels import ref
 from repro.kernels.borda_count import borda_count
 from repro.kernels.decode_attention import decode_attention

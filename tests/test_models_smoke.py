@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
 from repro.configs import get_config, get_reduced, list_archs
 from repro.models import LM, SHAPES
 

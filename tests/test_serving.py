@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
 from repro.configs import get_reduced
 from repro.core import as_keys, llm_order_by
 from repro.core.oracles.model_oracle import ModelOracle
@@ -52,6 +54,32 @@ def test_scheduler_drains_in_batches(engine):
     out = sched.run()
     assert set(out) == set(rids)
     assert not sched.queue
+
+
+def test_scheduler_run_returns_only_current_drain(engine):
+    sched = BatchScheduler(engine, max_batch=2)
+    first = [sched.submit(f"prompt {i}", max_new=2) for i in range(3)]
+    d1 = sched.run()
+    assert set(d1) == set(first)
+    later = sched.submit("another prompt", max_new=2)
+    d2 = sched.run()
+    assert set(d2) == {later}                      # drain-local, no history
+    assert set(sched.completed) == set(first) | {later}
+
+
+def test_scheduler_probe_pathway(engine):
+    sched = BatchScheduler(engine, max_batch=2)
+    assert sched.run_probes() == {}
+    prompts = [f"Criteria: size\nItem: thing {i}\nRating:" for i in range(5)]
+    rids = [sched.submit_probe(p) for p in prompts]
+    out = sched.run_probes()
+    assert set(out) == set(rids)
+    assert not sched.probe_queue
+    assert sched.run_probes() == {}                # drained
+    # probe logits match the engine's direct probe pathway per prompt
+    direct = engine.submit_probes(prompts)
+    for rid, l in zip(rids, direct):
+        assert np.allclose(out[rid], l)
 
 
 def test_model_oracle_end_to_end(engine):

@@ -17,7 +17,7 @@ from repro.training import init_opt_state
 def fake_mesh_16x16():
     """AbstractMesh stands in for the production mesh (no devices needed)."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return AbstractMesh((("data", 16), ("model", 16)))
 
 
 @pytest.mark.parametrize("arch", list_archs())

@@ -55,6 +55,7 @@ def test_test_time_scaling_on_comparisons():
     assert quals[2] >= quals[0] - 0.02  # no collapse; scaling holds on average
 
 
+@pytest.mark.slow  # full 4-family optimizer sweep: heavyweight
 def test_optimizer_matches_best_static_per_family():
     """Sec. 6 headline: the dynamic optimizer is on par with (>= best - eps)
     the best static path on every benchmark family."""

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
 from repro.configs import get_reduced
 from repro.data import DataConfig, DataPipeline
 from repro.models import LM
