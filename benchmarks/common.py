@@ -55,3 +55,14 @@ def run_optimizer(task: RankingTask, strategy: str = "borda",
 def emit(rows: list[tuple]) -> None:
     for r in rows:
         print(",".join(str(x) for x in r))
+
+
+def parse_json_flag(argv: list[str]) -> tuple[list[str], "str | None"]:
+    """Pop ``--json OUT`` from an argv list; returns (rest, path_or_None).
+    Exits with a usage message when the path operand is missing."""
+    if "--json" not in argv:
+        return list(argv), None
+    i = argv.index("--json")
+    if i + 1 >= len(argv):
+        raise SystemExit("usage: ... --json OUT [N ...]")
+    return argv[:i] + argv[i + 2:], argv[i + 1]

@@ -8,10 +8,11 @@ order and ledger accounting are identical in both modes (uniform-length keys
 keep padding identical); only the number of padded prefill submissions — and
 therefore wall-clock — changes.
 
-    PYTHONPATH=src python -m benchmarks.table4_submissions [N ...]
+    PYTHONPATH=src python -m benchmarks.table4_submissions [--json OUT] [N ...]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -36,7 +37,10 @@ def _engine(max_new: int = 8):
 
 
 def main() -> None:
-    sizes = [int(a) for a in sys.argv[1:] if a.isdigit()] or [64]
+    from benchmarks.common import parse_json_flag
+    argv, json_path = parse_json_flag(sys.argv[1:])
+    sizes = [int(a) for a in argv if a.isdigit()] or [64]
+    rows: list[dict] = []
     eng = _engine()
     rng = np.random.default_rng(0)
     print("path,n,mode,submissions,logical_calls,seconds,order_identical")
@@ -65,7 +69,13 @@ def main() -> None:
                 subs, calls, secs, _ = out[coalesce]
                 mode = "rounds" if coalesce else "sequential"
                 print(f"{path},{n},{mode},{subs},{calls},{secs:.3f},{same}")
+                rows.append(dict(path=path, n=n, mode=mode, submissions=subs,
+                                 logical_calls=calls, seconds=round(secs, 3),
+                                 order_identical=same))
             assert out[True][0] <= out[False][0], (path, n)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -25,23 +25,31 @@ class _MergeCursor:
     """State of one in-flight two-way merge (Alg. 5): run pointers, emitted
     output, and the current window buffer awaiting an LLM ranking.  Encodes
     exactly the emission/consistency-repair logic of the sequential
-    ``_merge`` so lockstep execution is call-for-call identical."""
+    ``_merge`` — including the LIMIT-K early stop at ``cap`` — so lockstep
+    execution is call-for-call identical."""
 
-    def __init__(self, l1: list[Key], l2: list[Key], h: int):
-        self.l1, self.l2, self.h = l1, l2, h
+    def __init__(self, l1: list[Key], l2: list[Key], h: int,
+                 cap: Optional[int] = None):
+        self.l1, self.l2, self.h, self.cap = l1, l2, h, cap
         self.i = self.j = 0
         self.out: list[Key] = []
         self.done = False
         self._fast_forward()
 
     def _fast_forward(self) -> None:
-        """Emit the tail without an oracle call once one run is exhausted."""
+        """Emit the tail without an oracle call once one run is exhausted;
+        stop — issuing no further windows — once ``cap`` items are emitted
+        (ranking positions past K can never reach the output)."""
         if self.done:
             return
-        if self.i >= len(self.l1):
+        if self.cap is not None and len(self.out) >= self.cap:
+            self.out = self.out[:self.cap]; self.done = True
+        elif self.i >= len(self.l1):
             self.out.extend(self.l2[self.j:]); self.done = True
         elif self.j >= len(self.l2):
             self.out.extend(self.l1[self.i:]); self.done = True
+        if self.done and self.cap is not None:
+            self.out = self.out[:self.cap]
 
     def buffer(self) -> list[Key]:
         """The next window to rank (only valid while not done)."""
@@ -82,6 +90,10 @@ class ExternalMergeSort(AccessPath):
         # a single padded serving batch, SimulatedOracle loops.
         chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
         runs: list[list[Key]] = ordering.windows(chunks)
+        if cap is not None:
+            # LIMIT-K pushdown starts at the runs themselves: a run's item
+            # at position >= K trails K earlier run-mates in every merge
+            runs = [r[:cap] for r in runs]
 
         # Phase 2: iterative two-way merging.  With ``coalesce`` every merge
         # of a round advances in lockstep: each iteration gathers the current
@@ -95,7 +107,7 @@ class ExternalMergeSort(AccessPath):
                 slots: list = []  # per output slot: cursor | carried run
                 for i in range(0, len(runs), 2):
                     if i + 1 < len(runs):
-                        slots.append(_MergeCursor(runs[i], runs[i + 1], h))
+                        slots.append(_MergeCursor(runs[i], runs[i + 1], h, cap))
                     else:
                         slots.append(runs[i])  # odd run carried forward
                 while True:
@@ -108,24 +120,25 @@ class ExternalMergeSort(AccessPath):
                         c.consume(r)
                 for s in slots:
                     merged = s.out if isinstance(s, _MergeCursor) else s
-                    if cap is not None and isinstance(s, _MergeCursor):
-                        merged = merged[:cap]
+                    if cap is not None:
+                        merged = merged[:cap]  # incl. carried odd runs
                     nxt.append(merged)
             else:
                 for i in range(0, len(runs), 2):
                     if i + 1 < len(runs):
-                        merged = self._merge(runs[i], runs[i + 1], m, ordering)
-                        if cap is not None:
-                            merged = merged[:cap]
-                        nxt.append(merged)
+                        nxt.append(self._merge(runs[i], runs[i + 1], m,
+                                               ordering, cap))
                     else:
-                        nxt.append(runs[i])  # odd run carried forward
+                        # cap carried odd runs too, so run sizes actually
+                        # stop growing at K
+                        nxt.append(runs[i] if cap is None else runs[i][:cap])
             runs = nxt
         return runs[0] if runs else []
 
     # ---- Algorithm 5 ---------------------------------------------------------
     @staticmethod
-    def _merge(l1: list[Key], l2: list[Key], m: int, ordering: Ordering) -> list[Key]:
+    def _merge(l1: list[Key], l2: list[Key], m: int, ordering: Ordering,
+               cap: Optional[int] = None) -> list[Key]:
         """Two-way merge with a sliding LLM-ranked buffer.
 
         Consistency repair: the paper's emission loop advances each run's
@@ -137,11 +150,17 @@ class ExternalMergeSort(AccessPath):
         r's next unconsumed item (runs are already sorted, so for a faithful
         oracle this is the identity; under noise it guarantees the output is
         a permutation).
+
+        LIMIT-K pushdown (Alg. 5 + Sec. 3.3): once ``cap`` items are
+        emitted no further buffer windows are issued — the merged prefix is
+        already final, so ranking positions past K would be pure waste.
         """
         i = j = 0
         out: list[Key] = []
         h = max(m // 2, 1)
         while i < len(l1) or j < len(l2):
+            if cap is not None and len(out) >= cap:
+                return out[:cap]
             if i >= len(l1):
                 out.extend(l2[j:]); break
             if j >= len(l2):
@@ -163,7 +182,7 @@ class ExternalMergeSort(AccessPath):
                     break  # one side exhausted within this window -> refill
             i += e1
             j += e2
-        return out
+        return out if cap is None else out[:cap]
 
     # ---- Table 1 --------------------------------------------------------------
     @classmethod

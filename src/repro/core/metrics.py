@@ -65,14 +65,12 @@ def graded_relevance(keys: Sequence[Key], n_grades: int = 4, descending: bool = 
     for g in range(n_grades - 1, 0, -1):
         bounds.append((g, frac))
         frac *= 2
-    cum = 0.0
     idx = 0
     for g, f in bounds:
         hi = min(n, idx + max(1, int(round(f * n))))
         for k in ordered[idx:hi]:
             rel[k.uid] = g
         idx = hi
-        cum += f
     for k in ordered[idx:]:
         rel[k.uid] = 0
     return rel

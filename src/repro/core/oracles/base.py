@@ -17,9 +17,27 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 from ..types import InvalidOutputError, Key
+
+
+class PromptParts(NamedTuple):
+    """Structured probe prompt: ``prefix`` is the block shared by every call
+    of a round (instructions + criteria, plus the pivot in comparison
+    rounds); ``suffix`` carries the per-key payload.  The logical prompt is
+    the concatenation — backends that don't exploit structure just join the
+    parts — but the pair form lets the serving layer prefill the shared
+    prefix once per round and reuse its KV (ServeEngine's prefix-KV cache).
+    Billing is a function of the logical prompt only, so structuring never
+    changes the ledger."""
+
+    prefix: str
+    suffix: str
+
+    @property
+    def text(self) -> str:
+        return self.prefix + self.suffix
 
 
 @dataclass(frozen=True)

@@ -95,28 +95,44 @@ class CachingOracle(Oracle):
     # (structural failure) is returned but never cached, so a later retry
     # reaches the backend again.
     def _memo_try_round(self, cache_keys, items, forward):
-        # dedup within the round: repeats are hits (a sequential loop would
-        # serve the second occurrence from cache); only unique misses
-        # forward, still as one round.  A None element (structural failure)
-        # is returned but never cached, so a later retry reaches the
-        # backend again.
-        missing, seen = [], set()
+        # dedup within the round: a repeat of a key whose first occurrence
+        # SUCCEEDS is a hit (a sequential loop would serve it from cache);
+        # a repeat of a key whose first occurrence failed structurally must
+        # re-reach — and re-bill — the backend, exactly like the sequential
+        # loop's cache miss (None is never cached).  Unique misses forward
+        # as one round; repeats of failed keys forward as a follow-up round.
+        missing: list[int] = []
+        dup_later: list[int] = []
+        seen: set = set()
         for i, ck in enumerate(cache_keys):
-            if ck in self._cache or ck in seen:
+            if ck in self._cache:
                 self.hits += 1
+            elif ck in seen:
+                dup_later.append(i)                # outcome not known yet
             else:
                 self.misses += 1
                 seen.add(ck)
                 missing.append(i)
-        fresh = {}
-        if missing:
-            vals = forward([items[i] for i in missing])
-            for i, val in zip(missing, vals):
-                fresh[cache_keys[i]] = val
+        out: dict[int, object] = {}
+
+        def run(idx):
+            for i, val in zip(idx, forward([items[i] for i in idx])):
+                out[i] = val
                 if val is not None:
                     self._cache[cache_keys[i]] = val
-        return [self._cache.get(ck, fresh.get(ck))
-                for ck in cache_keys]
+
+        if missing:
+            run(missing)
+        retry = [i for i in dup_later if cache_keys[i] not in self._cache]
+        self.hits += len(dup_later) - len(retry)
+        if retry:
+            self.misses += len(retry)
+            run(retry)
+        # per-occurrence results: an occurrence that reached the backend
+        # keeps its own value (even if a later retry of the same key
+        # succeeded); the rest read the cache.
+        return [out[i] if i in out else self._cache.get(ck)
+                for i, ck in enumerate(cache_keys)]
 
     def try_rank_batches(self, batches, criteria: str) -> list:
         cks = [("rank", tuple(k.uid for k in b), criteria) for b in batches]

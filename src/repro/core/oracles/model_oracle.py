@@ -15,7 +15,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..types import Key
-from .base import LLAMA70B, Oracle, PriceSheet, PromptCosts
+from .base import LLAMA70B, Oracle, PriceSheet, PromptCosts, PromptParts
 
 
 class ModelOracle(Oracle):
@@ -118,9 +118,12 @@ class ModelOracle(Oracle):
     def try_score_each(self, keys: Sequence[Key], criteria: str) -> list:
         return self.score_each(keys, criteria)
 
-    def _inquire_prompt(self, key: Key, criteria: str) -> str:
-        return (f"You have seen the following {criteria}: \"{key.text}\" in "
-                f"your training data? Answer Y or N:")
+    def _inquire_prompt(self, key: Key, criteria: str) -> PromptParts:
+        # structured (shared_prefix, per_key_suffix): a whole membership
+        # round shares one prefix-KV entry in the serving engine
+        return PromptParts(
+            f"You have seen the following {criteria}: \"",
+            f"{key.text}\" in your training data? Answer Y or N:")
 
     def inquire(self, key: Key, criteria: str) -> bool:
         self.ledger.charge("inquire",
@@ -146,8 +149,8 @@ class ModelOracle(Oracle):
         prompts = []
         for cand in candidates:
             listing = " > ".join(k.text[:40] for k in cand[:10])
-            prompts.append(f"Criteria: {criteria}\nRanking: {listing}\n"
-                           f"Quality rating:")
+            prompts.append(PromptParts(f"Criteria: {criteria}\nRanking:",
+                                       f" {listing}\nQuality rating:"))
         logits = self.engine.last_logits(prompts)
         from ...serving.engine import TOK_HI, TOK_LO
         scores = [float(l[TOK_HI] - l[TOK_LO]) for l in logits]

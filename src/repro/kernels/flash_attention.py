@@ -8,6 +8,13 @@ kv steps.  BlockSpecs keep one (Bq, hd) query tile and one (Bk, hd) KV tile
 resident in VMEM; GQA maps each query head onto its shared KV head inside
 the index_map (no KV duplication in HBM).  Causal/window masking is computed
 from program ids; fully-dead KV blocks are skipped with pl.when.
+
+Chunked prefill over prepended KV (the serving engine's prefix-KV cache):
+``q_offset`` places the Sq query rows at absolute positions
+``[q_offset, q_offset + Sq)`` of an Sk-long key sequence (Sk >= Sq — the
+leading ``q_offset`` keys come from a cached prefix), so causal masking
+compares absolute positions and a suffix-only prefill attends over
+``[cached KV; own KV]`` exactly as a monolithic prefill would.
 """
 from __future__ import annotations
 
@@ -23,8 +30,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, causal: bool, window: int, bq: int, bk: int,
-            n_kv_blocks: int, seq_len: int):
+            scale: float, causal: bool, window: int, q_offset: int, bq: int,
+            bk: int, n_kv_blocks: int, kv_len: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -34,7 +41,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q_start = qi * bq
+    q_start = qi * bq + q_offset                          # absolute position
     k_start = ki * bk
     live = jnp.bool_(True)
     if causal:
@@ -50,13 +57,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         # zero the padded tail of the last kv block: 0-weight x garbage
         # (possibly-NaN OOB reads) would otherwise poison the accumulator
         col_valid = (k_start + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
-                     ) < seq_len
+                     ) < kv_len
         k = jnp.where(col_valid, k, 0.0)
         v = jnp.where(col_valid, v, 0.0)
         s = q @ k.T                                       # (bq, bk)
         rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = cols < seq_len
+        mask = cols < kv_len
         if causal:
             mask &= cols <= rows
         if window:
@@ -77,22 +84,28 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
+                    q_offset: int = 0, block_q: int = 128, block_k: int = 128,
                     interpret: bool = False):
-    """q: (B, H, S, hd); k, v: (B, KV, S, hd).  Returns (B, H, S, hd)."""
-    b, h, s, hd = q.shape
-    kv = k.shape[1]
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd).  Returns (B, H, Sq, hd).
+
+    ``Sk`` may exceed ``Sq`` when the leading keys are a prepended
+    (cached-prefix) KV; ``q_offset`` is then the absolute position of query
+    row 0 — normally ``Sk - Sq`` — and causal masking compares absolute
+    positions.  ``q_offset=0`` with ``Sq == Sk`` is ordinary self-attention.
+    """
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
     assert h % kv == 0
     group = h // kv
-    bq = min(block_q, s)
-    bk = min(block_k, s)
-    n_q = pl.cdiv(s, bq)
-    n_k = pl.cdiv(s, bk)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    n_q = pl.cdiv(sq, bq)
+    n_k = pl.cdiv(sk, bk)
     scale = 1.0 / math.sqrt(hd)
 
-    qf = q.reshape(b * h, s, hd)
-    kf = k.reshape(b * kv, s, hd)
-    vf = v.reshape(b * kv, s, hd)
+    qf = q.reshape(b * h, sq, hd)
+    kf = k.reshape(b * kv, sk, hd)
+    vf = v.reshape(b * kv, sk, hd)
 
     def q_map(bh, qi, ki):
         return (bh, qi, 0)
@@ -101,8 +114,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return ((bh // h) * kv + (bh % h) // group, ki, 0)
 
     kernel = functools.partial(
-        _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
-        n_kv_blocks=n_k, seq_len=s)
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, n_kv_blocks=n_k, kv_len=sk)
 
     out = pl.pallas_call(
         kernel,
@@ -113,7 +126,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, bk, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((1, bq, hd), q_map),
-        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -121,4 +134,4 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(b, h, s, hd)
+    return out.reshape(b, h, sq, hd)

@@ -37,13 +37,17 @@ def use_ref() -> bool:
     return bool(os.environ.get("REPRO_FORCE_REF"))
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                   "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128):
+                    q_offset: int = 0, block_q: int = 128, block_k: int = 128):
+    """``q_offset`` > 0 runs suffix-only (chunked) prefill over prepended
+    KV — the kernel-level counterpart of the serving prefix-KV cache."""
     if use_ref():
-        return ref.attention_ref(q, k, v, causal=causal, window=window)
-    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
-                  block_k=block_k, interpret=use_interpret())
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                  block_q=block_q, block_k=block_k, interpret=use_interpret())
 
 
 @partial(jax.jit, static_argnames=("block_k",))

@@ -14,16 +14,19 @@ f32 = jnp.float32
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
-    """q: (B, H, S, hd); k, v: (B, KV, S, hd)."""
-    b, h, s, hd = q.shape
-    kv = k.shape[1]
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd).  ``q_offset`` places the
+    queries at absolute positions [q_offset, q_offset + Sq) of the key
+    sequence — the chunked-prefill-over-prepended-KV case (Sk > Sq)."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
     g = h // kv
-    qg = q.reshape(b, kv, g, s, hd).astype(f32) / math.sqrt(hd)
+    qg = q.reshape(b, kv, g, sq, hd).astype(f32) / math.sqrt(hd)
     scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(f32))
-    rows = jnp.arange(s)[:, None]
-    cols = jnp.arange(s)[None, :]
-    mask = jnp.ones((s, s), bool)
+    rows = jnp.arange(sq)[:, None] + q_offset
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
     if causal:
         mask &= cols <= rows
     if window:
@@ -31,7 +34,7 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(f32))
-    return out.reshape(b, h, s, hd).astype(q.dtype)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)
 
 
 def decode_attention_ref(q, k_cache, v_cache, pos):

@@ -165,6 +165,38 @@ def _attn_decode(p, x, cfg, angles, cache: KVCache, position):
     return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
 
 
+def _attn_cont(p, x, cfg, angles, cache: KVCache, reserve: int = 0):
+    """Continued (chunked) prefill over prepended cached KV — the prefix-KV
+    reuse path: the new tokens' queries attend causally over
+    ``[cached KV; own KV]`` with absolute query offset = cached length.
+    Cached KV may be batch-1 (a shared prefix broadcast over the batch);
+    causality makes this exactly the attention each new position would see in
+    a monolithic prefill of the full sequence.  Full attention only (the
+    ring placement of sliding-window caches is not supported here), and
+    einsum/bf16 impls only: qchunk's scan-blocked softmax has a different
+    reduction order, so silently substituting bf16 here would break the
+    bitwise chunked-prefill-equals-monolithic contract."""
+    from .layers import gqa_attention_bf16
+    if cfg.attn_impl not in ("einsum", "bf16"):
+        raise NotImplementedError(
+            f"prefill_cont requires attn_impl 'einsum' or 'bf16', got "
+            f"{cfg.attn_impl!r}")
+    q, k, v = _qkv(p, x, cfg, angles)
+    b, s = x.shape[:2]
+    start = cache.k.shape[1]
+    kc, vc = cache.k, cache.v
+    if kc.shape[0] != b:
+        kc = jnp.broadcast_to(kc, (b,) + kc.shape[1:])
+        vc = jnp.broadcast_to(vc, (b,) + vc.shape[1:])
+    k_all = jnp.concatenate([kc, k], axis=1)
+    v_all = jnp.concatenate([vc, v], axis=1)
+    mask = causal_mask(s, start + s, 0, q_offset=start)
+    fn = gqa_attention_bf16 if cfg.attn_impl == "bf16" else gqa_attention
+    out = fn(q, k_all, v_all, mask)
+    return (out.reshape(b, s, -1) @ p["wo"],
+            KVCache.from_prefill(k_all, v_all, 0, reserve))
+
+
 def _cross_attn(p, x, cfg, enc_kv=None, enc_out=None):
     """Cross-attention: q from x (no rope), k/v from encoder output (cached
     after prefill)."""
@@ -193,10 +225,20 @@ def apply_block(kind: str, cfg: ModelConfig, p, x, ctx, cache, mode: str):
         return x + rs * branch
 
     new_cache = cache
+    if mode == "prefill_cont" and kind != "attn":
+        # 'moe' is full-attention but its expert capacity is ranked ACROSS
+        # the batch, so suffix-only dispatch would differ from a monolithic
+        # prefill — reject rather than silently break equivalence
+        raise NotImplementedError(
+            f"prefill_cont (prefix-KV reuse) supports pure full-attention "
+            f"'attn' stacks only, got {kind!r}")
     if kind in ("attn", "swa", "moe", "moe_swa", "enc"):
         h = rms_norm(x, p["norm1"], eps)
         if mode == "decode":
             a, new_cache = _attn_decode(p, h, cfg, angles, cache, ctx["position"])
+        elif mode == "prefill_cont":
+            a, new_cache = _attn_cont(p, h, cfg, angles, cache,
+                                      ctx.get("reserve", 0))
         else:
             a, (k, v) = _attn_seq(p, h, cfg, angles, window, bidir=(kind == "enc"))
             if mode == "prefill":
@@ -312,7 +354,7 @@ def apply_stack(kind: str, cfg: ModelConfig, stack, x, ctx, cache=None,
         body = jax.checkpoint(body)
 
     unroll = True if cfg.scan_unroll else 1
-    if mode == "decode":
+    if mode in ("decode", "prefill_cont"):
         return jax.lax.scan(body, x, (stack, cache), unroll=unroll)
     # train & prefill start cache-less; prefill emits per-layer caches as ys
     x_out, ys = jax.lax.scan(lambda xc, p: body(xc, (p, None)), x, stack,

@@ -116,6 +116,16 @@ class LM:
                 pos_arr = jnp.broadcast_to(pos_arr, (3, b, 1))
             ctx["angles"] = self._angles(pos_arr, 1, b)
             ctx["position"] = position
+        elif mode == "prefill_cont":
+            # continued prefill: the new tokens sit at absolute positions
+            # [cached_len, cached_len + s); cached length is static from the
+            # cache shape (stacked KVCache leaves are (n, B, S_cached, KV, hd))
+            pos = batch.get("positions")
+            if pos is None:
+                start = caches[0].k.shape[2]
+                pos = jnp.broadcast_to(
+                    start + jnp.arange(s, dtype=jnp.int32), (b, s))
+            ctx["angles"] = self._angles(pos, s, b)
         else:
             ctx["angles"] = self._angles(batch.get("positions"), s, b)
         enc_out = self._encode(params, batch, ctx) if mode != "decode" else None
@@ -179,6 +189,23 @@ class LM:
         """Ingest the full context; returns (last_logits (B, V), caches).
         ``reserve`` extra full-attention cache slots for subsequent decode."""
         x, caches = self.forward(params, batch, mode="prefill", reserve=reserve)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def prefill_cont(self, params, caches, batch, reserve: int = 0):
+        """Continue a prefill on top of cached KV (prefix-KV reuse): ingest
+        ``batch`` (S new tokens per row) at absolute positions starting at
+        the cached length; returns (last_logits (B, V), caches over the full
+        prefix+suffix sequence).  ``caches`` must come from a prior
+        :meth:`prefill` with ``reserve=0`` (exact-length full-attention
+        caches); batch-1 caches broadcast over the batch dim — the
+        shared-prefix case.  Pure-'attn' decoder stacks with einsum/bf16
+        attention only — anything whose monolithic prefill is not a pure
+        per-row function (MoE capacity ranking, qchunk reduction order,
+        recurrent state) raises NotImplementedError instead of silently
+        breaking the chunked-prefill-equals-monolithic contract."""
+        x, caches = self.forward(params, batch, mode="prefill_cont",
+                                 caches=caches, reserve=reserve)
         logits = self._head(params, x[:, -1:, :])[:, 0]
         return logits, caches
 

@@ -17,12 +17,24 @@ launch/serve.py.  Read-outs follow standard logit-probe practice:
    what makes listwise calls cheaper than k pointwise calls — the shared
    instruction prefix is tokenized/prefilled once per row, exactly the
    batching economics the paper's external paths exploit).
+
+Prefix-KV cache: probe prompts arrive as ``(shared_prefix, per_key_suffix)``
+pairs (plain strings still work, uncached).  The engine prefills each
+distinct ``(prefix token ids, absolute start position)`` region ONCE, holds
+its per-layer KV in an LRU, and runs suffix-only prefill on top of the
+broadcast cached KV — so a quicksort partition round prefills its pivot
+block once instead of once per row.  Because the model has no PAD attention
+mask, a row's logits depend on its left-padded length; keying the cache on
+the absolute start position (equivalently the PAD count of the row's
+padded-length class) keeps cached execution bit-identical to monolithic
+prefill.  See DESIGN.md "Prefix-KV cache".
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +47,31 @@ TOK_A, TOK_B = ord("A"), ord("B")
 TOK_HI, TOK_LO = ord("9"), ord("0")
 TOK_YES, TOK_NO = ord("Y"), ord("N")
 
+# a probe prompt: plain string, or a (shared_prefix, per_key_suffix) pair —
+# core.oracles.base.PromptParts is such a pair (the full prompt is the
+# concatenation; the pair form additionally enables prefix-KV reuse)
+Prompt = Union[str, tuple]
+
 
 @dataclass
 class ServeStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     calls: int = 0
+    # prefix-KV cache counters: hits/misses are per entry lookup;
+    # fill_submissions counts the region-prefill forward passes (kept out
+    # of ``calls``, which counts PROBE submissions); tokens_saved is the
+    # padded prefill token count avoided vs monolithic whole-prompt
+    # submissions, net of fill costs.
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_fill_submissions: int = 0
+    prefix_tokens_saved: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        total = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / total if total else 0.0
 
 
 def _next_pow2(x: int) -> int:
@@ -49,7 +80,8 @@ def _next_pow2(x: int) -> int:
 
 class ServeEngine:
     def __init__(self, lm: LM, params, max_new_tokens: int = 32,
-                 bucket_shapes: bool = True, max_probe_batch: int = 256):
+                 bucket_shapes: bool = True, max_probe_batch: int = 256,
+                 prefix_cache_size: int = 64):
         self.lm = lm
         self.params = params
         self.tok = ByteTokenizer()
@@ -68,23 +100,58 @@ class ServeEngine:
         # rounds (pointwise over thousands of keys) cannot build one
         # device-filling prefill batch.
         self.max_probe_batch = max_probe_batch
+        # Prefix-KV cache: LRU of per-layer KV for distinct
+        # (prefix token ids, absolute start position) regions; 0 disables.
+        # Only full-attention token-input decoder stacks qualify — other
+        # archs silently fall back to monolithic prefill.
+        self.prefix_cache_size = prefix_cache_size
+        self.prefix_cache_enabled = (
+            prefix_cache_size > 0 and self._supports_prefix_cache())
+        self._prefix_lru: OrderedDict[tuple, object] = OrderedDict()
         self.stats = ServeStats()
         self._prefill = jax.jit(partial(lm.prefill, reserve=max_new_tokens))
         self._decode = jax.jit(lm.decode_step)
+        # prefix regions need exact-length caches (reserve=0) so the suffix
+        # lands at the right absolute positions
+        self._prefill_exact = jax.jit(partial(lm.prefill, reserve=0))
+        self._prefill_cont = jax.jit(lm.prefill_cont)
         self._embed_cache: dict = {}
 
+    def _supports_prefix_cache(self) -> bool:
+        # bit-identity requires every layer's output for a row to be a pure
+        # function of that row and its own sequence: einsum/bf16 attention
+        # maps 1:1 onto _attn_cont, but qchunk's scan-blocked softmax has a
+        # different reduction order, and MoE dispatch is capacity-ranked
+        # ACROSS the batch (a row's logits depend on its batch-mates), so
+        # both fall back to monolithic prefill, like non-attention kinds
+        cfg = self.lm.cfg
+        return (cfg.input_mode == "tokens" and not cfg.enc_pattern
+                and not cfg.mrope_sections
+                and cfg.attn_impl in ("einsum", "bf16")
+                and all(kind == "attn" for kind, _ in cfg.pattern))
+
     # ------------------------------------------------------------- tokenize
-    def _batch_tokens(self, prompts: Sequence[str]) -> np.ndarray:
-        ids = [self.tok.encode(p) for p in prompts]
-        maxlen = max(len(i) for i in ids)
+    def _pad_class(self, length: int) -> int:
+        return _next_pow2(max(length, 16)) if self.bucket_shapes else length
+
+    def _pad_ids(self, ids: Sequence[Sequence[int]],
+                 maxlen: Optional[int] = None) -> np.ndarray:
+        """Left-pad token-id rows into a (rows, maxlen) array, bucketing both
+        dims to powers of two when ``bucket_shapes``."""
+        if maxlen is None:
+            maxlen = max(len(i) for i in ids)
+            if self.bucket_shapes:
+                maxlen = _next_pow2(max(maxlen, 16))
         rows = len(ids)
         if self.bucket_shapes:
-            maxlen = _next_pow2(max(maxlen, 16))
             rows = _next_pow2(rows)
         arr = np.full((rows, maxlen), PAD, np.int32)
         for r, i in enumerate(ids):
             arr[r, maxlen - len(i):] = i          # left-pad: last pos = live
         return arr
+
+    def _batch_tokens(self, prompts: Sequence[str]) -> np.ndarray:
+        return self._pad_ids([self.tok.encode(p) for p in prompts])
 
     def _make_batch(self, tokens: np.ndarray) -> dict:
         cfg = self.lm.cfg
@@ -101,7 +168,17 @@ class ServeEngine:
         return batch
 
     # --------------------------------------------------------------- probes
-    def submit_probes(self, prompts: Sequence[str],
+    @staticmethod
+    def _parts(prompt: Prompt) -> tuple[Optional[str], str]:
+        """Normalize a probe prompt to (shared_prefix_or_None, suffix)."""
+        if isinstance(prompt, str):
+            return None, prompt
+        prefix, suffix = prompt
+        if not prefix or not suffix:
+            return None, prefix + suffix
+        return prefix, suffix
+
+    def submit_probes(self, prompts: Sequence[Prompt],
                       max_batch: Optional[int] = None) -> np.ndarray:
         """THE probe pathway: run a round of independent single-token probes
         as one (or, when ``max_batch`` bounds padded batch size, a few
@@ -116,45 +193,202 @@ class ServeEngine:
         classes in one submission.  The model has no PAD attention mask, so
         a row's logits depend on its padded length; same-class grouping
         makes each prompt's padding a function of its own length only —
-        batched results are bit-identical to sequential point submissions."""
+        batched results are bit-identical to sequential point submissions.
+
+        Structured ``(prefix, suffix)`` prompts additionally ride the
+        prefix-KV cache (when enabled): rows sharing (class, prefix ids,
+        total length) — and therefore the same absolute prefix start — are
+        executed as suffix-only prefill over one cached prefix region."""
         n = len(prompts)
         if n == 0:
             return np.zeros((0, self.lm.cfg.vocab_size), np.float32)
         if max_batch is None:
             max_batch = self.max_probe_batch
-        by_class: dict[int, list[int]] = {}
+        plain: dict[int, list[int]] = {}           # class -> indices
+        structured: dict[int, list[tuple]] = {}    # class -> (idx, pids, sids)
+        enc: list = [None] * n                     # per-index full token ids
         for i, p in enumerate(prompts):
-            ln = len(self.tok.encode(p))
-            cls = _next_pow2(max(ln, 16)) if self.bucket_shapes else ln
-            by_class.setdefault(cls, []).append(i)
-        groups = []
-        for cls in sorted(by_class):
-            idx = by_class[cls]
+            prefix, suffix = self._parts(p)
+            if prefix is not None and self.prefix_cache_enabled:
+                pids = tuple(self.tok.encode(prefix))
+                sids = self.tok.encode(suffix, bos=False)
+                enc[i] = list(pids) + sids
+                structured.setdefault(
+                    self._pad_class(len(enc[i])), []).append((i, pids, sids))
+            else:
+                enc[i] = self.tok.encode(suffix if prefix is None
+                                         else prefix + suffix)
+                plain.setdefault(self._pad_class(len(enc[i])), []).append(i)
+        out = np.zeros((n, self.lm.cfg.vocab_size), np.float32)
+
+        # Prefix-cache routing policy (per padded-length class): a row rides
+        # the prefix path only when its (prefix, start) entry is already
+        # cached or at least one class-mate shares it — otherwise the fill
+        # would cost as much as the monolithic row.  Demoted rows join the
+        # class's plain submission; both pathways are bit-identical to
+        # monolithic prefill, so routing never changes results.
+        window_jobs: list[tuple] = []              # (cls, lw, rows)
+        for cls in sorted(structured):
+            rows = structured[cls]
+            counts: dict[tuple, int] = {}
+            for _i, pids, sids in rows:
+                key = (pids, cls - len(pids) - len(sids))
+                counts[key] = counts.get(key, 0) + 1
+            selected, lw = [], 0
+            for i, pids, sids in rows:
+                key = (pids, cls - len(pids) - len(sids))
+                if key in self._prefix_lru or counts[key] >= 2:
+                    selected.append((i, key))
+                    lw = max(lw, len(sids))
+                else:
+                    plain.setdefault(cls, []).append(i)
+            if not selected:
+                continue
+            # uniform per-class window: bucket the suffix span so a handful
+            # of compiled (rows, lw) shapes serve every round; rows shorter
+            # than lw recompute a few of their own prefix-tail tokens, which
+            # is bit-identical (causal KV slicing is exact at any split)
+            lw = _next_pow2(max(lw, 8)) if self.bucket_shapes else lw
+            if lw >= cls:                          # no cached span left
+                plain.setdefault(cls, []).extend(i for i, _ in selected)
+                continue
+            window_jobs.append((cls, lw, selected))
+
+        def chunked(idx):
             # max_batch None here means the engine was built with
             # max_probe_batch=None: explicitly unbounded submissions
             step = len(idx) if max_batch is None else max_batch
-            groups.extend(idx[i:i + step] for i in range(0, len(idx), step))
-        out = np.zeros((n, self.lm.cfg.vocab_size), np.float32)
-        for g in groups:
-            tokens = self._batch_tokens([prompts[i] for i in g])
-            logits, _ = self._prefill(self.params, self._make_batch(tokens))
-            self.stats.prefill_tokens += int(tokens.size)
-            self.stats.calls += 1
-            out[np.asarray(g)] = np.asarray(
-                logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
+            return (idx[i:i + step] for i in range(0, len(idx), step))
+
+        for cls in sorted(plain):
+            for g in chunked(sorted(plain[cls])):
+                tokens = self._pad_ids([enc[i] for i in g], maxlen=cls)
+                logits, _ = self._prefill(self.params,
+                                          self._make_batch(tokens))
+                self.stats.prefill_tokens += int(tokens.size)
+                self.stats.calls += 1
+                out[np.asarray(g)] = np.asarray(
+                    logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
+        for cls, lw, selected in window_jobs:
+            entries = self._fill_prefix_entries(cls,
+                                                {key for _, key in selected})
+            for g in chunked(selected):
+                idx = [i for i, _ in g]
+                logits = self._run_window(cls, lw, [enc[i] for i in idx],
+                                          [key for _, key in g], entries)
+                out[np.asarray(idx)] = logits
         return out
 
-    def last_logits(self, prompts: Sequence[str]) -> np.ndarray:
+    def _fill_prefix_entries(self, cls: int, keys: set) -> dict:
+        """Prefill every missing (prefix ids, start) region of a class once,
+        batching fills of equal region length into one submission; cache the
+        per-entry KV in the LRU.  A region is ``PAD * pad + prefix`` — the
+        exact content of positions [0, start) of every padded row using it,
+        which is what makes cached execution bit-identical.  Returns
+        {key: caches} DIRECT references for every requested key, so a round
+        needing more entries than ``prefix_cache_size`` survives its own
+        LRU evictions."""
+        refs: dict[tuple, object] = {}
+        by_len: dict[int, list[tuple]] = {}
+        for key in sorted(keys):
+            if key in self._prefix_lru:
+                self._prefix_lru.move_to_end(key)
+                refs[key] = self._prefix_lru[key]
+                self.stats.prefix_hits += 1
+                continue
+            pids, pad = key
+            by_len.setdefault(pad + len(pids), []).append(key)
+        step = self.max_probe_batch or max(
+            (len(b) for b in by_len.values()), default=1)
+        for region_len in sorted(by_len):
+            # honor the engine's memory ceiling, then bucket the fill's row
+            # count like every other submission, so varying miss counts
+            # reuse one compiled program per region length (the length
+            # itself must stay exact — it IS the suffix start position);
+            # dummy all-PAD rows are discarded
+            pending = by_len[region_len]
+            for batch in (pending[i:i + step]
+                          for i in range(0, len(pending), step)):
+                self.stats.prefix_misses += len(batch)
+                self.stats.prefix_fill_submissions += 1
+                rows_p = (_next_pow2(len(batch)) if self.bucket_shapes
+                          else len(batch))
+                arr = np.full((rows_p, region_len), PAD, np.int32)
+                for r, (pids, pad) in enumerate(batch):
+                    arr[r, pad:] = pids
+                _, caches = self._prefill_exact(self.params,
+                                               self._make_batch(arr))
+                self.stats.prefill_tokens += int(arr.size)
+                self.stats.prefix_tokens_saved -= int(arr.size)
+                for r, key in enumerate(batch):
+                    entry = jax.tree.map(
+                        lambda l, r=r: l if l.ndim == 2 else l[:, r:r + 1],
+                        caches)
+                    self._prefix_lru[key] = entry
+                    refs[key] = entry
+                while len(self._prefix_lru) > self.prefix_cache_size:
+                    self._prefix_lru.popitem(last=False)
+        return refs
+
+    def _run_window(self, cls: int, lw: int, full_ids: list,
+                    keys: list, entries: dict) -> np.ndarray:
+        """One suffix-window submission: every row attends over its own
+        cached-KV slice [0, cls - lw) (gathered per row from the round's
+        ``entries`` references) plus the recomputed window tokens
+        [cls - lw, cls).  Bit-identical to a monolithic padded prefill of
+        the full rows."""
+        r_star = cls - lw
+        uniq: list = []
+        uniq_of: dict[tuple, int] = {}
+        for key in keys:
+            if key not in uniq_of:
+                uniq_of[key] = len(uniq)
+                uniq.append(entries[key])
+        rows = len(full_ids)
+        rows_p = _next_pow2(rows) if self.bucket_shapes else rows
+        arr = np.full((rows_p, lw), PAD, np.int32)
+        for r, ids in enumerate(full_ids):
+            row = [PAD] * (cls - len(ids)) + list(ids)  # left-padded full row
+            arr[r] = row[r_star:]
+        eidx = np.zeros((rows_p,), np.int32)
+        eidx[:rows] = [uniq_of[k] for k in keys]   # dummy rows reuse entry 0
+
+        def cat(*leaves):
+            if leaves[0].ndim == 2:                # stacked pos: arange(R)
+                return leaves[0][:, :r_star]
+            return jnp.concatenate([l[:, :, :r_star] for l in leaves], axis=1)
+
+        assembled = jax.tree.map(cat, *uniq)
+        idx = jnp.asarray(eidx)
+        assembled = jax.tree.map(
+            lambda l: l if l.ndim == 2 else jnp.take(l, idx, axis=1),
+            assembled)
+        logits, _ = self._prefill_cont(self.params, assembled,
+                                       self._make_batch(arr))
+        self.stats.prefill_tokens += int(arr.size)
+        self.stats.calls += 1
+        # monolithic baseline: cls tokens per padded row of this submission
+        self.stats.prefix_tokens_saved += rows_p * cls - int(arr.size)
+        return np.asarray(logits.astype(jnp.float32))[:rows]
+
+    def last_logits(self, prompts: Sequence[Prompt]) -> np.ndarray:
         return self.submit_probes(prompts)
 
     def score(self, texts: Sequence[str], criteria: str) -> list[float]:
-        prompts = [f"Criteria: {criteria}\nItem: {t}\nRating:" for t in texts]
+        prompts = [(f"Criteria: {criteria}\nItem:", f" {t}\nRating:")
+                   for t in texts]
         logits = self.submit_probes(prompts)
         return [float(l[TOK_HI] - l[TOK_LO]) for l in logits]
 
+    def _compare_parts(self, a: str, b: str, criteria: str) -> tuple[str, str]:
+        # the shared block (criteria + Passage B — quicksort's pivot) leads,
+        # so every row of a partition round reuses one prefix-KV entry
+        return (f"Criteria: {criteria}\nPassage B: {b}\n",
+                f"Passage A: {a}\nWhich ranks higher? Answer:")
+
     def _compare_prompt(self, a: str, b: str, criteria: str) -> str:
-        return (f"Criteria: {criteria}\nPassage A: {a}\nPassage B: {b}\n"
-                f"Which ranks higher? Answer:")
+        prefix, suffix = self._compare_parts(a, b, criteria)
+        return prefix + suffix
 
     def compare(self, a: str, b: str, criteria: str) -> int:
         return self.compare_many([(a, b)], criteria)[0]
@@ -163,19 +397,19 @@ class ServeEngine:
                      criteria: str) -> list[int]:
         """A round of independent comparisons in one probe submission."""
         logits = self.submit_probes(
-            [self._compare_prompt(a, b, criteria) for a, b in pairs])
+            [self._compare_parts(a, b, criteria) for a, b in pairs])
         return [1 if l[TOK_A] > l[TOK_B] else -1 for l in logits]
 
-    def yes_no(self, prompt: str) -> bool:
+    def yes_no(self, prompt: Prompt) -> bool:
         return self.yes_no_many([prompt])[0]
 
-    def yes_no_many(self, prompts: Sequence[str]) -> list[bool]:
+    def yes_no_many(self, prompts: Sequence[Prompt]) -> list[bool]:
         """A round of independent Y/N probes in one probe submission."""
         logits = self.submit_probes(prompts)
         return [bool(l[TOK_YES] > l[TOK_NO]) for l in logits]
 
     def rank_window(self, texts: Sequence[str], criteria: str) -> list[int]:
-        """Permutation (ascending by score) from one shared-criteria batch."""
+        """Permutation (ascending by score) from one shared-prefix batch."""
         scores = self.score(texts, criteria)
         return list(np.argsort(np.asarray(scores), kind="stable"))
 

@@ -1,11 +1,14 @@
 """Request scheduler: queue + length-bucketed batching over the engine.
 
-Batch-level continuous batching: requests are drained in arrival order,
-grouped into (max_batch)-sized batches sorted by prompt length (minimizes
-padding waste), and each batch runs prefill+decode to completion.  Token-
-level interleaving (paged attention) is documented as out of scope in
-DESIGN.md; batch-level scheduling is what the ORDER BY workloads need — the
-access paths submit many short, similar-length scoring prompts.
+Batch-level continuous batching: each drain sorts the WHOLE backlog by
+prompt length and then chunks it into (max_batch)-sized batches, so
+similar-length prompts share a batch and padding waste is minimized (an
+earlier version sorted only within arrival-order chunks, which padded every
+mixed-length batch up to its longest straggler).  Each batch runs
+prefill+decode to completion.  Token-level interleaving (paged attention)
+is documented as out of scope in DESIGN.md; batch-level scheduling is what
+the ORDER BY workloads need — the access paths submit many short,
+similar-length scoring prompts.
 
 Two request classes share the queue discipline:
 
@@ -69,12 +72,14 @@ class BatchScheduler:
 
     def run(self) -> dict[int, str]:
         """Drain the queue; returns {rid: output} for THIS drain only.
-        (Earlier drains remain queryable via ``self.completed``.)"""
+        (Earlier drains remain queryable via ``self.completed``.)  The whole
+        backlog is sorted by prompt length BEFORE chunking into batches, so
+        each padded batch contains similar-length prompts."""
         drained: dict[int, str] = {}
-        while self.queue:
-            batch = self.queue[: self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            batch.sort(key=lambda r: len(r.prompt))
+        pending, self.queue = self.queue, []
+        pending.sort(key=lambda r: len(r.prompt))
+        for i in range(0, len(pending), self.max_batch):
+            batch = pending[i:i + self.max_batch]
             outs = self.engine.generate([r.prompt for r in batch],
                                         max_new=max(r.max_new for r in batch),
                                         max_new_per=[r.max_new for r in batch])

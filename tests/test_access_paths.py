@@ -52,6 +52,29 @@ def test_limit_k_reduces_calls():
         assert o_lim.ledger.n_calls < o_full.ledger.n_calls, path
 
 
+@pytest.mark.parametrize("coalesce", [False, True])
+def test_ext_merge_limit_k_stops_windows_at_cap(coalesce):
+    """Alg. 5 + Sec. 3.3: a merge emits at most K items and issues NO
+    ranking windows past them; carried-forward odd runs are capped too, so
+    run sizes stop growing at K.  Empirical calls must track the Table-1
+    LIMIT-K asymptotic (a full-merge-then-truncate implementation lands at
+    the unlimited count instead)."""
+    from repro.core.access_paths.merge import ExternalMergeSort
+    keys = keys_n(65, seed=4)                     # odd run count each round
+    params = PathParams(batch_size=4, coalesce=coalesce)
+    results, calls = {}, {}
+    for k in (4, None):
+        o = ExactOracle()
+        res = make_path("ext_merge", params).execute(
+            keys, o, SortSpec("v", True, k))
+        results[k], calls[k] = res.uids(), o.ledger.n_calls
+    assert results[4] == results[None][:4]        # identical first-K output
+    est_lim = ExternalMergeSort.est_calls(65, 4, params)
+    est_full = ExternalMergeSort.est_calls(65, None, params)
+    assert calls[4] <= 1.6 * est_lim < est_full <= calls[None] * 1.6
+    assert calls[4] < 0.6 * calls[None]
+
+
 def test_table1_call_bounds():
     """Empirical call counts within a small constant of Table 1."""
     n, m = 64, 4

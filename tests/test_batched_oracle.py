@@ -142,6 +142,47 @@ def test_paths_ledger_identical_with_and_without_rounds(path, mk):
     assert norm(o_on) == norm(o_off)
 
 
+class _FlakyScore(ExactOracle):
+    """score_batch fails structurally (after billing) when the chunk
+    contains ``bad_uid`` — deterministic, like a malformed-output key."""
+
+    def __init__(self, bad_uid):
+        super().__init__()
+        self.bad_uid = bad_uid
+
+    def score_batch(self, keys, criteria):
+        from repro.core.types import InvalidOutputError
+        if any(k.uid == self.bad_uid for k in keys):
+            self._charge_score(keys)
+            raise InvalidOutputError("structural failure")
+        return super().score_batch(keys, criteria)
+
+
+def test_caching_round_duplicate_of_failing_element_rebills():
+    """Regression: an intra-round duplicate of a structurally-failing
+    element must re-reach (and re-bill) the backend — a sequential loop
+    would miss the cache again because None is never cached — instead of
+    being counted as a hit and served the uncached None for free."""
+    keys = _keys(6)
+    bad, good = [keys[0]], [keys[1], keys[2]]
+    batched = CachingOracle(_FlakyScore(keys[0].uid))
+    got = batched.try_score_batches([bad, good, bad], "c")
+    assert got[0] is None and got[2] is None
+    assert got[1] == pytest.approx([k.latent for k in good])
+    # sequential single-element rounds: the reference ledger + counters
+    seq = CachingOracle(_FlakyScore(keys[0].uid))
+    ref = [seq.try_score_batches([c], "c")[0] for c in (bad, good, bad)]
+    assert [r is None for r in ref] == [g is None for g in got]
+    assert _ledger_tuple(batched.inner) == _ledger_tuple(seq.inner)
+    assert (batched.hits, batched.misses) == (seq.hits, seq.misses) == (0, 3)
+    # duplicates of a SUCCESSFUL element stay free hits, in-round or not
+    for oracle in (batched, seq):
+        h0, m0, calls0 = oracle.hits, oracle.misses, oracle.inner.ledger.n_calls
+        oracle.try_score_batches([good, good], "c")
+        assert oracle.inner.ledger.n_calls == calls0     # all served from cache
+        assert (oracle.hits, oracle.misses) == (h0 + 2, m0)
+
+
 def test_before_many_split_fallback_degrades_to_point_calls():
     from repro.core.access_paths.base import Ordering
     from repro.core.types import InvalidOutputError

@@ -41,6 +41,35 @@ def test_flash_attention(b, h, kv, s, hd, win, bq, bk, dtype):
                                np.asarray(want, np.float32), atol=atol)
 
 
+@pytest.mark.parametrize("b,h,kv,sq,sk,hd,bq,bk", [
+    (2, 4, 2, 64, 192, 64, 64, 64),
+    (1, 4, 4, 96, 256, 32, 64, 64),
+    (1, 2, 1, 32, 96, 64, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_prepended_kv(b, h, kv, sq, sk, hd, bq, bk, dtype):
+    """Chunked prefill over prepended KV: the kernel with q_offset = Sk - Sq
+    must match (a) the offset ref oracle and (b) the suffix rows of a
+    monolithic full-sequence flash attention — the prefix-KV cache
+    equivalence at the kernel level."""
+    ks = jax.random.split(RNG, 3)
+    off = sk - sq
+    q_full = jax.random.normal(ks[0], (b, h, sk, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, hd), dtype)
+    q = q_full[:, :, off:]
+    out = flash_attention(q, k, v, causal=True, q_offset=off,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=off)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+    full = ref.attention_ref(q_full, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(full[:, :, off:], np.float32),
+                               atol=atol)
+
+
 @pytest.mark.parametrize("b,h,kv,s,hd,fill,bk", [
     (2, 8, 2, 256, 64, 256, 64),
     (1, 4, 4, 128, 128, 100, 64),

@@ -1,0 +1,152 @@
+"""Prefix-KV cache: equivalence, accounting, and cache-mechanics tests.
+
+Invariants (see DESIGN.md "Prefix-KV cache"):
+
+ * cache-on execution is BIT-identical to cache-off (monolithic prefill) for
+   every probe — the cache is keyed on (prefix token ids, absolute start
+   position) under the left-pad scheme, and causal KV slicing is exact;
+ * therefore ``llm_order_by`` output order and the oracle ledger (calls +
+   tokens) are byte-identical with the cache on vs off, across all five
+   access paths and descending/LIMIT variants;
+ * the cache strictly reduces ``ServeStats.prefill_tokens`` and reports hit
+   rate + token savings;
+ * the LRU respects its bound; unsupported archs fall back silently.
+"""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
+from repro.core import as_keys, llm_order_by, PathParams, available_paths
+from repro.core.oracles.model_oracle import ModelOracle
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm_params, **kw):
+    from repro.serving import ServeEngine
+    lm, params = lm_params
+    return ServeEngine(lm, params, max_new_tokens=8, **kw)
+
+
+def _ledger_tuple(oracle):
+    return (oracle.ledger.n_calls, oracle.ledger.input_tokens,
+            oracle.ledger.output_tokens,
+            [(r.kind, r.n_keys) for r in oracle.ledger.records])
+
+
+@pytest.mark.parametrize("path", sorted(available_paths()))
+@pytest.mark.parametrize("desc,limit", [(False, None), (True, 5)])
+def test_order_and_ledger_identical_cache_on_vs_off(lm_params, path, desc,
+                                                    limit):
+    """Byte-identical llm_order_by output and identical ledgers with the
+    prefix cache on vs off, for every access path and direction/LIMIT."""
+    # variable-length keys: exercises per-length prefix starts
+    keys = as_keys([f"doc {'w' * (i % 4)}{i}" for i in range(10)],
+                   list(np.random.default_rng(7).standard_normal(10)))
+    out = {}
+    for size in (0, 64):
+        eng = _engine(lm_params, prefix_cache_size=size)
+        oracle = ModelOracle(eng)
+        res, _ = llm_order_by(keys, "relevance", oracle, path=path,
+                              params=PathParams(batch_size=3),
+                              descending=desc, limit=limit)
+        out[size] = (res.uids(), _ledger_tuple(oracle),
+                     eng.stats.prefill_tokens)
+    uids_off, ledger_off, toks_off = out[0]
+    uids_on, ledger_on, toks_on = out[64]
+    assert uids_on == uids_off
+    assert ledger_on == ledger_off
+    assert toks_on < toks_off          # the cache must actually save prefill
+
+
+def test_probe_logits_bitwise_identical_and_stats(lm_params):
+    eng_off = _engine(lm_params, prefix_cache_size=0)
+    eng_on = _engine(lm_params)
+    assert eng_on.prefix_cache_enabled and not eng_off.prefix_cache_enabled
+    # suffix lengths repeat (i % 3), so rows share (prefix, start) entries;
+    # a row whose start is unique in the round rides the plain path instead
+    # (the routing policy — both paths are bit-identical)
+    prompts = [("Criteria: c\nPassage B: pivot text\n",
+                f"Passage A: item {'x' * (i % 3)}\nWhich ranks higher? Answer:")
+               for i in range(6)]
+    a = eng_off.submit_probes(prompts)
+    b = eng_on.submit_probes(prompts)
+    assert (a == b).all()
+    assert eng_on.stats.prefix_misses >= 1
+    assert eng_on.stats.prefix_tokens_saved > 0
+    # a second round over the same prefixes is served from the LRU
+    b2 = eng_on.submit_probes(prompts)
+    assert (a == b2).all()
+    assert eng_on.stats.prefix_hits >= 1
+    assert 0.0 < eng_on.stats.prefix_hit_rate <= 1.0
+
+
+def test_sequential_equals_batched_with_cache(lm_params):
+    eng = _engine(lm_params)
+    prompts = [("Criteria: c\nItem:", f" thing {'y' * (2 * i)}\nRating:")
+               for i in range(5)]
+    batched = eng.submit_probes(prompts)
+    single = np.stack([eng.submit_probes([p])[0] for p in prompts])
+    assert (batched == single).all()
+
+
+def test_plain_string_prompts_bypass_cache(lm_params):
+    eng = _engine(lm_params)
+    p = ["Criteria: c\nItem: a\nRating:", "Criteria: c\nItem: bb\nRating:"]
+    logits = eng.submit_probes(p)
+    assert logits.shape[0] == 2
+    assert eng.stats.prefix_misses == 0 and eng.stats.prefix_hits == 0
+
+
+def test_structured_equals_plain_concatenation(lm_params):
+    """A (prefix, suffix) prompt yields bit-identical logits to the same
+    text submitted as one plain string (monolithic equivalence)."""
+    eng = _engine(lm_params)
+    parts = [("Criteria: c\nItem:", f" thing {i}\nRating:") for i in range(4)]
+    a = eng.submit_probes(parts)
+    b = eng.submit_probes([pre + suf for pre, suf in parts])
+    assert (a == b).all()
+
+
+def test_lru_bound_and_eviction(lm_params):
+    eng = _engine(lm_params, prefix_cache_size=2)
+    for i in range(4):  # 4 distinct prefixes, each shared by 2 rows
+        eng.submit_probes([(f"Criteria: c{i}\nItem:", " a\nRating:"),
+                           (f"Criteria: c{i}\nItem:", " b\nRating:")])
+    assert len(eng._prefix_lru) <= 2
+
+
+def test_round_larger_than_lru_survives_eviction(lm_params):
+    """Regression: one round needing more entries than prefix_cache_size
+    must not lose in-flight entries to its own evictions — window jobs hold
+    direct references, the LRU only serves cross-round reuse."""
+    eng_small = _engine(lm_params, prefix_cache_size=2)
+    eng_off = _engine(lm_params, prefix_cache_size=0)
+    prompts = [(f"Criteria: c{i}\nItem:", f" {t}\nRating:")
+               for i in range(3) for t in ("aa", "bb")]   # 3 entries, 2 rows each
+    a = eng_small.submit_probes(prompts)
+    b = eng_off.submit_probes(prompts)
+    assert (a == b).all()
+    assert len(eng_small._prefix_lru) <= 2
+
+
+def test_unsupported_arch_falls_back(lm_params):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    cfg = get_reduced("xlstm-1.3b")        # recurrent blocks: no KV regions
+    lm = LM(cfg)
+    eng = ServeEngine(lm, lm.init(jax.random.PRNGKey(0)), max_new_tokens=4)
+    assert not eng.prefix_cache_enabled
+    logits = eng.submit_probes([("Criteria: c\nItem:", " a\nRating:")])
+    assert logits.shape[0] == 1            # structured prompt still served

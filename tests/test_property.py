@@ -102,3 +102,51 @@ def test_ndcg_perfect_is_one(latents):
 def test_kendall_between_self_and_reverse(perm):
     assert kendall_tau_between(perm, perm) == 1.0
     assert kendall_tau_between(perm, perm[::-1]) == -1.0
+
+
+# --------------------------------------------------- round / cache equivalence
+oracle_makers = st.sampled_from(["exact", "reasoning", "factual"])
+
+
+def _mk_oracle(name):
+    from repro.core import SimulatedOracle
+    from repro.core.oracles.simulated import FACTUAL, REASONING
+    if name == "exact":
+        return ExactOracle()
+    return SimulatedOracle(REASONING if name == "reasoning" else FACTUAL)
+
+
+@given(latents=latents, path=paths, mk=oracle_makers, desc=st.booleans(),
+       m=st.integers(2, 6), v=st.integers(1, 3),
+       limit=st.one_of(st.none(), st.integers(1, 10)))
+@settings(**SETTINGS)
+def test_batched_rounds_equal_sequential_property(latents, path, mk, desc, m,
+                                                  v, limit):
+    """PROPERTY: every access path is byte-identical with round batching on
+    vs off (``PathParams.coalesce``) on every deterministic backend."""
+    keys = as_keys([f"k{i}" for i in range(len(latents))], latents)
+    spec = SortSpec("c", descending=desc, limit=limit)
+    on = make_path(path, PathParams(batch_size=m, votes=v,
+                                    coalesce=True)).execute(keys, _mk_oracle(mk), spec)
+    off = make_path(path, PathParams(batch_size=m, votes=v,
+                                     coalesce=False)).execute(keys, _mk_oracle(mk), spec)
+    assert on.uids() == off.uids()
+
+
+@given(latents=latents, path=paths, mk=oracle_makers, desc=st.booleans(),
+       m=st.integers(2, 6),
+       limit=st.one_of(st.none(), st.integers(1, 10)))
+@settings(**SETTINGS)
+def test_caching_wrapper_is_transparent_property(latents, path, mk, desc, m,
+                                                 limit):
+    """PROPERTY: wrapping any deterministic backend in CachingOracle (the
+    client-side output cache) never changes llm_order_by output — hits serve
+    exactly what the backend would recompute at temperature 0."""
+    from repro.core.oracles.cache import CachingOracle
+    keys = as_keys([f"k{i}" for i in range(len(latents))], latents)
+    spec = SortSpec("c", descending=desc, limit=limit)
+    params = PathParams(batch_size=m)
+    plain = make_path(path, params).execute(keys, _mk_oracle(mk), spec)
+    cached = make_path(path, params).execute(
+        keys, CachingOracle(_mk_oracle(mk)), spec)
+    assert plain.uids() == cached.uids()
