@@ -1,0 +1,127 @@
+"""Table 6 (repo-specific): paged continuous-batching decode vs lockstep.
+
+A judge-style mixed-length generation workload (many short verdicts, a few
+long rationale stragglers — the LLM-as-Judge traffic of Sec. 5.4) runs
+twice over one set of weights:
+
+ * **lockstep** — the padded batch loop: every batch decodes until its
+   longest row finishes, so short rows idle in their slots behind the
+   straggler (head-of-line blocking);
+ * **paged** — the continuous step loop over the block-paged KV pool:
+   finished rows retire and free their blocks immediately, queued requests
+   are admitted into the vacated slots between steps.
+
+The headline metric is **straggler waste**: ``decode_row_steps``
+(physical row-slots occupied across decode steps) minus ``decode_tokens``
+(useful tokens produced).  Acceptance: the paged loop wastes FEWER
+decode-row steps than lockstep, and its outputs are token-identical to the
+solo lockstep baseline per request (the bit-identity contract of
+DESIGN.md "Paged KV pool").
+
+    PYTHONPATH=src python -m benchmarks.table6_paged_decode [--json OUT] [N ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+MAX_NEW = 24
+
+
+def _engines():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return (ServeEngine(lm, params, max_new_tokens=MAX_NEW, pool_blocks=0),
+            ServeEngine(lm, params, max_new_tokens=MAX_NEW,
+                        max_decode_rows=8))
+
+
+def workload(n: int, seed: int = 0):
+    """n mixed-length judge requests: ~3/4 short verdicts (2-4 tokens),
+    ~1/4 long rationale stragglers (the full budget)."""
+    rng = np.random.default_rng(seed)
+    prompts, limits = [], []
+    for i in range(n):
+        straggler = i % 4 == 3
+        body = "criteria compliance of candidate ranking " + "x" * int(
+            rng.integers(0, 40))
+        prompts.append(f"Judge {i}: {body}\nVerdict:")
+        limits.append(MAX_NEW if straggler else int(rng.integers(2, 5)))
+    return prompts, limits
+
+
+def run(sizes: list[int]) -> list[dict]:
+    from repro.serving import BatchScheduler
+    eng_lock, eng_paged = _engines()
+    rows: list[dict] = []
+    for n in sizes:
+        prompts, limits = workload(n)
+        out = {}
+        for mode, eng in (("lockstep", eng_lock), ("paged", eng_paged)):
+            sched = BatchScheduler(eng, max_batch=8,
+                                   paged=(mode == "paged"))
+            for p, l in zip(prompts, limits):
+                sched.submit(p, max_new=l)
+            s0 = (eng.stats.decode_row_steps, eng.stats.decode_tokens)
+            t0 = time.perf_counter()
+            drained = sched.run()
+            dt = time.perf_counter() - t0
+            row_steps = eng.stats.decode_row_steps - s0[0]
+            useful = eng.stats.decode_tokens - s0[1]
+            out[mode] = dict(
+                outputs=[drained[r] for r in sorted(drained)],
+                row_steps=row_steps, useful_tokens=useful,
+                wasted_row_steps=row_steps - useful,
+                seconds=round(dt, 3),
+                tok_per_s=round(useful / max(dt, 1e-9), 1),
+            )
+        # token identity: paged == solo lockstep per request
+        solo = [eng_lock.generate_lockstep([p], max_new_per=[l])[0]
+                for p, l in zip(prompts, limits)]
+        identical = out["paged"]["outputs"] == solo
+        row = dict(
+            n=n, max_new=MAX_NEW,
+            useful_tokens=out["paged"]["useful_tokens"],
+            lockstep_row_steps=out["lockstep"]["row_steps"],
+            paged_row_steps=out["paged"]["row_steps"],
+            lockstep_wasted=out["lockstep"]["wasted_row_steps"],
+            paged_wasted=out["paged"]["wasted_row_steps"],
+            lockstep_tok_per_s=out["lockstep"]["tok_per_s"],
+            paged_tok_per_s=out["paged"]["tok_per_s"],
+            token_identical=identical,
+        )
+        rows.append(row)
+        assert identical, f"paged outputs diverged from solo lockstep (n={n})"
+        assert row["paged_wasted"] < row["lockstep_wasted"], (
+            f"paged wasted {row['paged_wasted']} decode-row steps vs "
+            f"lockstep {row['lockstep_wasted']} (n={n}) — continuous "
+            f"batching must waste fewer")
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import parse_json_flag
+    argv, json_path = parse_json_flag(sys.argv[1:])
+    sizes = [int(a) for a in argv if a.isdigit()] or [24]
+    rows = run(sizes)
+    cols = ("n", "useful_tokens", "lockstep_row_steps", "paged_row_steps",
+            "lockstep_wasted", "paged_wasted", "lockstep_tok_per_s",
+            "paged_tok_per_s", "token_identical")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,15 @@ from .base import LLAMA70B, Oracle, PriceSheet, PromptCosts, PromptParts
 
 class ModelOracle(Oracle):
     def __init__(self, engine, prices: PriceSheet = LLAMA70B,
-                 costs: Optional[PromptCosts] = None):
+                 costs: Optional[PromptCosts] = None,
+                 judge_rationale_tokens: int = 0):
         super().__init__(prices=prices, costs=costs)
         self.engine = engine
+        # > 0: the judge free-decodes a rationale per candidate before the
+        # quality probe (Sec. 5.4's CoT judging) — a mixed-length generation
+        # workload served by the engine's continuous-batching loop; the
+        # candidates share one prefix-KV block run (criteria + sample)
+        self.judge_rationale_tokens = judge_rationale_tokens
 
     # -- billing helpers using real token counts -----------------------------
     def _real_tokens(self, text: str) -> int:
@@ -145,12 +151,29 @@ class ModelOracle(Oracle):
     def judge(self, keys: Sequence[Key], criteria: str,
               candidates: Sequence[Sequence[Key]]) -> int:
         self._charge_judge(keys, candidates)
+        listings = [" > ".join(k.text[:40] for k in cand[:10])
+                    for cand in candidates]
+        prefix = f"Criteria: {criteria}\nRanking:"
+        rationales = [""] * len(candidates)
+        if self.judge_rationale_tokens > 0 and candidates:
+            # free-decode a rationale per candidate ranking: candidate
+            # rationales are independent mixed-length generations, so they
+            # ride the continuous-batching loop (short verdicts retire
+            # early; the shared criteria prefix is one pinned block run)
+            rationales = self.engine.generate(
+                [PromptParts(prefix, f" {lst}\nJudge rationale:")
+                 for lst in listings],
+                max_new=self.judge_rationale_tokens)
+            for r in rationales:
+                self.ledger.charge("judge", 0,
+                                   self._real_tokens(r) if r else 1,
+                                   n_keys=0, tag="rationale")
         # score each candidate ranking as a whole via a quality probe prompt
         prompts = []
-        for cand in candidates:
-            listing = " > ".join(k.text[:40] for k in cand[:10])
-            prompts.append(PromptParts(f"Criteria: {criteria}\nRanking:",
-                                       f" {listing}\nQuality rating:"))
+        for lst, rat in zip(listings, rationales):
+            suffix = (f" {lst}\nQuality rating:" if not rat else
+                      f" {lst}\nRationale: {rat}\nQuality rating:")
+            prompts.append(PromptParts(prefix, suffix))
         logits = self.engine.last_logits(prompts)
         from ...serving.engine import TOK_HI, TOK_LO
         scores = [float(l[TOK_HI] - l[TOK_LO]) for l in logits]

@@ -1,11 +1,17 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-kernel              layer it accelerates
+kernel              layer it accelerates (paper anchor)
 ------------------  ----------------------------------------------------
-flash_attention     prefill/train attention (GQA + sliding window)
-decode_attention    serve decode over ring KV caches (flash-decode)
-topk_scores         value-based ORDER BY ... LIMIT K selection
-borda_count         pessimistic-optimizer consensus aggregation
+flash_attention     prefill/train attention, GQA + sliding window + chunked
+                    prefill over prepended prefix KV (serving lever of the
+                    external paths' shared-prefix batching, Sec. 3)
+decode_attention    serve decode over dense ring KV caches (flash-decode)
+paged_attention     serve decode over the block-paged KV pool (continuous
+                    batching for Sec. 5.4 judge generations)
+topk_scores         value-based ORDER BY ... LIMIT K selection (Sec. 3.1
+                    pointwise scores -> Table 1 LIMIT-K pushdown)
+borda_count         consensus aggregation of candidate rankings for the
+                    budget-aware optimizer's pessimistic strategy (Sec. 5)
 ssm_scan            Hymba Mamba heads (chunked selective scan)
 mlstm_scan          xLSTM matrix-memory blocks (chunkwise-parallel)
 moe_gating          Mixtral router top-k + dispatch ranks

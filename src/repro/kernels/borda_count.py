@@ -1,5 +1,7 @@
-"""Borda-count aggregation Pallas TPU kernel (pessimistic optimizer hot path
-at fleet scale: thousands of queries x R candidate ballots each).
+"""Borda-count aggregation Pallas TPU kernel — consensus aggregation of
+candidate rankings for the budget-aware optimizer's pessimistic strategy
+(Sec. 5; hot at fleet scale: thousands of queries x R candidate ballots
+each).
 
 TPU adaptation: GPU implementations scatter-add with atomics; TPUs have no
 scatter-atomics, so the positional-points accumulation is recast as a

@@ -1,5 +1,6 @@
 """Flash-decode Pallas TPU kernel: one query token against a (possibly ring)
-KV cache.
+DENSE KV cache — the lockstep decode path (paged_attention.py is the
+block-paged counterpart used by the continuous-batching loop).
 
 Grid (batch, kv_head, kv_blocks): the whole GQA query-head *group* for one
 KV head rides in a single (G, hd) VMEM tile (G = H/KV), so the MXU sees a

@@ -19,6 +19,7 @@ from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
 from .mlstm_scan import mlstm_scan as _mlstm
 from .moe_gating import moe_gating as _moe_gate
+from .paged_attention import paged_attention as _paged
 from .ssm_scan import ssm_scan as _ssm
 from .topk_scores import topk_scores as _topk
 
@@ -56,6 +57,22 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 256):
         return ref.decode_attention_ref(q, k_cache, v_cache, pos)
     return _decode(q, k_cache, v_cache, pos, block_k=block_k,
                    interpret=use_interpret())
+
+
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, tables, ctx_len):
+    """Flash-decode over the block-paged KV pool: per-sequence block tables
+    are scalar-prefetched so the kernel DMAs exactly the blocks a sequence
+    owns.  TPU-deployment counterpart of the engine's decode step — like
+    every kernel here, the model stack itself runs the XLA-level equivalent
+    (layers.paged_decode_attention_dense, which the bit-identity contract
+    needs); this is the pod-serving variant validated against the same
+    ref oracle."""
+    if use_ref():
+        return ref.paged_decode_attention_ref(q, k_pool, v_pool, tables,
+                                              ctx_len)
+    return _paged(q, k_pool, v_pool, tables, ctx_len,
+                  interpret=use_interpret())
 
 
 @partial(jax.jit, static_argnames=("k", "block_n"))

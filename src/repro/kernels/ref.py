@@ -51,6 +51,27 @@ def decode_attention_ref(q, k_cache, v_cache, pos):
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, tables, ctx_len):
+    """Paged decode oracle: gather each sequence's block run into a dense
+    view, then masked attention.  q: (B, H, hd); k_pool/v_pool
+    (NB, block_size, KV, hd); tables (B, MAXB) int32 block runs (0-padded —
+    block 0 is the pool's dummy); ctx_len (B,) int32 valid lengths."""
+    b, h, hd = q.shape
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    maxb = tables.shape[1]
+    g = h // kv
+    flat = tables.reshape(-1)
+    kg = jnp.take(k_pool, flat, axis=0).reshape(b, maxb * bs, kv, hd)
+    vg = jnp.take(v_pool, flat, axis=0).reshape(b, maxb * bs, kv, hd)
+    qg = q.reshape(b, kv, g, hd).astype(f32) / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kg.astype(f32))
+    valid = jnp.arange(maxb * bs)[None, :] < ctx_len[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vg.astype(f32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def topk_ref(scores, k: int):
     """scores (N,) -> (values desc (k,), indices (k,))."""
     v, i = jax.lax.top_k(scores.astype(f32), k)

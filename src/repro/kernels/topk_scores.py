@@ -1,5 +1,6 @@
 """Blocked top-k selection Pallas TPU kernel — the value-based
-``ORDER BY ... LIMIT K`` hot path (sort N pointwise scores, keep K).
+``ORDER BY ... LIMIT K`` hot path (Sec. 3.1 pointwise scoring + the
+Table 1 LIMIT-K pushdown: sort N pointwise scores, keep K).
 
 TPU adaptation of GPU warp-bitonic selection: the score vector is tiled into
 VPU-aligned blocks; each grid step extracts its block's local top-k by k

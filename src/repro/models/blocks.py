@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (KVCache, apply_rope, causal_mask, dense_init, dtype_of,
-                     f32, full_mask, gqa_attention, rms_norm, swiglu)
+from .layers import (KVCache, PagedKV, apply_rope, causal_mask, dense_init,
+                     dtype_of, f32, full_mask, gqa_attention,
+                     paged_decode_attention_dense, rms_norm, swiglu)
 from .moe import init_moe_params, moe_ffn
 from .ssm import (SSMState, init_ssm_params, init_ssm_state, ssm_prefill_state,
                   ssm_sequence, ssm_step)
@@ -165,6 +166,19 @@ def _attn_decode(p, x, cfg, angles, cache: KVCache, position):
     return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
 
 
+def _attn_decode_paged(p, x, cfg, angles, cache: PagedKV, ctx):
+    """One decode token per row against the row's block run in the paged KV
+    pool.  Each row carries its OWN absolute position (continuous batching
+    mixes rows admitted at different times), unlike the lockstep decode's
+    shared scalar.  Bit-identical to :func:`_attn_decode` per row (see
+    layers.paged_decode_attention_dense)."""
+    qkv = _qkv(p, x, cfg, angles)
+    out, cache = paged_decode_attention_dense(
+        qkv, cache, ctx["paged_tables"], ctx["paged_positions"],
+        ctx["paged_block_size"])
+    return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
+
+
 def _attn_cont(p, x, cfg, angles, cache: KVCache, reserve: int = 0):
     """Continued (chunked) prefill over prepended cached KV — the prefix-KV
     reuse path: the new tokens' queries attend causally over
@@ -225,17 +239,21 @@ def apply_block(kind: str, cfg: ModelConfig, p, x, ctx, cache, mode: str):
         return x + rs * branch
 
     new_cache = cache
-    if mode == "prefill_cont" and kind != "attn":
+    if mode in ("prefill_cont", "decode_paged") and kind != "attn":
         # 'moe' is full-attention but its expert capacity is ranked ACROSS
         # the batch, so suffix-only dispatch would differ from a monolithic
-        # prefill — reject rather than silently break equivalence
+        # prefill — reject rather than silently break equivalence; the paged
+        # pool likewise only holds full-attention KV (no ring placement,
+        # no recurrent state)
         raise NotImplementedError(
-            f"prefill_cont (prefix-KV reuse) supports pure full-attention "
+            f"{mode} (paged/prefix KV reuse) supports pure full-attention "
             f"'attn' stacks only, got {kind!r}")
     if kind in ("attn", "swa", "moe", "moe_swa", "enc"):
         h = rms_norm(x, p["norm1"], eps)
         if mode == "decode":
             a, new_cache = _attn_decode(p, h, cfg, angles, cache, ctx["position"])
+        elif mode == "decode_paged":
+            a, new_cache = _attn_decode_paged(p, h, cfg, angles, cache, ctx)
         elif mode == "prefill_cont":
             a, new_cache = _attn_cont(p, h, cfg, angles, cache,
                                       ctx.get("reserve", 0))
@@ -354,7 +372,7 @@ def apply_stack(kind: str, cfg: ModelConfig, stack, x, ctx, cache=None,
         body = jax.checkpoint(body)
 
     unroll = True if cfg.scan_unroll else 1
-    if mode in ("decode", "prefill_cont"):
+    if mode in ("decode", "prefill_cont", "decode_paged"):
         return jax.lax.scan(body, x, (stack, cache), unroll=unroll)
     # train & prefill start cache-less; prefill emits per-layer caches as ys
     x_out, ys = jax.lax.scan(lambda xc, p: body(xc, (p, None)), x, stack,

@@ -236,6 +236,53 @@ class KVCache(NamedTuple):
         return (self.pos >= 0)[None, None, None, None, :]
 
 
+# ------------------------------------------------------------- paged KV pool
+class PagedKV(NamedTuple):
+    """One layer-stack's slice of the block-paged KV arena (see
+    serving/kv_pool.py for the allocator that owns block lifetimes).
+
+    k/v: (num_blocks, block_size, KV, hd) — block 0 is the permanent dummy
+    target for padded block-table slots and bucket-dummy rows; it is never
+    allocated, so garbage written there is never read unmasked.  A sequence
+    occupies an ordered run of blocks: block ``i`` of its table holds
+    absolute positions ``[i*block_size, (i+1)*block_size)``, which keeps the
+    gathered key order identical to a dense ring cache's."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+def paged_decode_attention_dense(q, paged: PagedKV, tables, positions,
+                                 block_size: int):
+    """Gather-then-attend paged decode: one query token per row against the
+    row's block run.  Writes the step's K/V into ``tables[row, pos // bs]``
+    slot ``pos % bs``, gathers each row's run into a dense (B, MAXB*bs)
+    view, and runs the SAME fp32 :func:`gqa_attention` as the dense ring
+    path.  Positions ``>= pos+1`` are masked to NEG_INF, whose softmax
+    weights are exactly 0.0 in fp32 — so logits are bit-identical to the
+    dense decode whatever the table padding or pool size (asserted in
+    tests/test_paged_decode.py; DESIGN.md "Paged KV pool").
+
+    q/k/v of the new token: (B, 1, ·, hd); tables (B, MAXB) int32;
+    positions (B,) int32 absolute write position per row."""
+    q_new, k_new, v_new = q
+    b = k_new.shape[0]
+    blk = tables[jnp.arange(b), positions // block_size]
+    slot = positions % block_size
+    k_pool = paged.k.at[blk, slot].set(k_new[:, 0])
+    v_pool = paged.v.at[blk, slot].set(v_new[:, 0])
+    maxb = tables.shape[1]
+    flat = tables.reshape(-1)
+    kg = jnp.take(k_pool, flat, axis=0).reshape(b, maxb * block_size,
+                                                *k_pool.shape[2:])
+    vg = jnp.take(v_pool, flat, axis=0).reshape(b, maxb * block_size,
+                                                *v_pool.shape[2:])
+    valid = (jnp.arange(maxb * block_size, dtype=jnp.int32)[None, :]
+             <= positions[:, None])
+    out = gqa_attention(q_new, kg, vg, valid[:, None, None, None, :])
+    return out, PagedKV(k_pool, v_pool)
+
+
 # -------------------------------------------------------------------- SwiGLU
 def swiglu(x, w_gate, w_up, w_down):
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)

@@ -221,6 +221,38 @@ class LM:
         logits = self._head(params, x)[:, 0]
         return logits, caches
 
+    def decode_step_paged(self, params, caches, tokens, positions, tables,
+                          *, block_size: int):
+        """One decode token per row against the block-paged KV pool.
+
+        caches: list (one per stack) of :class:`~.layers.PagedKV` with leaves
+        (n_layers, num_blocks, block_size, KV, hd) — the SHARED arena, not
+        per-sequence storage; tokens (B, 1) int32; positions (B,) int32
+        per-row absolute positions (continuous batching mixes admission
+        times, so there is no shared scalar position); tables (B, MAXB)
+        int32 per-row block tables (0-padded — block 0 is the dummy block).
+
+        Returns (logits (B, V), caches with the step's K/V written).
+        Bit-identical per row to :meth:`decode_step` over a dense ring cache
+        holding the same tokens (tests/test_paged_decode.py).  Pure
+        full-attention token-input stacks only."""
+        cfg = self.cfg
+        assert cfg.input_mode == "tokens" and not cfg.mrope_sections, (
+            "paged decode supports token-input, non-M-RoPE archs only")
+        x = jnp.take(params["embed"], tokens, axis=0) * cfg.embed_scale
+        b = tokens.shape[0]
+        ctx: dict[str, Any] = {
+            "angles": self._angles(positions[:, None], 1, b),
+            "paged_tables": tables, "paged_positions": positions,
+            "paged_block_size": block_size,
+        }
+        new_caches = []
+        for stack, c, (kind, n) in zip(params["stacks"], caches, cfg.pattern):
+            x, c2 = apply_stack(kind, cfg, stack, x, ctx, c, "decode_paged")
+            new_caches.append(c2)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_caches
+
     def score_hidden(self, params, batch):
         """Mean-pooled final hidden state — the scoring read-out used by the
         ModelOracle's pointwise path."""

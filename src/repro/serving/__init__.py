@@ -1,4 +1,6 @@
 from .engine import ServeEngine, ServeStats
+from .kv_pool import KVBlockPool, PoolExhausted
 from .scheduler import BatchScheduler, Request
 
-__all__ = ["ServeEngine", "ServeStats", "BatchScheduler", "Request"]
+__all__ = ["ServeEngine", "ServeStats", "KVBlockPool", "PoolExhausted",
+           "BatchScheduler", "Request"]

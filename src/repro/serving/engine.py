@@ -28,11 +28,24 @@ mask, a row's logits depend on its left-padded length; keying the cache on
 the absolute start position (equivalently the PAD count of the row's
 padded-length class) keeps cached execution bit-identical to monolithic
 prefill.  See DESIGN.md "Prefix-KV cache".
+
+Paged continuous-batching decode: all serve-side KV lives in ONE block-paged
+pool (serving/kv_pool.py).  Prefix-cache entries are pinned block runs, and
+``generate`` runs a continuous step loop (``paged_admit`` / ``paged_step``)
+instead of a padded lockstep batch: every active row decodes each step at
+its OWN position, finished rows retire and free their blocks immediately,
+and queued requests are admitted into the vacated slots between steps.  Each
+row prefills at its own padded-length class, so its greedy output is
+token-identical to a solo lockstep ``generate_lockstep([prompt])`` run — a
+row's result no longer depends on its batch-mates at all.  Unsupported
+archs (non-attention blocks, MoE, qchunk, enc-dec) fall back to the
+lockstep loop.  See DESIGN.md "Paged KV pool".
 """
 from __future__ import annotations
 
+import itertools
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional, Sequence, Union
 
@@ -42,6 +55,7 @@ import numpy as np
 
 from ..data.tokenizer import BOS, EOS, PAD, ByteTokenizer
 from ..models.model import LM
+from .kv_pool import KVBlockPool, PoolExhausted
 
 TOK_A, TOK_B = ord("A"), ord("B")
 TOK_HI, TOK_LO = ord("9"), ord("0")
@@ -57,6 +71,12 @@ Prompt = Union[str, tuple]
 class ServeStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    # physical row-slots occupied across decode steps (padded batch rows per
+    # step, whether or not the row produced a useful token).  Lockstep holds
+    # finished rows until the batch straggler ends; the paged loop retires
+    # them, so ``decode_row_steps - decode_tokens`` is the straggler waste
+    # benchmarks/table6_paged_decode.py measures.
+    decode_row_steps: int = 0
     calls: int = 0
     # prefix-KV cache counters: hits/misses are per entry lookup;
     # fill_submissions counts the region-prefill forward passes (kept out
@@ -78,10 +98,35 @@ def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length()
 
 
+@dataclass
+class PrefixEntry:
+    """One prefix-cache region: ``PAD*pad + prefix`` at positions
+    [0, length).  Pool-backed entries hold their KV as a pinned block run
+    (``blocks``, one LRU-owned reference); when the pool is absent or full,
+    ``caches`` holds the dense per-stack KV directly (PR 2 scheme)."""
+    length: int
+    blocks: Optional[list] = None
+    caches: Optional[list] = None
+
+
+@dataclass
+class _PagedRow:
+    """One in-flight continuous-batching decode row."""
+    rid: int
+    cls: int                 # padded prompt class == prefill length
+    limit: int               # greedy decode budget (tokens to emit)
+    blocks: list             # ordered block run: shared prefix + private
+    n_shared: int            # leading blocks borrowed from a PrefixEntry
+    cur: int                 # next token to record (already generated)
+    t: int = 0               # decode steps taken
+    emitted: list = field(default_factory=list)
+
+
 class ServeEngine:
     def __init__(self, lm: LM, params, max_new_tokens: int = 32,
                  bucket_shapes: bool = True, max_probe_batch: int = 256,
-                 prefix_cache_size: int = 64):
+                 prefix_cache_size: int = 64, pool_blocks: int = 768,
+                 block_size: int = 16, max_decode_rows: int = 32):
         self.lm = lm
         self.params = params
         self.tok = ByteTokenizer()
@@ -107,7 +152,19 @@ class ServeEngine:
         self.prefix_cache_size = prefix_cache_size
         self.prefix_cache_enabled = (
             prefix_cache_size > 0 and self._supports_prefix_cache())
-        self._prefix_lru: OrderedDict[tuple, object] = OrderedDict()
+        self._prefix_lru: OrderedDict[tuple, PrefixEntry] = OrderedDict()
+        # Block-paged KV pool + continuous-batching decode (same arch gate as
+        # the prefix cache: the pool holds full-attention KV, and chunked
+        # prefill must be a pure per-row function); pool_blocks=0 disables
+        # and generate() falls back to the lockstep loop.
+        self.max_decode_rows = max_decode_rows
+        self.paged_enabled = pool_blocks > 0 and self._supports_prefix_cache()
+        self.pool: Optional[KVBlockPool] = (
+            KVBlockPool(lm, pool_blocks, block_size)
+            if self.paged_enabled else None)
+        self._paged_rows: dict[int, _PagedRow] = {}
+        self._paged_finished: dict[int, str] = {}
+        self._paged_ids = itertools.count()
         self.stats = ServeStats()
         self._prefill = jax.jit(partial(lm.prefill, reserve=max_new_tokens))
         self._decode = jax.jit(lm.decode_step)
@@ -115,6 +172,13 @@ class ServeEngine:
         # lands at the right absolute positions
         self._prefill_exact = jax.jit(partial(lm.prefill, reserve=0))
         self._prefill_cont = jax.jit(lm.prefill_cont)
+        if self.paged_enabled:
+            # the arena is the whole serve memory: donate it through the
+            # step so backends that support aliasing update in place
+            donate = (1,) if jax.default_backend() != "cpu" else ()
+            self._decode_paged = jax.jit(
+                partial(lm.decode_step_paged, block_size=block_size),
+                donate_argnums=donate)
         self._embed_cache: dict = {}
 
     def _supports_prefix_cache(self) -> bool:
@@ -149,9 +213,6 @@ class ServeEngine:
         for r, i in enumerate(ids):
             arr[r, maxlen - len(i):] = i          # left-pad: last pos = live
         return arr
-
-    def _batch_tokens(self, prompts: Sequence[str]) -> np.ndarray:
-        return self._pad_ids([self.tok.encode(p) for p in prompts])
 
     def _make_batch(self, tokens: np.ndarray) -> dict:
         cfg = self.lm.cfg
@@ -257,8 +318,7 @@ class ServeEngine:
         def chunked(idx):
             # max_batch None here means the engine was built with
             # max_probe_batch=None: explicitly unbounded submissions
-            step = len(idx) if max_batch is None else max_batch
-            return (idx[i:i + step] for i in range(0, len(idx), step))
+            return _chunks(idx, max_batch)
 
         for cls in sorted(plain):
             for g in chunked(sorted(plain[cls])):
@@ -270,30 +330,51 @@ class ServeEngine:
                 out[np.asarray(g)] = np.asarray(
                     logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
         for cls, lw, selected in window_jobs:
-            entries = self._fill_prefix_entries(cls,
-                                                {key for _, key in selected})
-            for g in chunked(selected):
-                idx = [i for i, _ in g]
-                logits = self._run_window(cls, lw, [enc[i] for i in idx],
-                                          [key for _, key in g], entries)
-                out[np.asarray(idx)] = logits
+            entries, pins = self._fill_prefix_entries(
+                cls, {key for _, key in selected})
+            try:
+                # materialize each entry's dense view ONCE per window job —
+                # pool-backed entries gather device KV, which must not
+                # repeat per max_probe_batch chunk
+                dense = {key: self._entry_caches(e)
+                         for key, e in entries.items()}
+                for g in chunked(selected):
+                    idx = [i for i, _ in g]
+                    logits = self._run_window(cls, lw, [enc[i] for i in idx],
+                                              [key for _, key in g], dense)
+                    out[np.asarray(idx)] = logits
+            finally:
+                self._release_pins(pins)
         return out
 
-    def _fill_prefix_entries(self, cls: int, keys: set) -> dict:
+    def _fill_prefix_entries(self, cls: int, keys: set) -> tuple[dict, list]:
         """Prefill every missing (prefix ids, start) region of a class once,
         batching fills of equal region length into one submission; cache the
         per-entry KV in the LRU.  A region is ``PAD * pad + prefix`` — the
         exact content of positions [0, start) of every padded row using it,
-        which is what makes cached execution bit-identical.  Returns
-        {key: caches} DIRECT references for every requested key, so a round
-        needing more entries than ``prefix_cache_size`` survives its own
-        LRU evictions."""
-        refs: dict[tuple, object] = {}
+        which is what makes cached execution bit-identical.
+
+        Entries are stored as pinned block runs in the paged pool (dense
+        fallback when the pool is absent or cannot be freed up).  Returns
+        ({key: PrefixEntry} DIRECT references for every requested key, so a
+        round needing more entries than ``prefix_cache_size`` survives its
+        own LRU evictions, plus the round's pin list for
+        :meth:`_release_pins` — pool-backed entries hold one extra block
+        reference for the round so an eviction cannot free KV mid-use)."""
+        refs: dict[tuple, PrefixEntry] = {}
+        pins: list[list] = []
+
+        def pin(entry: PrefixEntry) -> None:
+            if entry.blocks is not None:
+                self.pool.incref(entry.blocks)
+                pins.append(entry.blocks)
+
         by_len: dict[int, list[tuple]] = {}
         for key in sorted(keys):
             if key in self._prefix_lru:
                 self._prefix_lru.move_to_end(key)
                 refs[key] = self._prefix_lru[key]
+                pin(refs[key])
                 self.stats.prefix_hits += 1
                 continue
             pids, pad = key
@@ -320,30 +401,73 @@ class ServeEngine:
                                                self._make_batch(arr))
                 self.stats.prefill_tokens += int(arr.size)
                 self.stats.prefix_tokens_saved -= int(arr.size)
+                row_blocks = self._pool_rows(len(batch), region_len)
+                if row_blocks is not None:
+                    self.pool.write(caches, row_blocks)
                 for r, key in enumerate(batch):
-                    entry = jax.tree.map(
-                        lambda l, r=r: l if l.ndim == 2 else l[:, r:r + 1],
-                        caches)
+                    if row_blocks is not None:
+                        entry = PrefixEntry(region_len, blocks=row_blocks[r])
+                    else:
+                        entry = PrefixEntry(region_len, caches=jax.tree.map(
+                            lambda l, r=r: l if l.ndim == 2 else l[:, r:r + 1],
+                            caches))
                     self._prefix_lru[key] = entry
                     refs[key] = entry
+                    pin(entry)
                 while len(self._prefix_lru) > self.prefix_cache_size:
-                    self._prefix_lru.popitem(last=False)
-        return refs
+                    self._evict_one_prefix()
+        return refs, pins
+
+    def _pool_rows(self, rows: int, length: int) -> Optional[list]:
+        """Allocate a block run per row (evicting cold prefix entries if
+        needed); None when the pool is absent or cannot host the rows — the
+        caller falls back to dense storage."""
+        if self.pool is None:
+            return None
+        nb = self.pool.blocks_for(length)
+        need = rows * nb
+        while self.pool.free_blocks < need and self._prefix_lru:
+            self._evict_one_prefix()
+        if self.pool.free_blocks < need:
+            return None
+        return [self.pool.alloc(nb) for _ in range(rows)]
+
+    def _evict_one_prefix(self) -> None:
+        _, entry = self._prefix_lru.popitem(last=False)
+        if entry.blocks is not None:
+            self.pool.decref(entry.blocks)
+
+    def _release_pins(self, pins: list) -> None:
+        for blocks in pins:
+            self.pool.decref(blocks)
+
+    def clear_prefix_cache(self) -> None:
+        """Drop every cached prefix region (freeing its pool blocks)."""
+        while self._prefix_lru:
+            self._evict_one_prefix()
+
+    def _entry_caches(self, entry: PrefixEntry):
+        """Materialize an entry as the dense per-stack cache pytree the
+        suffix-only prefill consumes (a gather is a copy of the stored
+        bits, so both storage schemes execute identically)."""
+        if entry.caches is not None:
+            return entry.caches
+        return self.pool.gather_stacked(entry.blocks, entry.length)
 
     def _run_window(self, cls: int, lw: int, full_ids: list,
-                    keys: list, entries: dict) -> np.ndarray:
+                    keys: list, dense: dict) -> np.ndarray:
         """One suffix-window submission: every row attends over its own
-        cached-KV slice [0, cls - lw) (gathered per row from the round's
-        ``entries`` references) plus the recomputed window tokens
-        [cls - lw, cls).  Bit-identical to a monolithic padded prefill of
-        the full rows."""
+        cached-KV slice [0, cls - lw) (selected per row from the window
+        job's ``dense`` materialized entries) plus the recomputed window
+        tokens [cls - lw, cls).  Bit-identical to a monolithic padded
+        prefill of the full rows."""
         r_star = cls - lw
         uniq: list = []
         uniq_of: dict[tuple, int] = {}
         for key in keys:
             if key not in uniq_of:
                 uniq_of[key] = len(uniq)
-                uniq.append(entries[key])
+                uniq.append(dense[key])
         rows = len(full_ids)
         rows_p = _next_pow2(rows) if self.bucket_shapes else rows
         arr = np.full((rows_p, lw), PAD, np.int32)
@@ -414,15 +538,66 @@ class ServeEngine:
         return list(np.argsort(np.asarray(scores), kind="stable"))
 
     # ------------------------------------------------------------- generate
-    def generate(self, prompts: Sequence[str], max_new: Optional[int] = None,
+    def _encode_prompt(self, prompt: Prompt) -> list[int]:
+        prefix, suffix = self._parts(prompt)
+        return self.tok.encode(suffix if prefix is None else prefix + suffix)
+
+    def generate(self, prompts: Sequence[Prompt],
+                 max_new: Optional[int] = None,
                  max_new_per: Optional[Sequence[int]] = None) -> list[str]:
-        """Batched greedy decode.  ``max_new_per`` gives each row its own
-        decode budget (the scheduler batches requests with differing
-        ``max_new``); rows that hit their budget are masked done and emit
-        EOS while the rest of the batch keeps decoding."""
+        """Batched greedy decode.  On paged-pool-capable archs this drives
+        the continuous-batching step loop (admission waves into free
+        pool/row capacity, per-row retirement); each row's output is
+        token-identical to a solo ``generate_lockstep([prompt])`` run.
+        Other archs fall back to the padded lockstep loop."""
+        if not self.paged_enabled:
+            return self.generate_lockstep(prompts, max_new, max_new_per)
+        n = len(prompts)
+        # scalar max_new: 0/None means "engine default" (lockstep's
+        # ``max_new or self.max_new``); a PER-ROW entry of 0 is a genuine
+        # zero budget, exactly as lockstep's max_new_per clamp treats it
+        base = min(max_new or self.max_new, self.max_new)
+        if max_new_per is None:
+            limits = [base] * n
+        else:
+            assert len(max_new_per) == n
+            limits = [min(int(l), self.max_new) for l in max_new_per]
+        needs: dict[int, int] = {}
+
+        def get_req(i):
+            if i not in needs:            # tokenize once per request
+                needs[i] = self.paged_block_need(prompts[i], limits[i])
+            return prompts[i], limits[i], needs[i]
+
+        backlog = list(range(n))          # FIFO over prompt indices
+        rid_of: dict[int, int] = {}
+        pending: set[int] = set()
+        outs: dict[int, str] = {}
+        while backlog or pending:
+            for i, rid in self._paged_admit_wave(backlog, get_req):
+                rid_of[i] = rid
+                pending.add(rid)
+            for rid, text in self.paged_step().items():
+                if rid in pending:        # ours
+                    outs[rid] = text
+                    pending.discard(rid)
+                else:                     # a concurrent driver's row (e.g.
+                    self._paged_finished[rid] = text   # a scheduler drain)
+        return [outs[rid_of[i]] for i in range(n)]
+
+    def generate_lockstep(self, prompts: Sequence[Prompt],
+                          max_new: Optional[int] = None,
+                          max_new_per: Optional[Sequence[int]] = None
+                          ) -> list[str]:
+        """The padded lockstep baseline: one prefill batch, then all rows
+        decode in lockstep until the LAST row finishes.  ``max_new_per``
+        gives each row its own decode budget; rows that hit their budget
+        are masked done and emit EOS while the rest keep decoding (and keep
+        occupying a decode-row slot — the head-of-line blocking the paged
+        loop eliminates)."""
         max_new = min(max_new or self.max_new, self.max_new)
         n = len(prompts)
-        tokens = self._batch_tokens(prompts)
+        tokens = self._pad_ids([self._encode_prompt(p) for p in prompts])
         b, s = tokens.shape                       # b >= n with bucket_shapes
         if max_new_per is None:
             limits = np.full((n,), max_new, np.int64)
@@ -446,5 +621,271 @@ class ServeEngine:
             logits, caches = self._decode(self.params, caches, cur,
                                           jnp.int32(s + t))
             self.stats.decode_tokens += int((~done).sum())
+            self.stats.decode_row_steps += b
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return [self.tok.decode(row) for row in out[:n]]
+
+    # ------------------------------------- paged continuous-batching decode
+    @property
+    def paged_active(self) -> int:
+        return len(self._paged_rows)
+
+    def _row_limit(self, max_new: Optional[int]) -> int:
+        return min(max_new if max_new is not None else self.max_new,
+                   self.max_new)
+
+    def paged_block_need(self, prompt: Prompt,
+                         max_new: Optional[int] = None) -> int:
+        """Worst-case (no prefix sharing) block count to admit ``prompt``."""
+        cls = self._pad_class(len(self._encode_prompt(prompt)))
+        return self.pool.blocks_for(cls + self._row_limit(max_new))
+
+    def paged_room(self, need_blocks: int, rows_pending: int = 0,
+                   blocks_pending: int = 0) -> bool:
+        """Can a request needing ``need_blocks`` be admitted now, on top of
+        ``rows_pending``/``blocks_pending`` already earmarked this wave?"""
+        return (self.paged_active + rows_pending < self.max_decode_rows
+                and blocks_pending + need_blocks <= self.pool.free_blocks)
+
+    def _paged_admit_wave(self, queue: list, get_req,
+                          max_wave: Optional[int] = None) -> list[tuple]:
+        """Pop and admit the FIFO prefix of ``queue`` that fits free
+        capacity right now (the shared admission driver behind
+        :meth:`generate` and the scheduler's continuous drain).
+        ``get_req(item) -> (prompt, max_new, need_blocks)`` — the caller
+        memoizes ``need_blocks`` so the head-of-queue prompt is not
+        re-tokenized every step it waits.  Returns [(item, rid)].  When the
+        head request cannot fit an EMPTY loop, cold prefix runs are evicted
+        to make room; a request bigger than the whole pool raises
+        ``PoolExhausted``."""
+        while True:
+            wave, pend = [], 0
+            while queue and (max_wave is None or len(wave) < max_wave):
+                _, _, need = get_req(queue[0])
+                if not self.paged_room(need, rows_pending=len(wave),
+                                       blocks_pending=pend):
+                    break
+                wave.append(queue.pop(0))
+                pend += need
+            if wave:
+                rids = self.paged_admit(
+                    [get_req(it)[:2] for it in wave])
+                return list(zip(wave, rids))
+            # stuck iff nothing IN FLIGHT can still free blocks: finished
+            # rows already freed theirs at retirement, so pending outputs
+            # (possibly a concurrent driver's, endlessly re-stashed) must
+            # NOT defer the eviction/raise — that would livelock a nested
+            # generate() whose request needs the LRU's blocks
+            if queue and not self._paged_rows:
+                if self._prefix_lru:      # cold prefix runs yield to decode
+                    self.clear_prefix_cache()
+                    continue
+                raise PoolExhausted(
+                    f"request needs {get_req(queue[0])[2]} blocks but an "
+                    f"empty pool frees only {self.pool.free_blocks}")
+            return []
+
+    def paged_admit(self, requests: Sequence[tuple]) -> list[int]:
+        """Admit a wave of ``(prompt, max_new_or_None)`` requests into the
+        continuous decode loop: allocate each row's block run, prefill at
+        the row's OWN padded-length class (grouped per class, like probes),
+        and scatter the prompt KV into the run.  Structured prompts whose
+        (prefix, start) region is cached — or shared by a wave-mate — ride
+        the prefix path: the row increfs the entry's full blocks and
+        suffix-prefills only the remainder into private blocks appended
+        after them.  Returns row ids; outputs arrive via :meth:`paged_step`.
+        The caller checks :meth:`paged_room` first; admission beyond
+        capacity raises ``PoolExhausted``."""
+        reqs = []
+        rids_out = []                     # one rid per request, IN ORDER
+        for prompt, max_new in requests:
+            prefix, suffix = self._parts(prompt)
+            rid = next(self._paged_ids)
+            rids_out.append(rid)
+            limit = self._row_limit(max_new)
+            if prefix is not None and self.prefix_cache_enabled:
+                pids = tuple(self.tok.encode(prefix))
+                sids = self.tok.encode(suffix, bos=False)
+                enc = list(pids) + sids
+            else:
+                pids = sids = None
+                enc = self._encode_prompt(prompt)
+            cls = self._pad_class(len(enc))
+            if limit <= 0:                         # degenerate: no decode
+                self._paged_finished[rid] = ""
+                continue
+            reqs.append((rid, enc, cls, limit, pids, sids))
+        # routing: a row rides the prefix path only when its entry is cached
+        # or a wave-mate shares it (same policy as submit_probes)
+        counts: dict[tuple, int] = {}
+        for rid, enc, cls, limit, pids, sids in reqs:
+            if pids is not None:
+                key = (pids, cls - len(pids) - len(sids))
+                counts[(cls, key)] = counts.get((cls, key), 0) + 1
+        plain: dict[int, list] = {}
+        shared: dict[tuple, list] = {}
+        for req in reqs:
+            rid, enc, cls, limit, pids, sids = req
+            if pids is not None:
+                key = (pids, cls - len(pids) - len(sids))
+                if key in self._prefix_lru or counts[(cls, key)] >= 2:
+                    shared.setdefault((cls, key), []).append(req)
+                    continue
+            plain.setdefault(cls, []).append(req)
+        for cls in sorted(plain):
+            for group in _chunks(plain[cls], self.max_probe_batch):
+                self._admit_plain(cls, group)
+        for (cls, key), group in sorted(shared.items(),
+                                        key=lambda kv: kv[0][0]):
+            entries, pins = self._fill_prefix_entries(cls, {key})
+            entry = entries[key]
+            n_shared = (0 if entry.blocks is None
+                        else entry.length // self.pool.block_size)
+            try:
+                if n_shared == 0:
+                    # region shorter than a block (or dense fallback):
+                    # nothing to append onto — admit monolithically.  Unpin
+                    # FIRST: the fill's blocks were not in paged_room's
+                    # worst-case budget, so _alloc_rows must be free to
+                    # evict the entry
+                    self._release_pins(pins)
+                    pins = []
+                    for group_c in _chunks(group, self.max_probe_batch):
+                        self._admit_plain(cls, group_c)
+                else:
+                    for group_c in _chunks(group, self.max_probe_batch):
+                        self._admit_shared(cls, entry, n_shared, group_c)
+            finally:                      # a PoolExhausted must not leak
+                self._release_pins(pins)  # the round's entry references
+        return rids_out
+
+    def _admit_plain(self, cls: int, group: list) -> None:
+        """Monolithic prefill of same-class rows into their block runs."""
+        tokens = self._pad_ids([enc for _, enc, *_ in group], maxlen=cls)
+        logits, caches = self._prefill_exact(self.params,
+                                             self._make_batch(tokens))
+        self.stats.prefill_tokens += int(tokens.size)
+        self.stats.calls += 1
+        row_blocks = self._alloc_rows(
+            [self.pool.blocks_for(cls + limit)
+             for _, _, _, limit, _, _ in group])
+        # rows have differing decode headroom (per-request limits); only the
+        # prompt span is written now — decode fills the tail block by block
+        nb_w = self.pool.blocks_for(cls)
+        self.pool.write(caches, [rb[:nb_w] for rb in row_blocks])
+        self._start_rows(group, row_blocks, 0, logits)
+
+    def _alloc_rows(self, counts: Sequence[int],
+                    incref_run: Optional[list] = None) -> list[list]:
+        """Allocate one block run per row, evicting cold prefix entries when
+        the free list runs short (region fills are not part of
+        ``paged_room``'s worst-case budget, so admission must be able to
+        reclaim them); on a genuine shortfall, roll back the group's
+        allocations (and ``incref_run`` references) before re-raising so a
+        failed admission leaks nothing."""
+        runs: list[list] = []
+        try:
+            for nb in counts:
+                if incref_run is not None:
+                    self.pool.incref(incref_run)
+                while (self.pool.free_blocks < nb and self._prefix_lru):
+                    self._evict_one_prefix()
+                runs.append(self.pool.alloc(nb))
+        except PoolExhausted:
+            for rb in runs:
+                self.pool.decref(rb)
+            if incref_run is not None:    # one incref per loop entry
+                for _ in range(len(runs) + 1):
+                    self.pool.decref(incref_run)
+            raise
+        return runs
+
+    def _admit_shared(self, cls: int, entry: PrefixEntry, n_shared: int,
+                      group: list) -> None:
+        """Suffix-only prefill of rows sharing one prefix entry: rows attend
+        over the entry's gathered block run (positions [0, start)), compute
+        the window [start, cls) themselves, and scatter it into private
+        blocks appended after the increfed shared run — bit-identical to the
+        monolithic prefill of :meth:`_admit_plain` (causal KV slicing is
+        exact at any split; PR 2 contract)."""
+        bs = self.pool.block_size
+        start = n_shared * bs
+        w = cls - start
+        assert 0 < w, "shared region must leave a non-empty suffix window"
+        rows = len(group)
+        rows_p = _next_pow2(rows) if self.bucket_shapes else rows
+        arr = np.full((rows_p, w), PAD, np.int32)
+        for r, (_, enc, *_rest) in enumerate(group):
+            row = [PAD] * (cls - len(enc)) + list(enc)
+            arr[r] = row[start:]
+        assembled = jax.tree.map(
+            lambda l: l[:, :start] if l.ndim == 2 else l[:, :, :start],
+            self._entry_caches(entry))
+        logits, caches = self._prefill_cont(self.params, assembled,
+                                            self._make_batch(arr))
+        self.stats.prefill_tokens += int(arr.size)
+        self.stats.calls += 1
+        self.stats.prefix_tokens_saved += rows_p * cls - int(arr.size)
+        shared_run = list(entry.blocks[:n_shared])
+        row_blocks = self._alloc_rows(
+            [self.pool.blocks_for(cls + limit) - n_shared
+             for _, _, _, limit, _, _ in group], incref_run=shared_run)
+        nb_w = self.pool.blocks_for(w)           # prompt span only (see plain)
+        self.pool.write(caches, [rb[:nb_w] for rb in row_blocks], start=start)
+        full = [shared_run + rb for rb in row_blocks]
+        self._start_rows(group, full, n_shared, logits)
+
+    def _start_rows(self, group: list, row_blocks: list, n_shared: int,
+                    logits) -> None:
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for r, (rid, _enc, cls, limit, _p, _s) in enumerate(group):
+            self._paged_rows[rid] = _PagedRow(
+                rid=rid, cls=cls, limit=limit, blocks=row_blocks[r],
+                n_shared=n_shared, cur=int(first[r]))
+
+    def paged_step(self) -> dict[int, str]:
+        """One continuous-batching decode step: record each active row's
+        pending token, retire rows that just finished (freeing their blocks
+        IMMEDIATELY, before the decode runs, so the freed capacity is
+        admittable this very step), then decode all remaining rows — each at
+        its own position, gathered through its block table.  Returns
+        {rid: output} for rows finished since the last call."""
+        finished, self._paged_finished = self._paged_finished, {}
+        active: list[_PagedRow] = []
+        for rid, row in list(self._paged_rows.items()):
+            row.emitted.append(row.cur)
+            if row.cur == EOS or len(row.emitted) >= row.limit:
+                finished[rid] = self.tok.decode(row.emitted)
+                self.pool.decref(row.blocks)
+                del self._paged_rows[rid]
+            else:
+                active.append(row)
+        if not active:
+            return finished
+        b = len(active)
+        b_p = _next_pow2(b) if self.bucket_shapes else b
+        maxb = max(len(r.blocks) for r in active)
+        maxb_p = _next_pow2(maxb) if self.bucket_shapes else maxb
+        tables = np.zeros((b_p, maxb_p), np.int32)   # 0 = dummy block
+        toks = np.full((b_p, 1), PAD, np.int32)
+        pos = np.zeros((b_p,), np.int32)
+        for i, row in enumerate(active):
+            tables[i, :len(row.blocks)] = row.blocks
+            toks[i, 0] = row.cur
+            pos[i] = row.cls + row.t
+        logits, arenas = self._decode_paged(
+            self.params, self.pool.arenas, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(tables))
+        self.pool.arenas = arenas
+        self.stats.decode_tokens += b
+        self.stats.decode_row_steps += b_p
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, row in enumerate(active):
+            row.cur = int(nxt[i])
+            row.t += 1
+        return finished
+
+
+def _chunks(seq: list, step: Optional[int]):
+    step = step or len(seq) or 1          # None = one unbounded chunk
+    return (seq[i:i + step] for i in range(0, len(seq), step))

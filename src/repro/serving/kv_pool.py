@@ -1,0 +1,158 @@
+"""Block-paged KV pool: the ONE memory scheme behind serving.
+
+A fixed arena of per-layer KV blocks (one :class:`~..models.layers.PagedKV`
+per decoder stack, leaves (n_layers, num_blocks, block_size, KV, hd)) with a
+host-side free-list allocator, per-sequence block tables, and ref-counted
+block sharing.  Two previously unrelated memory schemes ride it:
+
+ * **prefix-cache entries** (engine LRU) hold their region KV as a *pinned
+   block run* — probe window jobs gather the run into the dense view the
+   suffix-only prefill consumes, and decode sequences whose prompt shares
+   the prefix incref the run's full blocks and append private blocks after
+   it instead of re-materializing the prefix;
+ * **decode sequences** (continuous-batching rows) own an ordered run of
+   blocks covering positions ``[0, class + budget)``; a finished row frees
+   its private blocks *immediately* (decref — shared prefix blocks survive
+   while the LRU or other rows still hold them), so vacated memory admits
+   queued requests between decode steps.
+
+Block 0 is a permanent dummy: padded block-table slots and bucket-dummy
+rows point (and may write) there, and it is never allocated, so its garbage
+is only ever read through a NEG_INF mask.  Allocation/refcounts are plain
+Python/numpy (the scheduler is host-side anyway); only the arenas live on
+device, updated functionally by the jitted decode step and the eager
+scatter/gather helpers here.  See DESIGN.md "Paged KV pool".
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.layers import KVCache, PagedKV, dtype_of
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied even after the caller
+    has evicted everything it is willing to evict."""
+
+
+class KVBlockPool:
+    def __init__(self, lm, num_blocks: int, block_size: int = 16):
+        cfg = lm.cfg
+        assert num_blocks >= 2, "need at least one real block beyond dummy 0"
+        assert all(kind == "attn" for kind, _ in cfg.pattern), (
+            "the paged pool holds full-attention KV only")
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        dt = dtype_of(cfg.dtype)
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        self.arenas = [
+            PagedKV(k=jnp.zeros((n, num_blocks, block_size, kv, hd), dt),
+                    v=jnp.zeros((n, num_blocks, block_size, kv, hd), dt))
+            for kind, n in cfg.pattern]
+        # LIFO free list, block 0 (dummy) excluded for good
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._ref = np.zeros(num_blocks, np.int64)
+        self.peak_in_use = 0
+        self.total_allocs = 0
+
+    # ---------------------------------------------------------- allocator
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    def alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` blocks with refcount 1."""
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool {self.num_blocks}, block_size {self.block_size})")
+        ids = [self._free.pop() for _ in range(n)]
+        self._ref[ids] = 1
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return ids
+
+    def incref(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            assert self._ref[i] > 0, f"incref of free block {i}"
+            self._ref[i] += 1
+
+    def decref(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; blocks reaching 0 return to the free
+        list (this IS ``free`` — owners simply drop their reference)."""
+        for i in ids:
+            assert self._ref[i] > 0, f"decref of free block {i}"
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                self._free.append(int(i))
+
+    # ------------------------------------------------------ device arenas
+    def write(self, stack_caches, row_blocks: Sequence[Sequence[int]],
+              start: int = 0) -> None:
+        """Scatter prefill-computed KV into block runs: positions
+        ``[start, S)`` of row ``r`` of ``stack_caches`` (a per-stack list of
+        stacked :class:`KVCache`, leaves (n, B, S, KV, hd)) land in
+        ``row_blocks[r]`` in order.  ``start`` must be block-aligned (a row
+        appending after shared prefix blocks starts at their boundary);
+        trailing bucket-dummy rows of the prefill batch (B > len(row_blocks))
+        are dropped.  The partial last block is zero-padded — readers mask by
+        valid length, never by block occupancy."""
+        if not row_blocks:
+            return
+        bs = self.block_size
+        assert start % bs == 0, "write start must be block-aligned"
+        nb = len(row_blocks[0])
+        assert all(len(b) == nb for b in row_blocks), (
+            "rows of one write must cover equal block counts")
+        ids = jnp.asarray(np.concatenate(
+            [np.asarray(b, np.int32) for b in row_blocks]))
+        rows = len(row_blocks)
+        for si, cache in enumerate(stack_caches):
+            k, v = cache.k, cache.v                  # (n, B, S, kv, hd)
+            n, _, s = k.shape[:3]
+            span = s - start
+            pad = nb * bs - span
+            assert pad >= 0, f"run of {nb} blocks < {span} positions"
+
+            def to_blocks(leaf):
+                leaf = leaf[:, :rows, start:]
+                if pad:
+                    leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+                return leaf.reshape(n, rows * nb, bs, *leaf.shape[3:])
+
+            arena = self.arenas[si]
+            self.arenas[si] = PagedKV(
+                k=arena.k.at[:, ids].set(to_blocks(k)),
+                v=arena.v.at[:, ids].set(to_blocks(v)))
+
+    def gather_stacked(self, block_ids: Sequence[int], length: int):
+        """Materialize a block run as the dense per-stack cache pytree the
+        chunked-prefill path consumes: a list of :class:`KVCache` with
+        k/v (n, 1, length, KV, hd) and pos (n, length).  A gather is a copy
+        of the stored bits, so downstream compute is bit-identical to
+        holding the dense cache directly."""
+        ids = jnp.asarray(np.asarray(block_ids, np.int32))
+        out = []
+        for arena in self.arenas:
+            n = arena.k.shape[0]
+
+            def dense(leaf):
+                g = jnp.take(leaf, ids, axis=1)      # (n, nb, bs, kv, hd)
+                g = g.reshape(n, 1, -1, *g.shape[3:])
+                return g[:, :, :length]
+
+            pos = jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32),
+                                   (n, length))
+            out.append(KVCache(dense(arena.k), dense(arena.v), pos))
+        return out

@@ -1,20 +1,23 @@
-"""Request scheduler: queue + length-bucketed batching over the engine.
+"""Request scheduler: queue + continuous-batching decode over the engine.
 
-Batch-level continuous batching: each drain sorts the WHOLE backlog by
-prompt length and then chunks it into (max_batch)-sized batches, so
-similar-length prompts share a batch and padding waste is minimized (an
-earlier version sorted only within arrival-order chunks, which padded every
-mixed-length batch up to its longest straggler).  Each batch runs
-prefill+decode to completion.  Token-level interleaving (paged attention)
-is documented as out of scope in DESIGN.md; batch-level scheduling is what
-the ORDER BY workloads need — the access paths submit many short,
-similar-length scoring prompts.
+On paged-pool-capable engines a drain runs the **token-level continuous
+step loop**: queued requests are admitted into free pool/row capacity,
+every decode step advances all active rows at their own positions, rows
+that finish retire and free their blocks immediately, and the queue is
+re-polled BETWEEN steps — so a late-submitted short request completes while
+a long judge generation is still decoding instead of waiting for the whole
+batch (no head-of-line blocking; see DESIGN.md "Paged KV pool").  Probe
+rounds queued via ``submit_probe`` are likewise drained between steps into
+``probe_results``.  Engines without paged support (recurrent/MoE archs)
+fall back to batch-level scheduling: the drain sorts the WHOLE backlog by
+prompt length, chunks it into (max_batch)-sized batches, and runs each
+batch prefill + lockstep decode to completion.
 
 Two request classes share the queue discipline:
 
  * **generate** requests (``submit`` / ``run``) — prefill + greedy decode,
    each request honoring its own ``max_new`` even when batched with longer
-   requests (the engine masks per-row decode budgets);
+   requests;
  * **probe** requests (``submit_probe`` / ``run_probes``) — single-token
    read-outs (score / compare / yes-no), drained through
    :meth:`ServeEngine.submit_probes` in length-bucketed submissions.  The
@@ -28,7 +31,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -40,9 +43,10 @@ _ids = itertools.count()
 @dataclass
 class Request:
     rid: int
-    prompt: str
+    prompt: object           # str or (shared_prefix, per_key_suffix) pair
     max_new: int
     output: Optional[str] = None
+    block_need: Optional[int] = None     # memoized KV-pool block budget
 
     @property
     def done(self) -> bool:
@@ -57,36 +61,83 @@ class ProbeRequest:
 
 
 class BatchScheduler:
-    def __init__(self, engine: ServeEngine, max_batch: int = 16):
+    def __init__(self, engine: ServeEngine, max_batch: int = 16,
+                 paged: Optional[bool] = None):
         self.engine = engine
         self.max_batch = max_batch
+        # paged=None: continuous loop whenever the engine supports it;
+        # False pins the lockstep batch path (the benchmark baseline)
+        self.paged = (engine.paged_enabled if paged is None
+                      else paged and engine.paged_enabled)
         self.queue: list[Request] = []
         self.probe_queue: list[ProbeRequest] = []
         self.completed: dict[int, Request] = {}
+        self.probe_results: dict[int, np.ndarray] = {}
+        self._rid_of_engine: dict[int, Request] = {}
 
     # ------------------------------------------------------------- generate
-    def submit(self, prompt: str, max_new: int = 32) -> int:
+    def submit(self, prompt, max_new: int = 32) -> int:
         r = Request(next(_ids), prompt, max_new)
         self.queue.append(r)
         return r.rid
 
-    def run(self) -> dict[int, str]:
+    def run(self, on_step: Optional[Callable] = None) -> dict[int, str]:
         """Drain the queue; returns {rid: output} for THIS drain only.
-        (Earlier drains remain queryable via ``self.completed``.)  The whole
-        backlog is sorted by prompt length BEFORE chunking into batches, so
-        each padded batch contains similar-length prompts."""
+        (Earlier drains remain queryable via ``self.completed``.)
+
+        Continuous mode (paged engines): FIFO admission into free capacity
+        between decode steps; ``on_step(self)`` runs after every step, so
+        callers can submit NEW requests mid-drain — they are admitted into
+        slots vacated by retiring rows while long rows keep decoding.
+        Queued probes are answered between steps into ``probe_results``.
+
+        Lockstep mode: the whole backlog is sorted by prompt length BEFORE
+        chunking into batches, so each padded batch contains similar-length
+        prompts."""
+        if self.paged:
+            return self._run_continuous(on_step)
         drained: dict[int, str] = {}
         pending, self.queue = self.queue, []
-        pending.sort(key=lambda r: len(r.prompt))
+        # sort by ENCODED length: tuple (prefix, suffix) prompts would all
+        # sort as len == 2 and defeat the length grouping
+        pending.sort(key=lambda r: len(self.engine._encode_prompt(r.prompt)))
         for i in range(0, len(pending), self.max_batch):
             batch = pending[i:i + self.max_batch]
-            outs = self.engine.generate([r.prompt for r in batch],
-                                        max_new=max(r.max_new for r in batch),
-                                        max_new_per=[r.max_new for r in batch])
+            outs = self.engine.generate_lockstep(
+                [r.prompt for r in batch],
+                max_new=max(r.max_new for r in batch),
+                max_new_per=[r.max_new for r in batch])
             for r, o in zip(batch, outs):
                 r.output = o
                 self.completed[r.rid] = r
                 drained[r.rid] = o
+        return drained
+
+    def _run_continuous(self, on_step: Optional[Callable]) -> dict[int, str]:
+        eng = self.engine
+
+        def get_req(r: Request):
+            if r.block_need is None:      # tokenize once per request
+                r.block_need = eng.paged_block_need(r.prompt, r.max_new)
+            return r.prompt, r.max_new, r.block_need
+
+        drained: dict[int, str] = {}
+        while self.queue or self._rid_of_engine:
+            for req, erid in eng._paged_admit_wave(self.queue, get_req,
+                                                   max_wave=self.max_batch):
+                self._rid_of_engine[erid] = req
+            if self.probe_queue:          # probe rounds ride the step gaps
+                self.probe_results.update(self.run_probes())
+            for erid, text in eng.paged_step().items():
+                req = self._rid_of_engine.pop(erid, None)
+                if req is None:           # a concurrent driver's row — e.g.
+                    eng._paged_finished[erid] = text   # on_step ran generate
+                    continue
+                req.output = text
+                self.completed[req.rid] = req
+                drained[req.rid] = text
+            if on_step is not None:
+                on_step(self)
         return drained
 
     # --------------------------------------------------------------- probes

@@ -1,0 +1,281 @@
+"""Paged continuous-batching decode: token identity, mid-decode admission,
+and block reclamation.
+
+Invariants (DESIGN.md "Paged KV pool"):
+
+ * every row of the continuous loop emits EXACTLY the token sequence the
+   lockstep baseline produces for that prompt alone (``==`` on the decoded
+   strings) — masked pool positions contribute exact zeros to the fp32
+   softmax, so batch composition, admission timing, and table padding are
+   invisible to results;
+ * a late-submitted short request completes while a long generation is
+   still decoding (no head-of-line blocking), and probe rounds are answered
+   between decode steps;
+ * finished rows free their blocks immediately: after mixed probe/generate
+   traffic, the only blocks in use are the prefix-cache LRU's pinned runs,
+   and clearing the LRU drains the pool to zero.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # model forward passes: heavyweight
+
+from repro.configs import get_reduced
+from repro.models import LM
+from repro.serving import BatchScheduler, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm_params, **kw):
+    lm, params = lm_params
+    kw.setdefault("max_new_tokens", 8)
+    return ServeEngine(lm, params, **kw)
+
+
+MIXED = ["hi", "a mid-sized prompt here", "x" * 50 + " long tail prompt",
+         "another short", "y" * 35 + " second long one", "tiny"]
+LIMITS = [2, 5, 8, 3, 7, 1]
+
+
+def test_paged_token_identical_to_solo_lockstep(lm_params):
+    eng = _engine(lm_params)
+    assert eng.paged_enabled
+    outs = eng.generate(MIXED, max_new_per=LIMITS)
+    solo = [eng.generate_lockstep([p], max_new_per=[l])[0]
+            for p, l in zip(MIXED, LIMITS)]
+    assert outs == solo
+    assert eng.pool.blocks_in_use == 0       # every row retired its run
+
+
+def test_paged_equals_lockstep_batch_same_class(lm_params):
+    """Same-class prompts: the lockstep BATCH itself is the baseline (all
+    rows share one padded length, so batching is row-independent)."""
+    eng = _engine(lm_params)
+    prompts = [f"prompt {i}" for i in range(4)]          # one length class
+    a = eng.generate(prompts, max_new=6)
+    b = eng.generate_lockstep(prompts, max_new=6)
+    assert a == b
+
+
+def test_admission_capacity_waves(lm_params):
+    """More requests than decode rows: the loop admits in waves as rows
+    retire, and every output still matches the solo baseline."""
+    eng = _engine(lm_params, max_decode_rows=2, pool_blocks=32)
+    prompts = [f"wave prompt {i}" for i in range(5)]
+    limits = [6, 1, 4, 2, 5]
+    outs = eng.generate(prompts, max_new_per=limits)
+    solo = [eng.generate_lockstep([p], max_new_per=[l])[0]
+            for p, l in zip(prompts, limits)]
+    assert outs == solo
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_mid_decode_admission_engine_level(lm_params):
+    """A short request admitted AFTER a long row started decoding finishes
+    first — the lockstep loop cannot do this at all."""
+    eng = _engine(lm_params, max_new_tokens=16)
+    long_p, short_p = "z" * 40 + " long straggler", "quick"
+    rid_long = eng.paged_admit([(long_p, 16)])[0]
+    for _ in range(3):
+        eng.paged_step()
+    assert eng.paged_active == 1
+    rid_short = eng.paged_admit([(short_p, 2)])[0]
+    fins = {}
+    while rid_short not in fins:
+        fins.update(eng.paged_step())
+    assert rid_long in eng._paged_rows       # straggler still decoding
+    while eng.paged_active or eng._paged_finished:
+        fins.update(eng.paged_step())
+    assert fins[rid_long] == eng.generate_lockstep([long_p],
+                                                   max_new_per=[16])[0]
+    assert fins[rid_short] == eng.generate_lockstep([short_p],
+                                                    max_new_per=[2])[0]
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_scheduler_mid_drain_submission_and_probes(lm_params):
+    """Continuous drain: a request submitted mid-drain (via on_step) is
+    admitted into vacated capacity and completes in the SAME drain; queued
+    probes are answered between decode steps."""
+    eng = _engine(lm_params, max_new_tokens=16)
+    sched = BatchScheduler(eng, max_batch=4)
+    assert sched.paged
+    rid_long = sched.submit("q" * 45 + " long generation", max_new=16)
+    probe_rid = sched.submit_probe("Criteria: c\nItem: thing\nRating:")
+    late = {}
+
+    def on_step(s):
+        if not late and eng.paged_active:
+            late["rid"] = s.submit("late arrival", max_new=2)
+
+    out = sched.run(on_step=on_step)
+    assert set(out) == {rid_long, late["rid"]}
+    assert out[late["rid"]] == eng.generate_lockstep(["late arrival"],
+                                                     max_new_per=[2])[0]
+    assert probe_rid in sched.probe_results  # probe served mid-drain
+    direct = eng.submit_probes(["Criteria: c\nItem: thing\nRating:"])
+    assert np.allclose(sched.probe_results[probe_rid], direct[0])
+
+
+def test_structured_prompts_share_prefix_blocks(lm_params):
+    """Generate requests with a shared (prefix, suffix) structure append
+    onto ONE pinned prefix block run instead of re-materializing it, and
+    stay token-identical to the monolithic solo baseline."""
+    eng = _engine(lm_params)
+    prefix = "Criteria: quality\nSample: alpha beta gamma\n"
+    prompts = [(prefix, f"Ranking {i}: a > b > c\nJudge rationale:")
+               for i in range(4)]
+    outs = eng.generate(prompts, max_new=6)
+    solo = [eng.generate_lockstep([p], max_new=6)[0] for p in prompts]
+    assert outs == solo
+    assert eng.stats.prefix_misses >= 1      # region filled once
+    assert eng.stats.prefix_tokens_saved > 0
+    lru_blocks = sum(len(e.blocks) for e in eng._prefix_lru.values()
+                     if e.blocks is not None)
+    assert lru_blocks > 0                    # entry is a pool-backed run
+    assert eng.pool.blocks_in_use == lru_blocks   # rows dropped their refs
+    hits0 = eng.stats.prefix_hits
+    assert eng.generate(prompts, max_new=6) == solo
+    assert eng.stats.prefix_hits > hits0     # second wave rides the LRU
+
+
+def test_zero_leaked_blocks_after_mixed_traffic(lm_params):
+    """Mixed probe rounds + generates + a mid-drain admission: afterwards
+    the pool holds exactly the LRU's pinned runs; clearing the LRU drains
+    it to zero (the leak test the pool's refcounts must pass)."""
+    eng = _engine(lm_params)
+    probes = [("Criteria: c\nPassage B: pivot\n",
+               f"Passage A: item {'x' * (i % 3)}\nWhich ranks higher? Answer:")
+              for i in range(6)]
+    eng.submit_probes(probes)
+    eng.generate(MIXED, max_new_per=LIMITS)
+    eng.submit_probes(probes)                # LRU hits while rows retired
+    eng.generate([("Criteria: c\nPassage B: pivot\n", "Passage A: gen\n"),
+                  ("Criteria: c\nPassage B: pivot\n", "Passage A: gen\n")],
+                 max_new=4)
+    assert eng.paged_active == 0
+    lru_blocks = sum(len(e.blocks) for e in eng._prefix_lru.values()
+                     if e.blocks is not None)
+    assert eng.pool.blocks_in_use == lru_blocks
+    eng.clear_prefix_cache()
+    assert eng.pool.blocks_in_use == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks - 1
+
+
+def test_zero_budget_requests_keep_rids_aligned(lm_params):
+    """Regression: a max_new=0 request must not shift later requests' rids
+    — paged outputs stay aligned with the submitted order (the lockstep
+    loop accepted limit 0 and returned "", so must the paged loop)."""
+    eng = _engine(lm_params)
+    prompts = ["first", "degenerate", "third"]
+    limits = [3, 0, 4]
+    outs = eng.generate(prompts, max_new_per=limits)
+    solo = [eng.generate_lockstep([p], max_new_per=[l])[0]
+            for p, l in zip(prompts, limits)]
+    assert outs == solo and outs[1] == ""
+    sched = BatchScheduler(eng, max_batch=4)
+    rids = [sched.submit(p, max_new=l) for p, l in zip(prompts, limits)]
+    drained = sched.run()
+    assert [drained[r] for r in rids] == solo
+
+
+def test_scalar_max_new_zero_means_default_like_lockstep(lm_params):
+    """Regression: scalar ``max_new=0`` means "engine default" in lockstep
+    (``max_new or self.max_new``); the paged loop must agree rather than
+    treating it as a zero budget."""
+    eng = _engine(lm_params, max_new_tokens=4)
+    a = eng.generate(["scalar zero"], max_new=0)
+    b = eng.generate_lockstep(["scalar zero"], max_new=0)
+    assert a == b
+
+
+def test_nested_generate_does_not_steal_scheduler_rows(lm_params):
+    """Regression: engine.generate() invoked mid-drain (the judge-rationale
+    path runs on the shared engine) must hand the scheduler's finished rows
+    back instead of consuming them."""
+    eng = _engine(lm_params, max_new_tokens=16)
+    sched = BatchScheduler(eng, max_batch=4)
+    rids = [sched.submit(f"drain req {i} " + "w" * 20, max_new=6 + i)
+            for i in range(3)]
+    nested = {}
+
+    def on_step(s):
+        if not nested and eng.paged_active:
+            nested["out"] = eng.generate(["nested rationale"], max_new=3)
+
+    out = sched.run(on_step=on_step)
+    assert set(out) == set(rids)             # nothing stolen or lost
+    assert nested["out"] == eng.generate_lockstep(["nested rationale"],
+                                                  max_new=3)
+    for rid, prompt, mn in zip(rids, [f"drain req {i} " + "w" * 20
+                                      for i in range(3)], [6, 7, 8]):
+        assert out[rid] == eng.generate_lockstep([prompt],
+                                                 max_new_per=[mn])[0]
+
+
+def test_nested_generate_evicts_lru_instead_of_livelock(lm_params):
+    """Regression: a nested generate() whose request needs the prefix
+    LRU's blocks must evict them once nothing is in flight — pending
+    foreign outputs (endlessly re-stashed) must not defer the eviction
+    forever (livelock)."""
+    lm, params = lm_params
+    eng = ServeEngine(lm, params, max_new_tokens=4, max_decode_rows=4,
+                      pool_blocks=8, block_size=16)
+    eng.submit_probes([("Criteria: c\nPassage B: pivot\n",
+                        f"Passage A: it{i}\nAnswer:") for i in range(2)])
+    assert eng.pool.blocks_in_use > 0        # LRU holds a pinned run
+    sched = BatchScheduler(eng, max_batch=2)
+    rid = sched.submit("drain row " + "w" * 10, max_new=4)
+    nested = {}
+
+    def on_step(s):
+        if not nested:                       # bigger than current free space
+            nested["out"] = eng.generate(["needs eviction " + "z" * 40],
+                                         max_new=4)
+
+    out = sched.run(on_step=on_step)
+    assert rid in out                        # drain completed, nothing lost
+    assert nested["out"] == eng.generate_lockstep(
+        ["needs eviction " + "z" * 40], max_new=4)
+
+
+def test_tight_pool_shared_subblock_region(lm_params):
+    """Regression: a FRESH shared region shorter than one block allocates a
+    fill block outside paged_room's worst-case budget; admission must
+    reclaim it (evict) instead of raising out of generate() on an
+    exactly-sized pool."""
+    eng = _engine(lm_params, max_new_tokens=4, max_decode_rows=2)
+    # two wave-mates sharing a tiny prefix; region = pad + prefix < 16
+    prompts = [("ab", "suffix one xx"), ("ab", "suffix two yy")]
+    need = sum(eng.paged_block_need(p, 4) for p in prompts)
+    lm, params = lm_params
+    tight = ServeEngine(lm, params, max_new_tokens=4, max_decode_rows=2,
+                        pool_blocks=need + 1, block_size=16)
+    outs = tight.generate(prompts, max_new=4)
+    solo = [tight.generate_lockstep([p], max_new=4)[0] for p in prompts]
+    assert outs == solo
+    tight.clear_prefix_cache()
+    assert tight.pool.blocks_in_use == 0
+
+
+def test_pool_disabled_falls_back_to_lockstep(lm_params):
+    eng = _engine(lm_params, pool_blocks=0)
+    assert not eng.paged_enabled
+    outs = eng.generate(["fallback a", "fallback b"], max_new=3)
+    assert outs == eng.generate_lockstep(["fallback a", "fallback b"],
+                                         max_new=3)
+
+
+def test_unsupported_arch_falls_back(lm_params):
+    cfg = get_reduced("xlstm-1.3b")          # recurrent blocks: no KV pool
+    lm = LM(cfg)
+    eng = ServeEngine(lm, lm.init(jax.random.PRNGKey(0)), max_new_tokens=4)
+    assert not eng.paged_enabled and eng.pool is None
+    assert len(eng.generate(["still works"], max_new=2)) == 1

@@ -68,12 +68,14 @@ def test_scheduler_run_returns_only_current_drain(engine):
 
 
 def test_scheduler_sorts_whole_drain_by_length(engine):
-    """The drain sorts the WHOLE backlog by prompt length before chunking,
-    so mixed-length arrival order can't pad every batch up to its longest
-    straggler: padded prefill totals equal the ideal sorted grouping."""
+    """LOCKSTEP mode: the drain sorts the WHOLE backlog by prompt length
+    before chunking, so mixed-length arrival order can't pad every batch up
+    to its longest straggler: padded prefill totals equal the ideal sorted
+    grouping.  (The paged continuous loop doesn't need the sort at all —
+    rows prefill at their own padded-length class; asserted below.)"""
     short = ["hi 1", "hi 2"]
     long_ = ["y" * 40 + " 1", "y" * 40 + " 2"]
-    sched = BatchScheduler(engine, max_batch=2)
+    sched = BatchScheduler(engine, max_batch=2, paged=False)
     for p in (short[0], long_[0], short[1], long_[1]):   # interleaved arrival
         sched.submit(p, max_new=2)
     t0 = engine.stats.prefill_tokens
@@ -82,15 +84,19 @@ def test_scheduler_sorts_whole_drain_by_length(engine):
     assert len(out) == 4
     # ideal grouping: (short, short), (long, long)
     t0 = engine.stats.prefill_tokens
-    engine.generate(short, max_new=2)
-    engine.generate(long_, max_new=2)
+    engine.generate_lockstep(short, max_new=2)
+    engine.generate_lockstep(long_, max_new=2)
     ideal_tokens = engine.stats.prefill_tokens - t0
     # arrival-order chunks would pad both batches to the long class
     t0 = engine.stats.prefill_tokens
-    engine.generate([short[0], long_[0]], max_new=2)
-    engine.generate([short[1], long_[1]], max_new=2)
+    engine.generate_lockstep([short[0], long_[0]], max_new=2)
+    engine.generate_lockstep([short[1], long_[1]], max_new=2)
     mixed_tokens = engine.stats.prefill_tokens - t0
     assert drain_tokens == ideal_tokens < mixed_tokens
+    # the paged loop prefills per class: mixed arrival == ideal grouping
+    t0 = engine.stats.prefill_tokens
+    engine.generate([short[0], long_[0], short[1], long_[1]], max_new=2)
+    assert engine.stats.prefill_tokens - t0 == ideal_tokens
 
 
 def test_scheduler_probe_pathway(engine):
