@@ -1,0 +1,190 @@
+"""Table 7 (repo-specific): probe-plan executor — interleaved vs serialized.
+
+Two workloads on the REAL ModelOracle backend:
+
+ * **concurrent queries** — 4 LLM ORDER BY queries over one table (including
+   an ASC/DESC twin pair whose probe streams coincide and dedup), run
+   back-to-back solo vs interleaved through ``llm_order_by_many`` over one
+   ``BatchScheduler`` drain per tick.  Asserts per-query orders and ledgers
+   are identical and that interleaving issues <= 60% of the serialized
+   probe submissions.
+ * **optimizer pilot** — the Sec.-5 candidate sample runs (plus the
+   membership gate round), serialized candidate-by-candidate vs all pilots
+   suspended on one executor.  Asserts identical per-candidate sample
+   rankings.
+
+Reported per mode: serving submissions (``engine.stats.calls``), probe row
+occupancy (live rows vs padded row slots — the slack is wasted pool
+capacity: dummy rows prefilled and thrown away), cross-plan dedup hits, and
+wall-clock.
+
+    PYTHONPATH=src python -m benchmarks.table7_executor [--json OUT] [N ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import OrderQuery, PathParams, ProbePlanExecutor, as_keys, \
+    llm_order_by_many, make_path
+from repro.core.access_paths.base import Ordering
+from repro.core.optimizer.cost_model import default_candidates
+from repro.core.optimizer.membership import membership_plan
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.core.types import SortSpec
+
+
+def _engine(max_new: int = 8):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return ServeEngine(lm, params, max_new_tokens=max_new)
+
+
+def _snap(eng):
+    s = eng.stats
+    return (s.calls, s.probe_rows, s.probe_row_slots)
+
+
+def _delta(eng, before):
+    s = eng.stats
+    return dict(submissions=s.calls - before[0],
+                probe_rows=s.probe_rows - before[1],
+                probe_row_slots=s.probe_row_slots - before[2],
+                wasted_row_slots=(s.probe_row_slots - before[2])
+                - (s.probe_rows - before[1]))
+
+
+def _qdefs():
+    return [("quick", "relevance", True, None),
+            ("quick", "relevance", False, None),   # ASC twin: full dedup
+            ("ext_merge", "relevance", True, 8),
+            ("pointwise", "clarity", False, None)]
+
+
+def bench_concurrent(eng, keys, rows: list[dict]) -> None:
+    from repro.serving.scheduler import BatchScheduler
+    qdefs = _qdefs()
+    # warm the jit cache on a prefix so wall-clock measures steady state
+    for path, crit, desc, limit in qdefs:
+        make_path(path, PathParams(batch_size=4)).execute(
+            keys[:12], ModelOracle(eng), SortSpec(crit, desc, limit))
+
+    solo_orders = []
+    b0, t0 = _snap(eng), time.perf_counter()
+    for path, crit, desc, limit in qdefs:
+        res = make_path(path, PathParams(batch_size=4)).execute(
+            keys, ModelOracle(eng), SortSpec(crit, desc, limit))
+        solo_orders.append(res.uids())
+    serial = _delta(eng, b0)
+    serial.update(mode="serialized", seconds=round(time.perf_counter() - t0, 3),
+                  deduped=0)
+
+    sched = BatchScheduler(eng)
+    b0, t0 = _snap(eng), time.perf_counter()
+    results = llm_order_by_many(
+        [OrderQuery(keys, crit, ModelOracle(eng), descending=desc,
+                    limit=limit, path=path, params=PathParams(batch_size=4))
+         for path, crit, desc, limit in qdefs], scheduler=sched)
+    merged = _delta(eng, b0)
+    merged.update(mode="interleaved",
+                  seconds=round(time.perf_counter() - t0, 3),
+                  deduped=sched.probes_deduped)
+
+    identical = [r.uids() for r in results] == solo_orders
+    for d in (serial, merged):
+        d.update(workload=f"4-queries-n{len(keys)}", n=len(keys),
+                 order_identical=identical)
+        rows.append(d)
+    assert identical, "interleaved execution changed a query's output"
+    ratio = merged["submissions"] / max(serial["submissions"], 1)
+    print(f"# 4-query submissions: {merged['submissions']} / "
+          f"{serial['submissions']} = {ratio:.2f} "
+          f"(deduped {merged['deduped']} probe rows)")
+    assert ratio <= 0.60, (
+        f"interleaved workload must issue <=60% of serialized probe "
+        f"submissions, got {ratio:.2f}")
+
+
+def bench_optimizer_pilot(eng, keys, rows: list[dict]) -> None:
+    from repro.serving.scheduler import BatchScheduler
+    rng = np.random.default_rng(7)
+    sample = [keys[i] for i in sorted(rng.choice(len(keys), size=16,
+                                                 replace=False))]
+    spec = SortSpec("relevance", True, 8)
+    sample_spec = SortSpec("relevance", True, 8)
+    cands = default_candidates()
+
+    # serialized: the pre-executor optimizer loop — gate round, then each
+    # candidate's sample run back-to-back
+    b0, t0 = _snap(eng), time.perf_counter()
+    oracle = ModelOracle(eng)
+    oracle.inquire_batch(sample, spec.criteria)
+    serial_orders = [c.make().execute(sample, oracle, sample_spec).uids()
+                     for c in cands]
+    serial = _delta(eng, b0)
+    serial.update(mode="serialized", seconds=round(time.perf_counter() - t0, 3),
+                  deduped=0)
+
+    # interleaved: every pilot + the gate suspended on one executor
+    sched = BatchScheduler(eng)
+    b0, t0 = _snap(eng), time.perf_counter()
+    oracle = ModelOracle(eng)
+    ex = ProbePlanExecutor(scheduler=sched)
+    ex.submit_plan(membership_plan(sample), Ordering(oracle, spec),
+                   name="membership")
+    runs = [ex.submit_path(c.make(), sample, oracle, sample_spec,
+                           name=c.label) for c in cands]
+    ex.run()
+    merged_orders = [list(r.result)[:sample_spec.effective_limit(len(sample))]
+                     for r in runs]
+    merged_orders = [[k.uid for k in o] for o in merged_orders]
+    merged = _delta(eng, b0)
+    merged.update(mode="interleaved",
+                  seconds=round(time.perf_counter() - t0, 3),
+                  deduped=sched.probes_deduped)
+
+    identical = merged_orders == serial_orders
+    for d in (serial, merged):
+        d.update(workload="optimizer-pilot-s16", n=16,
+                 order_identical=identical)
+        rows.append(d)
+    assert identical, "interleaved pilots changed a candidate's sample order"
+    print(f"# pilot submissions: {merged['submissions']} / "
+          f"{serial['submissions']}, wasted row slots "
+          f"{merged['wasted_row_slots']} / {serial['wasted_row_slots']}")
+
+
+def main() -> None:
+    from benchmarks.common import parse_json_flag
+    argv, json_path = parse_json_flag(sys.argv[1:])
+    sizes = [int(a) for a in argv if a.isdigit()] or [48]
+    rows: list[dict] = []
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        keys = as_keys([f"doc {i:04d}" for i in range(n)],
+                       list(rng.standard_normal(n)))
+        bench_concurrent(eng, keys, rows)
+        bench_optimizer_pilot(eng, keys, rows)
+    print("workload,mode,submissions,probe_rows,probe_row_slots,"
+          "wasted_row_slots,deduped,seconds,order_identical")
+    for d in rows:
+        print(f"{d['workload']},{d['mode']},{d['submissions']},"
+              f"{d['probe_rows']},{d['probe_row_slots']},"
+              f"{d['wasted_row_slots']},{d['deduped']},{d['seconds']},"
+              f"{d['order_identical']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

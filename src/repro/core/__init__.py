@@ -1,8 +1,11 @@
 """The paper's primary contribution: the LLM ORDER BY semantic operator,
 its physical access paths, and the budget-aware access-path optimizer."""
 from .types import InvalidOutputError, Key, SortResult, SortSpec, as_keys
-from .operator import Table, llm_order_by
+from .operator import OrderQuery, Table, llm_order_by, llm_order_by_many
 from .access_paths import (AccessPath, PathParams, available_paths, make_path)
+from .executor import (ComparePairs, InquireEach, PlanCancelled,
+                       ProbePlanExecutor, RankWindows, ScoreBatches,
+                       ScoreEach, SerialProbe, drive_plan)
 from .optimizer.optimizer import (AccessPathOptimizer, OptimizerConfig,
                                   OptimizerReport)
 from .optimizer.cost_model import CandidateSpec, default_candidates
@@ -15,8 +18,12 @@ from . import datasets, metrics
 
 __all__ = [
     "InvalidOutputError", "Key", "SortResult", "SortSpec", "as_keys",
-    "Table", "llm_order_by", "AccessPath", "PathParams", "available_paths",
-    "make_path", "AccessPathOptimizer", "OptimizerConfig", "OptimizerReport",
+    "OrderQuery", "Table", "llm_order_by", "llm_order_by_many",
+    "AccessPath", "PathParams", "available_paths",
+    "make_path", "ComparePairs", "InquireEach", "PlanCancelled",
+    "ProbePlanExecutor", "RankWindows", "ScoreBatches", "ScoreEach",
+    "SerialProbe", "drive_plan",
+    "AccessPathOptimizer", "OptimizerConfig", "OptimizerReport",
     "CandidateSpec", "default_candidates", "Oracle", "PriceSheet",
     "TokenLedger", "GPT41", "LLAMA70B", "LLAMA405B", "FACTUAL", "REASONING",
     "SENTIMENT", "ExactOracle", "FlakyOracle", "OracleProfile",

@@ -9,11 +9,20 @@ verbs so the algorithms themselves are direction-free:
  * ``before(a, b)``      — True iff ``a`` must precede ``b`` in the output,
  * ``window(keys)``      — listwise window ranking in output order.
 
-Round verbs: algorithms emit *rounds of independent calls* wherever their
-structure allows (``before_many``, ``scores_each``, ``scores_many``,
-``windows``); the oracle executes a round as one backend submission where it
-can (ModelOracle: one padded prefill) and as a sequential loop otherwise,
-with identical results and ledger records either way.  See DESIGN.md.
+Probe plans: algorithms are *resumable* — each path's ``_plan`` generator
+yields typed probe sets (``executor.ComparePairs`` / ``ScoreEach`` /
+``ScoreBatches`` / ``RankWindows``) describing every call whose inputs are
+already known, and suspends until the results come back at the yield point.
+Solo execution drives one plan through ``executor.drive_plan``, resolving
+each probe set with the matching :class:`Ordering` round verb
+(``before_many``, ``scores_each``, ``scores_many``, ``windows``) — so the
+retry/binary-split fallback and billing are the familiar synchronous
+semantics, and the oracle still executes a round as one backend submission
+where it can (ModelOracle: one padded prefill) and as a sequential loop
+otherwise.  ``executor.ProbePlanExecutor`` drives many suspended plans at
+once — concurrent queries, optimizer pilot candidates — merging same-kind
+probes from different plans into shared serving submissions.  See DESIGN.md
+"Probe-plan executor".
 
 Cost models: Table 1 of the paper, used both for optimizer cost extrapolation
 (Sec. 5.1) and for the Table-1 benchmark that checks our empirical call counts
@@ -26,6 +35,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
+from ..executor import drive_plan
 from ..types import InvalidOutputError, Key, SortResult, SortSpec
 from ..oracles.base import Oracle
 
@@ -42,6 +52,21 @@ class Ordering:
         self.oracle = oracle
         self.spec = spec
         self.sign = -1.0 if spec.descending else 1.0
+
+    # -- direction folding --------------------------------------------------
+    # Shared by the synchronous round verbs below and by the executor's
+    # deferred-round path (which reads raw oracle results back from the
+    # scheduler drain and must apply the exact same fold).
+    def fold_scores(self, raw: Sequence[float]) -> list[float]:
+        return [self.sign * s for s in raw]
+
+    def fold_compares(self, cmps: Sequence[int]) -> list[bool]:
+        if self.spec.descending:
+            return [c > 0 for c in cmps]
+        return [c < 0 for c in cmps]
+
+    def fold_window_result(self, ranked: Sequence[Key]) -> list[Key]:
+        return list(reversed(ranked)) if self.spec.descending else list(ranked)
 
     # -- value-based ---------------------------------------------------------
     def scores(self, keys: Sequence[Key]) -> list[float]:
@@ -134,9 +159,7 @@ class Ordering:
                 return [self.before(*pairs[0])]
             mid = len(pairs) // 2
             return self.before_many(pairs[:mid]) + self.before_many(pairs[mid:])
-        if self.spec.descending:
-            return [c > 0 for c in cmps]
-        return [c < 0 for c in cmps]
+        return self.fold_compares(cmps)
 
     # -- listwise ----------------------------------------------------------------
     def window(self, keys: Sequence[Key]) -> list[Key]:
@@ -164,7 +187,7 @@ class Ordering:
         for b, r in zip(batches, ranked):
             if r is None:
                 r = self._rank_split(b)
-            out.append(list(reversed(r)) if self.spec.descending else list(r))
+            out.append(self.fold_window_result(r))
         return out
 
     def _rank_with_fallback(self, keys: list[Key]) -> list[Key]:
@@ -222,14 +245,24 @@ class AccessPath(abc.ABC):
         self.params = params
 
     @abc.abstractmethod
-    def _order(self, keys: Sequence[Key], ordering: Ordering, spec: SortSpec) -> list[Key]:
-        """Return keys in output order; may return only the first
-        ``spec.effective_limit`` items when a limit pushdown applies."""
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
+        """Resumable probe plan: a generator that yields typed probe sets
+        (``executor.ComparePairs`` / ``ScoreEach`` / ``ScoreBatches`` /
+        ``RankWindows`` / ``SerialProbe``) and receives their
+        direction-folded results at the yield point; returns keys in output
+        order (may exceed ``spec.effective_limit``; ``execute`` truncates).
+        The plan never touches the oracle itself, so its driver decides
+        whether a round runs as one submission (solo), element-wise
+        (``coalesce=False`` diagnostic baseline), or merged with other
+        plans' rounds (``executor.ProbePlanExecutor``)."""
 
     def execute(self, keys: Sequence[Key], oracle: Oracle, spec: SortSpec) -> SortResult:
+        """Solo synchronous execution: drive this path's plan to completion,
+        resolving each probe set through :class:`Ordering`'s round verbs."""
         snap = oracle.ledger.snapshot()
         ordering = Ordering(oracle, spec)
-        out = self._order(list(keys), ordering, spec)
+        out = drive_plan(self._plan(list(keys), spec), ordering,
+                         coalesce=self.params.coalesce)
         k = spec.effective_limit(len(keys))
         out = out[:k]
         view = oracle.ledger.since(snap)

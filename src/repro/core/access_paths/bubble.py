@@ -6,26 +6,28 @@ A window of ``m`` keys is ranked listwise, then the window slides by
 LIMIT K only ``ceil(K/h)`` passes are needed — O(K*N/m^2) calls vs
 O(N^2/m^2) for the full sort (Table 1).
 
-Round batching (``params.coalesce``): windows within one pass form a strict
-dependency chain (each overlaps its predecessor by ``m - h``), but windows of
-*successive passes* are independent once the region they read has been fully
-written by the previous pass.  We therefore software-pipeline the passes:
-the full schedule of window ops is known statically, and each round greedily
-takes every op whose earlier overlapping ops have all completed — a
-dependency-preserving reorder, so every window call sees exactly the input it
-would see sequentially and output order is byte-identical for any
+Probe plan: windows within one pass form a strict dependency chain (each
+overlaps its predecessor by ``m - h``), but windows of *successive passes*
+are independent once the region they read has been fully written by the
+previous pass.  The plan therefore software-pipelines the passes: the full
+schedule of window ops is known statically, and each round greedily takes
+every op whose earlier overlapping ops have all completed — a
+dependency-preserving reorder, so every window call sees exactly the input
+it would see sequentially and output order is byte-identical for any
 deterministic-per-prompt oracle.  In steady state a round carries one window
-from each in-flight pass (a wavefront), cutting serving submissions from
+from each in-flight pass (a wavefront), and each round suspends the plan as
+ONE ``RankWindows`` probe set — cutting serving submissions from
 ``passes * windows_per_pass`` to ``~windows_per_pass + 2 * passes``.
 """
 from __future__ import annotations
 
 import bisect
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
+from ..executor import RankWindows
 from ..types import Key, SortSpec
-from .base import AccessPath, Ordering, PathParams, register
+from .base import AccessPath, PathParams, register
 
 
 def _pass_starts(n: int, m: int, h: int, fixed: int) -> list[int]:
@@ -40,13 +42,14 @@ def _pass_starts(n: int, m: int, h: int, fixed: int) -> list[int]:
 
 @register("ext_bubble")
 class ExternalBubbleSort(AccessPath):
-    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
         keys = list(keys)
         n = len(keys)
         m = max(2, self.params.batch_size)
         h = max(m // 2, 1)
         if n <= m:
-            return ordering.window(keys)
+            ranked = yield RankWindows([keys])
+            return ranked[0]
         want = spec.effective_limit(n)
         n_passes = math.ceil(want / h)
 
@@ -58,11 +61,6 @@ class ExternalBubbleSort(AccessPath):
                 break
             ops.extend(_pass_starts(n, m, h, fixed))
 
-        if not self.params.coalesce:
-            for s in ops:  # seed behavior: one listwise call at a time
-                keys[s:s + m] = ordering.window(keys[s:s + m])
-            return keys
-
         # Wavefront rounds by dependency level: op k conflicts with every
         # earlier op whose start lies within (s-m, s+m) (overlapping [s, s+m)
         # regions), and ops sharing a start conflict pairwise, so their
@@ -70,7 +68,7 @@ class ExternalBubbleSort(AccessPath):
         # conflicting start carries the max level.  level[k] = 1 + max over
         # those predecessors; ops of one level have pairwise-disjoint
         # regions (conflicting ops always differ in level), so each level is
-        # one batched windows submission applied in place.  This is a
+        # one RankWindows probe set applied in place.  This is a
         # dependency-preserving reorder computed in O(ops * m/h * log).
         at: dict[int, list[int]] = {}
         for k, s in enumerate(ops):
@@ -93,8 +91,8 @@ class ExternalBubbleSort(AccessPath):
         for k, lvl in enumerate(levels):
             by_level[lvl].append(k)  # index order within a level
         for round_ids in by_level:
-            ranked = ordering.windows([keys[ops[k]:ops[k] + m]
-                                       for k in round_ids])
+            ranked = yield RankWindows([keys[ops[k]:ops[k] + m]
+                                        for k in round_ids])
             for k, r in zip(round_ids, ranked):
                 keys[ops[k]:ops[k] + m] = r
         return keys

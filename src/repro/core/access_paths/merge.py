@@ -11,22 +11,30 @@ run may precede the survivors.
 LIMIT-K pushdown: merged runs are truncated to K, so run sizes stop growing at
 K and each subsequent round halves the number of runs — a geometric series
 bounded by O(N/m), giving O(N/m * (2 + log K/m)) total calls (Table 1).
+
+Probe plan: Phase 1 is one ``RankWindows`` probe set (the paper's "in
+parallel" run generation).  In Phase 2 every merge of a round advances in
+lockstep — each step gathers the current window buffer of every unfinished
+merge cursor and suspends as ONE ``RankWindows`` probe set, so a round costs
+max-refills submissions instead of sum-of-refills, and the executor can
+interleave these steps with other plans' rounds.
 """
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
+from ..executor import RankWindows
 from ..types import Key, SortSpec
-from .base import AccessPath, Ordering, PathParams, _log2, register
+from .base import AccessPath, PathParams, _log2, register
 
 
 class _MergeCursor:
     """State of one in-flight two-way merge (Alg. 5): run pointers, emitted
     output, and the current window buffer awaiting an LLM ranking.  Encodes
-    exactly the emission/consistency-repair logic of the sequential
-    ``_merge`` — including the LIMIT-K early stop at ``cap`` — so lockstep
-    execution is call-for-call identical."""
+    the emission/consistency-repair logic of the sequential Alg. 5 loop —
+    including the LIMIT-K early stop at ``cap`` — so lockstep execution is
+    call-for-call identical to merging the pairs one at a time."""
 
     def __init__(self, l1: list[Key], l2: list[Key], h: int,
                  cap: Optional[int] = None):
@@ -58,8 +66,18 @@ class _MergeCursor:
         return self.l1[self.i:self.i + t1] + self.l2[self.j:self.j + t2]
 
     def consume(self, ranked: list[Key]) -> None:
-        """Apply one ranked buffer: emit (projected onto the runs) until one
-        side's buffered portion is exhausted, then advance the pointers."""
+        """Apply one ranked buffer: emit until one side's buffered portion
+        is exhausted, then advance the pointers.
+
+        Consistency repair: the paper's emission loop advances each run's
+        pointer by the COUNT of items emitted from that run, which implicitly
+        assumes the LLM's buffer ranking preserves each run's internal order.
+        A noisy ranking can invert two same-run items, double-emitting one
+        and dropping another.  We therefore *project* the ranked order onto
+        the runs: when the ranking says "next emit from run r", we emit run
+        r's next unconsumed item (runs are already sorted, so for a faithful
+        oracle this is the identity; under noise it guarantees the output is
+        a permutation)."""
         t1 = min(self.h, len(self.l1) - self.i)
         t2 = min(self.h, len(self.l2) - self.j)
         in_l1 = {k.uid for k in self.l1[self.i:self.i + t1]}
@@ -80,109 +98,48 @@ class _MergeCursor:
 
 @register("ext_merge")
 class ExternalMergeSort(AccessPath):
-    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
         keys = list(keys)
         m = max(2, self.params.batch_size)
+        h = max(m // 2, 1)
         cap = spec.limit  # truncate merged runs at K (Sec. 3.3)
+        if not keys:
+            return []
 
-        # Phase 1: run generation — independent listwise calls submitted as
-        # ONE batched request (the paper's "in parallel"); ModelOracle rides
-        # a single padded serving batch, SimulatedOracle loops.
+        # Phase 1: run generation — independent listwise calls, one round.
         chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
-        runs: list[list[Key]] = ordering.windows(chunks)
+        runs: list[list[Key]] = yield RankWindows(chunks)
         if cap is not None:
             # LIMIT-K pushdown starts at the runs themselves: a run's item
             # at position >= K trails K earlier run-mates in every merge
             runs = [r[:cap] for r in runs]
 
-        # Phase 2: iterative two-way merging.  With ``coalesce`` every merge
-        # of a round advances in lockstep: each iteration gathers the current
-        # window buffer of every unfinished merge and submits them as ONE
-        # batched windows call, so a round costs max-refills submissions
-        # instead of sum-of-refills.
+        # Phase 2: iterative two-way merging in lockstep — each step gathers
+        # the current buffer of every unfinished merge into one round.
         while len(runs) > 1:
             nxt: list[list[Key]] = []
-            if self.params.coalesce:
-                h = max(m // 2, 1)
-                slots: list = []  # per output slot: cursor | carried run
-                for i in range(0, len(runs), 2):
-                    if i + 1 < len(runs):
-                        slots.append(_MergeCursor(runs[i], runs[i + 1], h, cap))
-                    else:
-                        slots.append(runs[i])  # odd run carried forward
-                while True:
-                    active = [c for c in slots
-                              if isinstance(c, _MergeCursor) and not c.done]
-                    if not active:
-                        break
-                    ranked = ordering.windows([c.buffer() for c in active])
-                    for c, r in zip(active, ranked):
-                        c.consume(r)
-                for s in slots:
-                    merged = s.out if isinstance(s, _MergeCursor) else s
-                    if cap is not None:
-                        merged = merged[:cap]  # incl. carried odd runs
-                    nxt.append(merged)
-            else:
-                for i in range(0, len(runs), 2):
-                    if i + 1 < len(runs):
-                        nxt.append(self._merge(runs[i], runs[i + 1], m,
-                                               ordering, cap))
-                    else:
-                        # cap carried odd runs too, so run sizes actually
-                        # stop growing at K
-                        nxt.append(runs[i] if cap is None else runs[i][:cap])
+            slots: list = []  # per output slot: cursor | carried run
+            for i in range(0, len(runs), 2):
+                if i + 1 < len(runs):
+                    slots.append(_MergeCursor(runs[i], runs[i + 1], h, cap))
+                else:
+                    slots.append(runs[i])  # odd run carried forward
+            while True:
+                active = [c for c in slots
+                          if isinstance(c, _MergeCursor) and not c.done]
+                if not active:
+                    break
+                ranked = yield RankWindows([c.buffer() for c in active])
+                for c, r in zip(active, ranked):
+                    c.consume(r)
+            for s in slots:
+                merged = s.out if isinstance(s, _MergeCursor) else s
+                if cap is not None:
+                    merged = merged[:cap]  # incl. carried odd runs, so run
+                    # sizes actually stop growing at K
+                nxt.append(merged)
             runs = nxt
         return runs[0] if runs else []
-
-    # ---- Algorithm 5 ---------------------------------------------------------
-    @staticmethod
-    def _merge(l1: list[Key], l2: list[Key], m: int, ordering: Ordering,
-               cap: Optional[int] = None) -> list[Key]:
-        """Two-way merge with a sliding LLM-ranked buffer.
-
-        Consistency repair: the paper's emission loop advances each run's
-        pointer by the COUNT of items emitted from that run, which implicitly
-        assumes the LLM's buffer ranking preserves each run's internal order.
-        A noisy ranking can invert two same-run items, double-emitting one
-        and dropping another.  We therefore *project* the ranked order onto
-        the runs: when the ranking says "next emit from run r", we emit run
-        r's next unconsumed item (runs are already sorted, so for a faithful
-        oracle this is the identity; under noise it guarantees the output is
-        a permutation).
-
-        LIMIT-K pushdown (Alg. 5 + Sec. 3.3): once ``cap`` items are
-        emitted no further buffer windows are issued — the merged prefix is
-        already final, so ranking positions past K would be pure waste.
-        """
-        i = j = 0
-        out: list[Key] = []
-        h = max(m // 2, 1)
-        while i < len(l1) or j < len(l2):
-            if cap is not None and len(out) >= cap:
-                return out[:cap]
-            if i >= len(l1):
-                out.extend(l2[j:]); break
-            if j >= len(l2):
-                out.extend(l1[i:]); break
-            t1 = min(h, len(l1) - i)
-            t2 = min(h, len(l2) - j)
-            buf = l1[i:i + t1] + l2[j:j + t2]
-            in_l1 = {k.uid for k in l1[i:i + t1]}
-            ranked = ordering.window(buf)
-            e1 = e2 = 0
-            for x in ranked:
-                if x.uid in in_l1:
-                    out.append(l1[i + e1])   # next unconsumed from run 1
-                    e1 += 1
-                else:
-                    out.append(l2[j + e2])   # next unconsumed from run 2
-                    e2 += 1
-                if e1 == t1 or e2 == t2:
-                    break  # one side exhausted within this window -> refill
-            i += e1
-            j += e2
-        return out if cap is None else out[:cap]
 
     # ---- Table 1 --------------------------------------------------------------
     @classmethod

@@ -4,6 +4,13 @@
 * :class:`ExternalPointwise` — m keys per call, O(N/m), with the
   agreement-based adaptive batch-size search of Algorithm 1 (O(log2 m) billed
   calls thanks to the client-side cache).
+
+Both plans are single-round: every scoring call is independent, so the whole
+derivation is ONE ``ScoreEach`` / ``ScoreBatches`` probe set.  Algorithm 1's
+batch-size search is the one inherently *sequential* subroutine in the
+access-path layer (each doubling decision depends on the previous round's
+scores), so it is emitted as a ``SerialProbe`` — resolved immediately by its
+driver, never merged across plans.
 """
 from __future__ import annotations
 
@@ -12,6 +19,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from ..executor import ScoreBatches, ScoreEach, SerialProbe
 from ..types import InvalidOutputError, Key, SortSpec
 from ..oracles.cache import CachingOracle
 from .base import AccessPath, Ordering, PathParams, register
@@ -24,13 +32,9 @@ def _stable_sort_by(keys: Sequence[Key], values: Sequence[float]) -> list[Key]:
 
 @register("pointwise")
 class Pointwise(AccessPath):
-    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
-        if self.params.coalesce:
-            # all N single-key calls are independent: one round
-            return _stable_sort_by(keys, ordering.scores_each(keys))
-        vals: list[float] = []
-        for k in keys:
-            vals.extend(ordering.scores([k]))
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
+        keys = list(keys)
+        vals = yield ScoreEach(keys)   # all N single-key calls: one round
         return _stable_sort_by(keys, vals)
 
     @classmethod
@@ -71,16 +75,17 @@ class ExternalPointwise(AccessPath):
                 return m
         return m
 
-    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
-        m = self.choose_batch_size(keys, ordering) if self.params.batch_size == 0 \
-            else self.params.batch_size
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
+        keys = list(keys)
+        if self.params.batch_size == 0:
+            m = yield SerialProbe(lambda o: self.choose_batch_size(keys, o))
+        else:
+            m = self.params.batch_size
         self._chosen_m = m
         chunks = [keys[i:i + m] for i in range(0, len(keys), m)]
-        if self.params.coalesce:
-            # all N/m m-key calls are independent: one round
-            vals = [v for vs in ordering.scores_many(chunks) for v in vs]
-        else:
-            vals = [v for c in chunks for v in ordering.scores(c)]
+        # all N/m m-key calls are independent: one round
+        nested = yield ScoreBatches(chunks)
+        vals = [v for vs in nested for v in vs]
         return _stable_sort_by(keys, vals)
 
     def describe_params(self) -> dict:

@@ -11,17 +11,29 @@
 
 LIMIT-K pushdown = partial quick sort (Martinez '04): only the prefix-covering
 partitions are recursed into, giving O(v(N + K log K)) calls.
+
+Probe plan: the recursion is flattened into a **wavefront over partitions**.
+Every live subproblem (a segment awaiting partitioning, at its pivot or
+peer-vote stage, or a 2-element segment awaiting its single comparison)
+contributes its ready comparisons to ONE ``ComparePairs`` round per
+scheduling step, so sibling partitions — which the old recursive form
+serialized — advance together and the plan suspends ~2·depth times instead
+of ~2·(#partitions).  Pruning is decided the moment a partition's split is
+known: a child whose output offset falls at or past LIMIT K is never
+expanded, exactly the calls the sequential recursion would skip.  The
+comparison set (and therefore the ledger multiset) is identical to the
+recursive form; only the round grouping changes.
 """
 from __future__ import annotations
 
 import hashlib
-import math
 from typing import Optional, Sequence
 
 import numpy as np
 
+from ..executor import ComparePairs
 from ..types import Key, SortSpec
-from .base import AccessPath, Ordering, PathParams, _log2, register
+from .base import AccessPath, PathParams, _log2, register
 
 
 def _det_sample(pool: list[Key], k: int, seed_parts) -> list[Key]:
@@ -36,70 +48,123 @@ def _det_sample(pool: list[Key], k: int, seed_parts) -> list[Key]:
     return [pool[i] for i in idx]
 
 
+def _flatten(piece, out: list) -> None:
+    """In-order traversal of the nested slot tree built by the plan."""
+    for item in piece:
+        if isinstance(item, Key):
+            out.append(item)
+        else:
+            _flatten(item, out)
+
+
 @register("quick")
 class QuickSort(AccessPath):
     """Set ``params.votes`` to 1 for vanilla, 3 for the paper's ``quick_3``."""
 
-    def _order(self, keys, ordering: Ordering, spec: SortSpec) -> list[Key]:
-        return self._sort(list(keys), ordering, spec.limit)
-
-    # ---- recursive partial quick sort -------------------------------------
-    def _sort(self, keys: list[Key], ordering: Ordering, limit: Optional[int]) -> list[Key]:
+    # ---- wavefront probe plan ---------------------------------------------
+    def _plan(self, keys: Sequence[Key], spec: SortSpec):
+        keys = list(keys)
         if len(keys) <= 1:
             return keys
-        if len(keys) == 2:
-            a, b = keys
-            return [a, b] if ordering.before(a, b) else [b, a]
-        pivot, rest = keys[0], keys[1:]
-        front, back = self._partition(pivot, rest, ordering)
-        out = self._sort(front, ordering, limit)
-        if limit is not None and len(out) >= limit:
-            return out[:limit]
-        out = out + [pivot]
-        rem = None if limit is None else limit - len(out)
-        if rem is None or rem > 0:
-            out = out + self._sort(back, ordering, rem)
+        out_root: list = []
+        active: list[dict] = []
+
+        def spawn(seg: list[Key], limit: Optional[int], slot: list) -> None:
+            # a child whose local LIMIT budget is exhausted would only rank
+            # positions >= K: never expanded (partial quick sort pruning)
+            if limit is not None and limit <= 0:
+                return
+            if len(seg) <= 1:
+                slot.append(list(seg))
+                return
+            stage = "pair" if len(seg) == 2 else "pivot"
+            active.append({"keys": list(seg), "limit": limit, "slot": slot,
+                           "stage": stage})
+
+        spawn(keys, spec.limit, out_root)
+        while active:
+            current, active = active, []
+            pairs: list = []
+            spans: list[tuple[int, int]] = []
+            for node in current:
+                prs = self._node_pairs(node)
+                spans.append((len(pairs), len(pairs) + len(prs)))
+                pairs.extend(prs)
+            flags = yield ComparePairs(pairs)
+            for node, (i, j) in zip(current, spans):
+                self._node_advance(node, flags[i:j], spawn, active)
+        out: list[Key] = []
+        _flatten(out_root, out)
         return out
 
-    # ---- Algorithm 3 partition ---------------------------------------------
-    # Round structure: every comparison in the partition is independent once
-    # its inputs are known, so the whole partition is at most TWO rounds —
-    # round 1: all |rest| pivot comparisons; round 2: all peer votes (peers
-    # are sampled from the round-1 split).  With ``coalesce`` each round is
-    # one backend submission; otherwise the seed's sequential point calls.
-    def _partition(self, pivot: Key, rest: list[Key], ordering: Ordering):
-        v = self.params.votes
-        coalesce = self.params.coalesce
-        if coalesce:  # round 1: all pivot comparisons in one submission
-            flags = ordering.before_many([(x, pivot) for x in rest])
-            initial = {x.uid: f for x, f in zip(rest, flags)}
-        else:
-            initial = {x.uid: ordering.before(x, pivot) for x in rest}
-        if v <= 1:
-            front = [x for x in rest if initial[x.uid]]
-            back = [x for x in rest if not initial[x.uid]]
-            return front, back
+    def _node_pairs(self, node: dict) -> list:
+        """The comparisons this subproblem needs at its current stage."""
+        if node["stage"] == "pair":
+            a, b = node["keys"]
+            return [(a, b)]
+        if node["stage"] == "pivot":
+            pivot, rest = node["keys"][0], node["keys"][1:]
+            return [(x, pivot) for x in rest]
+        return node["flat_peers"]          # stage == "peers"
 
-        init_front = [x for x in rest if initial[x.uid]]
-        init_back = [x for x in rest if not initial[x.uid]]
+    def _node_advance(self, node: dict, res: list, spawn, active: list) -> None:
+        """Consume one round's results, then finalize or re-arm the node."""
+        if node["stage"] == "pair":
+            a, b = node["keys"]
+            node["slot"].append([a, b] if res[0] else [b, a])
+            return
+        pivot, rest = node["keys"][0], node["keys"][1:]
+        if node["stage"] == "pivot":
+            initial = {x.uid: f for x, f in zip(rest, res)}
+            if self.params.votes <= 1:
+                front = [x for x in rest if initial[x.uid]]
+                back = [x for x in rest if not initial[x.uid]]
+                self._finalize(node, pivot, front, back, spawn)
+                return
+            # arm the peer-vote round: peers sampled from the opposite
+            # initial partition (Algorithm 3)
+            init_front = [x for x in rest if initial[x.uid]]
+            init_back = [x for x in rest if not initial[x.uid]]
+            peers_of: dict[int, list[Key]] = {}
+            for x in rest:
+                pool = init_back if initial[x.uid] else init_front
+                peers_of[x.uid] = _det_sample(
+                    [y for y in pool if y.uid != x.uid],
+                    self.params.votes - 1, ("qs-peers", x.uid, pivot.uid))
+            node["initial"] = initial
+            node["peers_of"] = peers_of
+            node["flat_peers"] = [(x, y) for x in rest
+                                  for y in peers_of[x.uid]]
+            node["stage"] = "peers"
+            active.append(node)
+            return
+        # stage == "peers": Algorithm 2's deferred weighted-vote resolution
+        flat_res = iter(res)
+        results_of = {x.uid: [next(flat_res) for _ in node["peers_of"][x.uid]]
+                      for x in rest}
+        front, back = self._resolve_partition(
+            rest, node["initial"], node["peers_of"], results_of)
+        self._finalize(node, pivot, front, back, spawn)
 
-        # round 2: every item's peer votes (sampled from the opposite
-        # round-1 partition) — all independent, one submission.
-        peers_of: dict[int, list[Key]] = {}
-        for x in rest:
-            pool = init_back if initial[x.uid] else init_front
-            peers_of[x.uid] = _det_sample(
-                [y for y in pool if y.uid != x.uid], v - 1,
-                ("qs-peers", x.uid, pivot.uid))
-        if coalesce:
-            flat = [(x, y) for x in rest for y in peers_of[x.uid]]
-            flat_res = iter(ordering.before_many(flat))
-            results_of = {x.uid: [next(flat_res) for _ in peers_of[x.uid]]
-                          for x in rest}
-        else:
-            results_of = {x.uid: [ordering.before(x, y) for y in peers_of[x.uid]]
-                          for x in rest}
+    def _finalize(self, node: dict, pivot: Key, front: list[Key],
+                  back: list[Key], spawn) -> None:
+        """Split known: schedule both children (they run concurrently from
+        the next round on) and prune everything past the LIMIT budget."""
+        slot, limit = node["slot"], node["limit"]
+        front_slot: list = []
+        slot.append(front_slot)
+        spawn(front, limit, front_slot)
+        if limit is not None and len(front) >= limit:
+            return                          # pivot and back land past K
+        slot.append([pivot])
+        rem = None if limit is None else limit - len(front) - 1
+        back_slot: list = []
+        slot.append(back_slot)
+        spawn(back, rem, back_slot)
 
+    # ---- Algorithm 2 vote resolution ---------------------------------------
+    def _resolve_partition(self, rest: list[Key], initial: dict,
+                           peers_of: dict, results_of: dict):
         front: list[Key] = []
         back: list[Key] = []
         placed: dict[int, bool] = {}  # uid -> placed-in-front?

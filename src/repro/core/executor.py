@@ -1,0 +1,357 @@
+"""Probe-plan executor: resumable access paths over a shared probe stream.
+
+An access path no longer *calls* the oracle mid-algorithm; it *describes*
+its next round of independent probes by yielding a typed probe set and
+suspends until the results arrive at the yield point:
+
+ * :class:`ComparePairs`  — pairwise comparisons; results are
+   ``[a precedes b in the output]`` booleans (direction already folded),
+ * :class:`ScoreEach`     — single-key pointwise scores (ascending sort of
+   the returned values gives output order),
+ * :class:`ScoreBatches`  — independent m-key scoring calls,
+ * :class:`RankWindows`   — independent listwise windows, returned in
+   output order,
+ * :class:`InquireEach`   — membership inquiries (Prompt Block 4),
+ * :class:`SerialProbe`   — escape hatch for inherently sequential,
+   data-dependent subroutines (Alg. 1 adaptive batch sizing): resolved by
+   calling ``fn(ordering)`` immediately and never merged across plans.
+
+Solo execution (:meth:`AccessPath.execute`) drives a single plan through
+:func:`drive_plan`, resolving each probe set with the matching
+:class:`~repro.core.access_paths.base.Ordering` round verb — so the
+retry/binary-split fallback, the billing convention, and the output are
+exactly the PR-1 synchronous semantics (``Ordering``'s round verbs are the
+thin synchronous adapter over single-plan execution).
+
+Concurrent execution (:class:`ProbePlanExecutor`) drives any number of
+plans in **ticks**: every tick, each suspended plan's ready probe set is
+resolved once (fairness: no plan waits more than one tick behind its
+round-mates), and on a deferred-capable backend (ModelOracle + a
+``BatchScheduler``) all plans' probes of the tick ride ONE scheduler drain
+— merged into shared length-bucketed submissions with cross-plan dedup of
+identical prompts.  Per-plan ledger records are tracked even on a shared
+oracle, so a plan's accounting under the executor is record-for-record
+identical to its solo run.  See DESIGN.md "Probe-plan executor".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from .oracles.base import CallRecord, LedgerView
+from .types import InvalidOutputError, Key, SortResult, SortSpec
+
+
+# --------------------------------------------------------------- probe sets
+@dataclass
+class ComparePairs:
+    """Result: ``[a precedes b in the output]`` per pair."""
+    pairs: list  # [(Key, Key)]
+
+
+@dataclass
+class ScoreEach:
+    """Result: one direction-folded score per key (pointwise billing)."""
+    keys: list
+
+
+@dataclass
+class ScoreBatches:
+    """Result: one direction-folded score list per chunk (one m-key call
+    each — the external-pointwise billing regime)."""
+    chunks: list  # [[Key]]
+
+
+@dataclass
+class RankWindows:
+    """Result: each window's keys permuted into output order."""
+    batches: list  # [[Key]]
+
+
+@dataclass
+class InquireEach:
+    """Result: one membership boolean per key (no direction to fold)."""
+    keys: list
+
+
+@dataclass
+class SerialProbe:
+    """Sequential, data-dependent subroutine: resolved as ``fn(ordering)``
+    the moment its plan is serviced; opaque to cross-plan merging."""
+    fn: Callable
+
+
+class PlanCancelled(RuntimeError):
+    """A plan was cancelled by its driver (budget cut, short-circuit)."""
+
+
+# ---------------------------------------------------------- sync resolution
+def resolve_probes(ordering, ps, coalesce: bool = True):
+    """Resolve one probe set against an :class:`Ordering` synchronously.
+
+    ``coalesce=True`` uses the round verbs (one backend submission where the
+    oracle supports it, retry/split fallback per sub-batch); ``coalesce=False``
+    replays the seed's sequential point-call structure — same results under
+    any deterministic-per-prompt oracle, same ledger multiset."""
+    if isinstance(ps, ComparePairs):
+        if coalesce:
+            return ordering.before_many(ps.pairs)
+        return [ordering.before(a, b) for a, b in ps.pairs]
+    if isinstance(ps, ScoreEach):
+        if coalesce:
+            return ordering.scores_each(ps.keys)
+        out = []
+        for k in ps.keys:
+            out.extend(ordering.scores([k]))
+        return out
+    if isinstance(ps, ScoreBatches):
+        if coalesce:
+            return ordering.scores_many(ps.chunks)
+        return [ordering.scores(list(c)) for c in ps.chunks]
+    if isinstance(ps, RankWindows):
+        if coalesce:
+            return ordering.windows(ps.batches)
+        return [ordering.window(list(b)) for b in ps.batches]
+    if isinstance(ps, InquireEach):
+        crit = ordering.spec.criteria
+        if coalesce:
+            return ordering.oracle.inquire_batch(list(ps.keys), crit)
+        return [ordering.oracle.inquire(k, crit) for k in ps.keys]
+    if isinstance(ps, SerialProbe):
+        return ps.fn(ordering)
+    raise TypeError(f"unknown probe set {type(ps).__name__}")
+
+
+def drive_plan(gen, ordering, coalesce: bool = True):
+    """Drive one plan to completion synchronously (the solo adapter used by
+    :meth:`AccessPath.execute`); returns the plan's return value."""
+    try:
+        ps = next(gen)
+        while True:
+            ps = gen.send(resolve_probes(ordering, ps, coalesce))
+    except StopIteration as stop:
+        return stop.value
+
+
+# ----------------------------------------------------- deferred round glue
+_DEFERRED_KIND = {
+    ComparePairs: "compare",
+    ScoreEach: "score_each",
+    ScoreBatches: "score_batches",
+    RankWindows: "rank_windows",
+    InquireEach: "inquire",
+}
+
+
+def _deferred_payload(ps):
+    if isinstance(ps, ComparePairs):
+        return list(ps.pairs)
+    if isinstance(ps, (ScoreEach, InquireEach)):
+        return list(ps.keys)
+    if isinstance(ps, ScoreBatches):
+        return [list(c) for c in ps.chunks]
+    if isinstance(ps, RankWindows):
+        return [list(b) for b in ps.batches]
+    return None
+
+
+def _fold_raw(ordering, ps, raw):
+    """Apply the Ordering direction fold to a deferred round's raw results —
+    the same post-processing the synchronous round verbs perform."""
+    if isinstance(ps, ComparePairs):
+        return ordering.fold_compares(raw)
+    if isinstance(ps, ScoreEach):
+        return ordering.fold_scores(raw)
+    if isinstance(ps, ScoreBatches):
+        return [ordering.fold_scores(v) for v in raw]
+    if isinstance(ps, RankWindows):
+        return [ordering.fold_window_result(r) for r in raw]
+    return raw
+
+
+# ------------------------------------------------------------------- plans
+class PlanRun:
+    """One plan's execution state under the executor."""
+
+    def __init__(self, name: str, gen, ordering, coalesce: bool = True,
+                 path=None):
+        self.name = name
+        self.gen = gen
+        self.ordering = ordering
+        self.coalesce = coalesce
+        self.path = path               # AccessPath instance (describe_params)
+        self.pending = None            # probe set awaiting resolution
+        self.primed = False
+        self.done = False
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.records: list[CallRecord] = []   # this plan's ledger slice
+        self.ticks = 0
+
+    def cancel(self, reason: str = "cancelled") -> None:
+        if self.done:
+            return
+        self.gen.close()
+        self.done = True
+        self.error = PlanCancelled(reason)
+
+    # internal: advance the generator one step
+    def _advance(self, value) -> None:
+        try:
+            self.pending = self.gen.send(value) if self.primed else next(self.gen)
+            self.primed = True
+        except StopIteration as stop:
+            self.done = True
+            self.result = stop.value
+        except InvalidOutputError as e:
+            # unrecoverable structural failure escaping the retry/split
+            # fallback — exactly what a solo run would raise
+            self.done = True
+            self.error = e
+
+    def _fail(self, e: BaseException) -> None:
+        self.gen.close()
+        self.done = True
+        self.error = e
+
+
+class ProbePlanExecutor:
+    """Dataflow executor over any number of probe plans.
+
+    Tick semantics: every tick, each live plan's pending probe set is
+    resolved exactly once and the plan resumes with the results.  With a
+    ``scheduler`` (a :class:`~repro.serving.scheduler.BatchScheduler`) and
+    deferred-capable oracles (``begin_probe_round``/``finish_probe_round``
+    — ModelOracle's logit probes, which cannot fail structurally), all
+    plans' probes of a tick are enqueued first and drained in ONE
+    ``run_probes`` call: merged length-bucketed submissions, identical
+    prompts deduplicated across plans.  Oracles without deferred support
+    (Simulated/Exact/Caching wrappers) resolve synchronously inside the
+    tick — same interleaving, no serving-level merge.
+
+    Billing: each plan's ledger records are captured per resolution, so
+    ``run.records`` is record-for-record what a solo run of the same plan
+    would have billed, even when plans share one oracle instance.
+    """
+
+    def __init__(self, scheduler=None):
+        self.scheduler = scheduler
+        self.runs: list[PlanRun] = []
+        self.ticks = 0
+
+    # ------------------------------------------------------------- submit
+    def submit_plan(self, gen, ordering, name: str = "",
+                    coalesce: bool = True, path=None) -> PlanRun:
+        run = PlanRun(name or f"plan-{len(self.runs)}", gen, ordering,
+                      coalesce=coalesce, path=path)
+        self.runs.append(run)
+        return run
+
+    def submit_path(self, path, keys, oracle, spec: SortSpec,
+                    name: str = "") -> PlanRun:
+        """Convenience: submit one access path's plan on ``keys``."""
+        from .access_paths.base import Ordering
+        ordering = Ordering(oracle, spec)
+        return self.submit_plan(path._plan(list(keys), spec), ordering,
+                                name=name or path.name,
+                                coalesce=path.params.coalesce, path=path)
+
+    # --------------------------------------------------------------- ticks
+    def _can_defer(self, run: PlanRun, ps) -> bool:
+        return (self.scheduler is not None and run.coalesce
+                and type(ps) in _DEFERRED_KIND
+                and hasattr(run.ordering.oracle, "begin_probe_round"))
+
+    def tick(self) -> bool:
+        """One scheduling tick; returns True while any plan remains live."""
+        live = []
+        for run in self.runs:
+            if run.done:
+                continue
+            if not run.primed:
+                run._advance(None)
+            if not run.done:
+                live.append(run)
+        if not live:
+            return False
+        self.ticks += 1
+        deferred: list[tuple[PlanRun, object, object]] = []
+        ready: list[tuple[PlanRun, object]] = []
+        for run in live:
+            run.ticks += 1
+            ps = run.pending
+            ledger = run.ordering.oracle.ledger
+            snap = ledger.snapshot()
+            if self._can_defer(run, ps):
+                payload = _deferred_payload(ps)
+                token = run.ordering.oracle.begin_probe_round(
+                    _DEFERRED_KIND[type(ps)], payload,
+                    run.ordering.spec.criteria, self.scheduler)
+                run.records.extend(ledger.records[snap:])
+                deferred.append((run, ps, token))
+                continue
+            try:
+                value = resolve_probes(run.ordering, ps, run.coalesce)
+            except InvalidOutputError as e:
+                run.records.extend(ledger.records[snap:])
+                run._fail(e)
+                continue
+            run.records.extend(ledger.records[snap:])
+            ready.append((run, value))
+        if deferred:
+            # ONE drain for the whole tick: every deferred plan's probes in
+            # shared length-bucketed submissions, identical prompts deduped
+            self.scheduler.probe_results.update(self.scheduler.run_probes())
+            for run, ps, token in deferred:
+                raw = run.ordering.oracle.finish_probe_round(
+                    token, self.scheduler)
+                ready.append((run, _fold_raw(run.ordering, ps, raw)))
+        for run, value in ready:
+            run._advance(value)
+        return any(not r.done for r in self.runs)
+
+    def run(self, on_tick: Optional[Callable] = None) -> list[PlanRun]:
+        """Tick until every plan completes.  ``on_tick(self)`` runs after
+        each tick and may submit new plans or cancel running ones."""
+        while True:
+            progressed = self.tick()
+            if on_tick is not None:
+                on_tick(self)
+            if not progressed and all(r.done for r in self.runs):
+                break
+        return self.runs
+
+
+def auto_scheduler(oracles: Sequence):
+    """Build a shared probe queue (``BatchScheduler``) when every
+    deferred-capable oracle in ``oracles`` rides one engine; None otherwise
+    (plans still interleave tick-by-tick, rounds resolve synchronously
+    per plan)."""
+    engines = {}
+    for o in oracles:
+        if (hasattr(o, "begin_probe_round")
+                and getattr(o, "engine", None) is not None):
+            engines[id(o.engine)] = o.engine
+    if len(engines) != 1:
+        return None
+    from ..serving.scheduler import BatchScheduler
+    (engine,) = engines.values()
+    return BatchScheduler(engine)
+
+
+# ----------------------------------------------------------------- results
+def plan_sort_result(run: PlanRun, spec: SortSpec, n_keys: int,
+                     prices) -> SortResult:
+    """Build the :class:`SortResult` a solo ``AccessPath.execute`` would
+    have returned, from a finished plan's output and per-plan records."""
+    if run.error is not None:
+        raise run.error
+    view = LedgerView(list(run.records))
+    k = spec.effective_limit(n_keys)
+    return SortResult(
+        order=list(run.result)[:k],
+        path=run.path.name if run.path is not None else run.name,
+        params=run.path.describe_params() if run.path is not None else {},
+        n_calls=view.n_calls, input_tokens=view.input_tokens,
+        output_tokens=view.output_tokens, cost=view.cost(prices),
+    )

@@ -7,12 +7,21 @@
 
 ``path="auto"`` routes through the budget-aware optimizer; any registry name
 ("pointwise", "ext_merge", ...) forces a static access path.
+
+``llm_order_by_many(queries)`` executes several ORDER BY queries
+*concurrently* over one serving stack: each query's access path runs as a
+resumable probe plan, and every scheduling tick merges the ready probes of
+all queries into shared serving submissions (with cross-query dedup of
+identical prompts).  Per-query results and ledgers are byte-identical to
+running each query solo.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .access_paths.base import PathParams, make_path
+from .executor import ProbePlanExecutor, auto_scheduler, plan_sort_result
 from .optimizer.cost_model import CandidateSpec
 from .optimizer.optimizer import AccessPathOptimizer, OptimizerConfig, OptimizerReport
 from .types import Key, SortResult, SortSpec
@@ -38,6 +47,57 @@ def llm_order_by(keys: Sequence[Key], criteria: str, oracle: Oracle, *,
     )
     result, report = opt.choose_and_execute(keys, oracle, spec, judge_oracle=judge_oracle)
     return result, report
+
+
+@dataclass
+class OrderQuery:
+    """One concurrent LLM ORDER BY query for :func:`llm_order_by_many`.
+
+    Each query carries its OWN oracle so per-query billing stays exact;
+    oracles may (and for serving-level coalescing should) share one
+    engine — e.g. one ``ModelOracle(engine)`` per query."""
+
+    keys: Sequence[Key]
+    criteria: str
+    oracle: Oracle
+    descending: bool = False
+    limit: Optional[int] = None
+    path: str = "quick"
+    params: Optional[PathParams] = None
+
+
+def llm_order_by_many(queries: Sequence[OrderQuery], *,
+                      scheduler=None) -> list[SortResult]:
+    """Execute several LLM ORDER BY queries concurrently over one engine.
+
+    All queries' access-path plans advance together through a
+    :class:`~repro.core.executor.ProbePlanExecutor`: each scheduling tick
+    gathers the ready probe sets of every suspended plan and — on a
+    ModelOracle backend sharing one engine — merges them into shared
+    length-bucketed serving submissions, deduplicating identical prompts
+    across queries.  Results are aligned with ``queries``; each
+    ``SortResult``'s order AND accounting are ``==``-identical to running
+    that query alone (the executor tracks per-plan ledger records).
+
+    Static paths only — ``path="auto"`` (the optimizer) manages its own
+    concurrent pilot executor and cannot be nested here."""
+    for q in queries:
+        if q.path == "auto":
+            raise ValueError(
+                "llm_order_by_many supports static access paths only; run "
+                "path='auto' queries through llm_order_by")
+    if scheduler is None:
+        scheduler = auto_scheduler([q.oracle for q in queries])
+    ex = ProbePlanExecutor(scheduler=scheduler)
+    runs = []
+    for i, q in enumerate(queries):
+        spec = SortSpec(q.criteria, q.descending, q.limit)
+        ap = make_path(q.path, q.params or PathParams())
+        runs.append((q, spec, ex.submit_path(ap, q.keys, q.oracle, spec,
+                                             name=f"q{i}:{q.path}")))
+    ex.run()
+    return [plan_sort_result(run, spec, len(q.keys), q.oracle.prices)
+            for q, spec, run in runs]
 
 
 class Table:

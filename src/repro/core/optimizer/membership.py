@@ -9,8 +9,22 @@ from __future__ import annotations
 
 from typing import Sequence
 
+from ..executor import InquireEach
 from ..types import Key
 from ..oracles.base import Oracle
+
+
+def membership_plan(sample: Sequence[Key]):
+    """Probe-plan form of the gate: the whole sample's inquiries are ONE
+    ``InquireEach`` round, so under the optimizer's pilot executor the gate
+    rides the same scheduling tick (and, on a ModelOracle backend, the same
+    merged serving drain) as the candidates' first rounds.  Returns the
+    membership rate."""
+    sample = list(sample)
+    if not sample:
+        return 0.0
+    hits = yield InquireEach(sample)
+    return sum(hits) / len(sample)
 
 
 def membership_rate(sample: Sequence[Key], oracle: Oracle, criteria: str) -> float:

@@ -2,13 +2,17 @@
 
 Pipeline (choose_and_execute):
   1. draw a deterministic sample of ``sample_size`` keys;
-  2. **world-knowledge gate** — Inquiry Prompt on the sample, issued as ONE
-     round (``Oracle.inquire_batch``: a single serving submission on the
-     ModelOracle backend, billed per key); 100% membership => execute
-     pointwise directly (Sec. 5.2);
-  3. run every candidate on the sample, recording actual sampled cost and the
-     sample ranking each produces (failed/structurally-invalid candidates are
-     dropped);
+  2. **world-knowledge gate + pilot runs** — one probe-plan executor drives
+     the Inquiry-Prompt round (Sec. 5.2) AND every candidate's sample run
+     *concurrently*: the gate's inquiries ride the same scheduling tick as
+     the candidates' first rounds, and on a ModelOracle backend all plans'
+     probes merge into shared serving submissions instead of the pilots
+     starving the engine between each candidate's rounds.  100% membership
+     cancels the pilots and executes pointwise directly (the speculative
+     first pilot rounds are the price of overlapping the gate with
+     sampling); otherwise each surviving candidate's sampled cost and
+     sample ranking come from its per-plan ledger slice
+     (failed/structurally-invalid candidates are dropped);
   4. **cost extrapolation** — scale sampled cost by the Table-1 complexity
      ratio; filter candidates whose estimated full-run cost violates the
      user budget (Sec. 5.1/5.3, Fig. 5);
@@ -17,6 +21,13 @@ Pipeline (choose_and_execute):
      (pessimistic, Sec. 5.5), or 'oracle' (ground-truth upper-bound used in
      Table 3);
   6. execute the winner once over the full dataset.
+
+Budget-capped sampling under concurrency: with no budget every candidate is
+admitted at tick 1 (maximum merging).  With a budget, sampling must be
+spend-observed, so admission is cheapest-first and waits for the in-flight
+candidate — once spend crosses ``budget * sampling_fraction`` with at least
+one successful sample, the rest are dropped ("sampling-budget"), exactly
+the serial semantics.  The gate round still overlaps the first candidate.
 """
 from __future__ import annotations
 
@@ -26,14 +37,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..access_paths.base import PathParams
+from ..access_paths.base import Ordering
+from ..executor import (PlanCancelled, ProbePlanExecutor, auto_scheduler,
+                        plan_sort_result)
 from ..metrics import kendall_tau, kendall_tau_between, ndcg_between, ndcg_at_k
-from ..types import InvalidOutputError, Key, SortResult, SortSpec
+from ..types import Key, SortResult, SortSpec
 from ..oracles.base import Oracle
 from .borda import borda_consensus
 from .cost_model import CandidateSpec, default_candidates, estimate_full_cost
 from .judge import judge_select
-from .membership import is_world_knowledge
+from .membership import membership_plan
 
 COMPARISON_KINDS = ("quick", "ext_bubble", "ext_merge")
 
@@ -109,7 +122,8 @@ class AccessPathOptimizer:
     # ------------------------------------------------------------- main entry
     def choose_and_execute(self, keys: Sequence[Key], oracle: Oracle,
                            spec: SortSpec,
-                           judge_oracle: Optional[Oracle] = None
+                           judge_oracle: Optional[Oracle] = None,
+                           scheduler=None
                            ) -> tuple[SortResult, OptimizerReport]:
         keys = list(keys)
         cfg = self.config
@@ -118,19 +132,10 @@ class AccessPathOptimizer:
         sample = self._sample(keys)
         report.sample_uids = [k.uid for k in sample]
 
-        # -- stage 1: world-knowledge gate ---------------------------------
-        member, rate = is_world_knowledge(sample, oracle, spec.criteria,
-                                          cfg.membership_threshold)
-        report.membership_rate = rate
-        if member:
-            report.chosen = CandidateSpec("pointwise")
-            report.reason = "membership"
-            report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
-            result = report.chosen.make().execute(keys, oracle, spec)
-            report.execution_cost = result.cost
-            return result, report
-
-        # -- stage 2: candidate sample runs (cheapest-first, budget-capped) --
+        # -- stages 1+2: gate + pilot candidates on ONE executor -----------
+        # The membership gate's inquiry round and every candidate's sample
+        # run advance together: each tick merges their ready probes into a
+        # shared serving drain instead of looping candidate-by-candidate.
         sample_spec = SortSpec(spec.criteria, spec.descending,
                                None if spec.limit is None
                                else min(spec.limit, len(sample)))
@@ -141,17 +146,83 @@ class AccessPathOptimizer:
                              len(sample), k_s, c.params))
         sample_cap = (None if cfg.budget is None
                       else cfg.budget * cfg.sampling_fraction)
+
+        ex = ProbePlanExecutor(scheduler=scheduler if scheduler is not None
+                               else auto_scheduler([oracle]))
+        gate = ex.submit_plan(membership_plan(sample), Ordering(oracle, spec),
+                              name="membership")
+        pilots: list[tuple[CandidateSpec, object]] = []
+        backlog = list(ordered)
+
+        def admit(n: int) -> None:
+            while backlog and n > 0:
+                cand = backlog.pop(0)
+                pilots.append((cand, ex.submit_path(
+                    cand.make(), sample, oracle, sample_spec,
+                    name=cand.label)))
+                n -= 1
+
+        # no budget: every pilot rides the gate's tick; budget: cheapest
+        # rides it, the rest are admitted one per tick while under the cap
+        admit(len(backlog) if sample_cap is None else 1)
+        state: dict = {"member": False}
+
+        def on_tick(_ex) -> None:
+            if gate.done and "rate" not in state:
+                if gate.error is not None:
+                    # a structurally failing gate propagated before the
+                    # executor refactor; keep that contract rather than
+                    # reading a silent 0.0 membership rate
+                    raise gate.error
+                state["rate"] = gate.result
+                report.membership_rate = state["rate"]
+                if state["rate"] >= cfg.membership_threshold:
+                    state["member"] = True       # Sec. 5.2 short-circuit
+                    for _c, run in pilots:
+                        run.cancel("membership short-circuit")
+                    backlog.clear()
+                    return
+            if sample_cap is not None and backlog:
+                # Budget-capped sampling is spend-observed: admission waits
+                # for the in-flight candidate to finish, so the cap check
+                # sees its full sampled cost — the serial cheapest-first
+                # semantics.  (Speculatively overlapping candidates here
+                # either blows the cap with in-flight completions or, if
+                # they are cancelled, loses the estimates stage 3 needs to
+                # report over-budget drops.)
+                if not all(r.done for _c, r in pilots):
+                    return
+                spent_now = oracle.ledger.since(snap).cost(oracle.prices)
+                succeeded = any(r.done and r.error is None
+                                for _c, r in pilots)
+                if spent_now < sample_cap or not succeeded:
+                    admit(1)
+                else:
+                    for cand in backlog:
+                        report.dropped.append((cand.label, "sampling-budget"))
+                    backlog.clear()
+
+        ex.run(on_tick=on_tick)
+
+        if state["member"]:
+            report.chosen = CandidateSpec("pointwise")
+            report.reason = "membership"
+            report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
+            result = report.chosen.make().execute(keys, oracle, spec)
+            report.execution_cost = result.cost
+            return result, report
+
         alive: list[CandidateSpec] = []
-        for cand in ordered:
-            spent_now = oracle.ledger.since(snap).cost(oracle.prices)
-            if sample_cap is not None and alive and spent_now >= sample_cap:
-                report.dropped.append((cand.label, "sampling-budget"))
+        for cand, run in pilots:
+            if run.error is not None:
+                why = (str(run.error) if isinstance(run.error, PlanCancelled)
+                       else f"invalid-output: {run.error}")
+                report.dropped.append((cand.label, why))
                 continue
-            try:
-                res = cand.make().execute(sample, oracle, sample_spec)
-            except InvalidOutputError as e:  # unrecoverable structural failure
-                report.dropped.append((cand.label, f"invalid-output: {e}"))
-                continue
+            # the run's per-plan ledger slice IS its sampled cost — identical
+            # records to a solo execute() of the same candidate
+            res = plan_sort_result(run, sample_spec, len(sample),
+                                   oracle.prices)
             report.sample_results[cand.label] = res
             est = estimate_full_cost(cand, res.cost, len(sample), len(keys), spec.limit)
             report.est_costs[cand.label] = est

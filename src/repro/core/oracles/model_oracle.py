@@ -66,6 +66,23 @@ class ModelOracle(Oracle):
         perm = self.engine.rank_window([k.text for k in keys], criteria)
         return [keys[i] for i in perm]
 
+    @staticmethod
+    def _split_rounds(scores, batches, rank: bool):
+        """Split a flat per-key score list back into per-batch results:
+        stable-argsorted key permutations (``rank``) or raw score lists.
+        Shared by the synchronous round verbs AND finish_probe_round, so
+        deferred and solo interpretation cannot drift apart."""
+        out, i = [], 0
+        for b in batches:
+            s = scores[i:i + len(b)]
+            i += len(b)
+            if rank:
+                order = np.argsort(np.asarray(s), kind="stable")
+                out.append([b[j] for j in order])
+            else:
+                out.append(list(s))
+        return out
+
     def rank_batches(self, batches, criteria: str):
         """Parallel run generation: score every window's keys in ONE padded
         serving batch (shared criteria prefix), then split and argsort."""
@@ -78,14 +95,8 @@ class ModelOracle(Oracle):
                 "rank",
                 self.costs.rank_prefix + sum(self._real_tokens(k.text) for k in b),
                 self.costs.rank_out_per_key * len(b), n_keys=len(b))
-        scores = self.engine.score(flat, criteria)
-        out, i = [], 0
-        for b in batches:
-            s = scores[i:i + len(b)]
-            i += len(b)
-            order = np.argsort(np.asarray(s), kind="stable")
-            out.append([b[j] for j in order])
-        return out
+        return self._split_rounds(self.engine.score(flat, criteria),
+                                  batches, rank=True)
 
     def score_each(self, keys: Sequence[Key], criteria: str) -> list[float]:
         """N logical single-key score calls, ONE serving submission."""
@@ -106,12 +117,8 @@ class ModelOracle(Oracle):
             inp = self.costs.score_prefix + sum(self._real_tokens(k.text) for k in b)
             self.ledger.charge("score", inp, self.costs.score_out_per_key * len(b),
                                n_keys=len(b))
-        scores = self.engine.score(flat, criteria)
-        out, i = [], 0
-        for b in batches:
-            out.append(scores[i:i + len(b)])
-            i += len(b)
-        return out
+        return self._split_rounds(self.engine.score(flat, criteria),
+                                  batches, rank=False)
 
     # logit probes cannot fail structurally: the failure-isolating round
     # variants are exactly the batched submissions
@@ -123,6 +130,86 @@ class ModelOracle(Oracle):
 
     def try_score_each(self, keys: Sequence[Key], criteria: str) -> list:
         return self.score_each(keys, criteria)
+
+    # ---- deferred round verbs (probe-plan executor) -----------------------
+    # A round can be split into BEGIN (bill the ledger — identical records
+    # to the synchronous verb — and enqueue the probe prompts into a
+    # BatchScheduler's probe queue) and FINISH (read the drained logits
+    # back and interpret them).  The executor begins every suspended plan's
+    # round, drains the queue ONCE — merging all plans' probes into shared
+    # length-bucketed submissions with cross-plan dedup — then finishes.
+    # Deferral is sound here because logit probes cannot fail structurally,
+    # so the Ordering-level retry/split fallback has nothing to catch; the
+    # raw results only need the direction fold applied
+    # (``Ordering.fold_compares`` / ``fold_scores`` / ``fold_window_result``).
+
+    def begin_probe_round(self, kind: str, payload, criteria: str, sink):
+        """Bill one round now and enqueue its prompts into ``sink`` (a
+        BatchScheduler); returns an opaque token for
+        :meth:`finish_probe_round`.  ``kind`` is one of ``compare`` /
+        ``score_each`` / ``score_batches`` / ``rank_windows`` /
+        ``inquire``; ``payload`` matches the corresponding batch verb."""
+        eng = self.engine
+        if kind == "compare":
+            rids = []
+            for a, b in payload:
+                inp = (self.costs.compare_prefix + self._real_tokens(a.text)
+                       + self._real_tokens(b.text))
+                self.ledger.charge("compare", inp, self.costs.compare_out,
+                                   n_keys=2)
+                rids.append(sink.submit_probe(
+                    eng._compare_parts(a.text, b.text, criteria)))
+            return (kind, rids, None)
+        if kind == "score_each":
+            rids = []
+            for k in payload:
+                self.ledger.charge(
+                    "score",
+                    self.costs.score_prefix + self._real_tokens(k.text),
+                    self.costs.score_out_per_key, n_keys=1)
+                rids.append(sink.submit_probe(
+                    eng.score_parts(k.text, criteria)))
+            return (kind, rids, None)
+        if kind in ("score_batches", "rank_windows"):
+            bill_kind = "score" if kind == "score_batches" else "rank"
+            prefix = (self.costs.score_prefix if kind == "score_batches"
+                      else self.costs.rank_prefix)
+            per_key = (self.costs.score_out_per_key if kind == "score_batches"
+                       else self.costs.rank_out_per_key)
+            rids = []
+            for b in payload:
+                inp = prefix + sum(self._real_tokens(k.text) for k in b)
+                self.ledger.charge(bill_kind, inp, per_key * len(b),
+                                   n_keys=len(b))
+                rids.extend(sink.submit_probe(eng.score_parts(k.text, criteria))
+                            for k in b)
+            return (kind, rids, [list(b) for b in payload])
+        if kind == "inquire":
+            rids = []
+            for k in payload:
+                self.ledger.charge(
+                    "inquire",
+                    self.costs.inquire_prefix + self._real_tokens(k.text),
+                    self.costs.inquire_out)
+                rids.append(sink.submit_probe(self._inquire_prompt(k, criteria)))
+            return (kind, rids, None)
+        raise ValueError(f"unknown deferred round kind {kind!r}")
+
+    def finish_probe_round(self, token, sink):
+        """Interpret one begun round's logits from ``sink.probe_results``
+        (which the caller populated by draining the queue).  Returns the
+        same raw values the synchronous batch verb would have."""
+        from ...serving.engine import read_compare, read_score, read_yes_no
+        kind, rids, meta = token
+        logits = [sink.probe_results.pop(rid) for rid in rids]
+        if kind == "compare":
+            return [read_compare(l) for l in logits]
+        if kind == "score_each":
+            return [read_score(l) for l in logits]
+        if kind == "inquire":
+            return [read_yes_no(l) for l in logits]
+        return self._split_rounds([read_score(l) for l in logits], meta,
+                                  rank=(kind == "rank_windows"))
 
     def _inquire_prompt(self, key: Key, criteria: str) -> PromptParts:
         # structured (shared_prefix, per_key_suffix): a whole membership
@@ -175,6 +262,6 @@ class ModelOracle(Oracle):
                       f" {lst}\nRationale: {rat}\nQuality rating:")
             prompts.append(PromptParts(prefix, suffix))
         logits = self.engine.last_logits(prompts)
-        from ...serving.engine import TOK_HI, TOK_LO
-        scores = [float(l[TOK_HI] - l[TOK_LO]) for l in logits]
+        from ...serving.engine import read_score
+        scores = [read_score(l) for l in logits]
         return int(np.argmax(scores))

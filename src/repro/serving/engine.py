@@ -67,6 +67,23 @@ TOK_YES, TOK_NO = ord("Y"), ord("N")
 Prompt = Union[str, tuple]
 
 
+# ---- logit read-outs ------------------------------------------------------
+# Single-token probe interpretation, shared by the engine's synchronous
+# verbs (score / compare_many / yes_no_many) and by the ModelOracle's
+# deferred rounds, which enqueue prompts into a BatchScheduler's probe queue
+# and read the drained logits back themselves.
+def read_score(logits) -> float:
+    return float(logits[TOK_HI] - logits[TOK_LO])
+
+
+def read_compare(logits) -> int:
+    return 1 if logits[TOK_A] > logits[TOK_B] else -1
+
+
+def read_yes_no(logits) -> bool:
+    return bool(logits[TOK_YES] > logits[TOK_NO])
+
+
 @dataclass
 class ServeStats:
     prefill_tokens: int = 0
@@ -87,6 +104,14 @@ class ServeStats:
     prefix_misses: int = 0
     prefix_fill_submissions: int = 0
     prefix_tokens_saved: int = 0
+    # probe-submission row occupancy: ``probe_rows`` counts live prompts,
+    # ``probe_row_slots`` the padded rows actually prefetched (shape
+    # bucketing rounds each submission's row count up to a power of two).
+    # The difference is the padding slack a probe workload wastes — small
+    # serialized rounds burn proportionally more of it than merged drains
+    # (benchmarks/table7_executor.py).
+    probe_rows: int = 0
+    probe_row_slots: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -327,6 +352,8 @@ class ServeEngine:
                                           self._make_batch(tokens))
                 self.stats.prefill_tokens += int(tokens.size)
                 self.stats.calls += 1
+                self.stats.probe_rows += len(g)
+                self.stats.probe_row_slots += int(tokens.shape[0])
                 out[np.asarray(g)] = np.asarray(
                     logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
         for cls, lw, selected in window_jobs:
@@ -491,6 +518,8 @@ class ServeEngine:
                                        self._make_batch(arr))
         self.stats.prefill_tokens += int(arr.size)
         self.stats.calls += 1
+        self.stats.probe_rows += rows
+        self.stats.probe_row_slots += rows_p
         # monolithic baseline: cls tokens per padded row of this submission
         self.stats.prefix_tokens_saved += rows_p * cls - int(arr.size)
         return np.asarray(logits.astype(jnp.float32))[:rows]
@@ -498,11 +527,15 @@ class ServeEngine:
     def last_logits(self, prompts: Sequence[Prompt]) -> np.ndarray:
         return self.submit_probes(prompts)
 
+    def score_parts(self, text: str, criteria: str) -> tuple[str, str]:
+        """Structured score probe prompt: the criteria block is shared by
+        every row of a scoring round (one prefix-KV entry per round)."""
+        return (f"Criteria: {criteria}\nItem:", f" {text}\nRating:")
+
     def score(self, texts: Sequence[str], criteria: str) -> list[float]:
-        prompts = [(f"Criteria: {criteria}\nItem:", f" {t}\nRating:")
-                   for t in texts]
-        logits = self.submit_probes(prompts)
-        return [float(l[TOK_HI] - l[TOK_LO]) for l in logits]
+        logits = self.submit_probes(
+            [self.score_parts(t, criteria) for t in texts])
+        return [read_score(l) for l in logits]
 
     def _compare_parts(self, a: str, b: str, criteria: str) -> tuple[str, str]:
         # the shared block (criteria + Passage B — quicksort's pivot) leads,
@@ -522,7 +555,7 @@ class ServeEngine:
         """A round of independent comparisons in one probe submission."""
         logits = self.submit_probes(
             [self._compare_parts(a, b, criteria) for a, b in pairs])
-        return [1 if l[TOK_A] > l[TOK_B] else -1 for l in logits]
+        return [read_compare(l) for l in logits]
 
     def yes_no(self, prompt: Prompt) -> bool:
         return self.yes_no_many([prompt])[0]
@@ -530,7 +563,7 @@ class ServeEngine:
     def yes_no_many(self, prompts: Sequence[Prompt]) -> list[bool]:
         """A round of independent Y/N probes in one probe submission."""
         logits = self.submit_probes(prompts)
-        return [bool(l[TOK_YES] > l[TOK_NO]) for l in logits]
+        return [read_yes_no(l) for l in logits]
 
     def rank_window(self, texts: Sequence[str], criteria: str) -> list[int]:
         """Permutation (ascending by score) from one shared-prefix batch."""

@@ -23,9 +23,12 @@ Two request classes share the queue discipline:
    :meth:`ServeEngine.submit_probes` in length-bucketed submissions.  The
    ModelOracle's round-batched verbs call ``engine.submit_probes``
    directly (one operator, one round, no queueing needed); this queue is
-   the multi-client front for the same pathway — concurrent ORDER BY
-   operators sharing one engine submit probes here and get them coalesced
-   across operators.
+   the multi-client front for the same pathway — the probe-plan executor
+   (``core/executor.py``) defers every suspended plan's round into it and
+   drains once per scheduling tick, so concurrent ORDER BY operators and
+   optimizer pilots sharing one engine get their probes coalesced across
+   operators, with identical prompts deduplicated per drain (executed
+   once, results fanned out; see DESIGN.md "Probe-plan executor").
 """
 from __future__ import annotations
 
@@ -56,15 +59,32 @@ class Request:
 @dataclass
 class ProbeRequest:
     rid: int
-    prompt: str
+    prompt: object           # str or (shared_prefix, per_key_suffix) pair
     logits: Optional[np.ndarray] = None
+
+
+def _probe_key(prompt) -> tuple:
+    """Dedup key for a probe prompt.  Structured pairs are keyed as-is and
+    plain strings separately — the two forms produce bit-identical logits,
+    but keeping them distinct makes dedup a pure no-new-bits optimization
+    (a fanned-out result is exactly the result the duplicate's own
+    submission row would have computed)."""
+    if isinstance(prompt, str):
+        return ("s", prompt)
+    return ("p", tuple(prompt))
 
 
 class BatchScheduler:
     def __init__(self, engine: ServeEngine, max_batch: int = 16,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 probe_batch: Optional[int] = None):
         self.engine = engine
         self.max_batch = max_batch
+        # probe drains chunk by the ENGINE's probe memory ceiling
+        # (max_probe_batch), not by max_batch: probes are single-token
+        # prefills, so the decode-batch cap has no bearing on them.  Pass
+        # ``probe_batch`` to override.
+        self.probe_batch = probe_batch
         # paged=None: continuous loop whenever the engine supports it;
         # False pins the lockstep batch path (the benchmark baseline)
         self.paged = (engine.paged_enabled if paged is None
@@ -73,6 +93,7 @@ class BatchScheduler:
         self.probe_queue: list[ProbeRequest] = []
         self.completed: dict[int, Request] = {}
         self.probe_results: dict[int, np.ndarray] = {}
+        self.probes_deduped = 0    # duplicate prompts served by fan-out
         self._rid_of_engine: dict[int, Request] = {}
 
     # ------------------------------------------------------------- generate
@@ -141,19 +162,42 @@ class BatchScheduler:
         return drained
 
     # --------------------------------------------------------------- probes
-    def submit_probe(self, prompt: str) -> int:
+    def submit_probe(self, prompt) -> int:
         r = ProbeRequest(next(_ids), prompt)
         self.probe_queue.append(r)
         return r.rid
 
     def run_probes(self) -> dict[int, np.ndarray]:
         """Drain the probe queue through length-bucketed padded submissions;
-        returns {rid: last-position logits} for this drain."""
+        returns {rid: last-position logits} for this drain.
+
+        Cross-client dedup: concurrent operators draining through one
+        scheduler routinely submit IDENTICAL prompts in the same drain
+        (e.g. ASC and DESC queries over the same criteria — direction is
+        folded client-side, so their probe streams coincide).  Each
+        distinct prompt is executed once and its logits fanned out to
+        every requester; the saved rows are counted in
+        ``probes_deduped``.  Ledger billing is untouched — billing is a
+        function of the logical prompt and happens at the oracle layer,
+        so serving-side dedup follows the prefix-cache convention: fewer
+        forward-pass rows, identical accounting."""
         pending, self.probe_queue = self.probe_queue, []
         if not pending:
             return {}
-        logits = self.engine.submit_probes([r.prompt for r in pending],
-                                           max_batch=self.max_batch)
-        for r, l in zip(pending, logits):
-            r.logits = l
+        slot_of: dict[tuple, int] = {}
+        uniq: list = []
+        slots: list[int] = []
+        for r in pending:
+            key = _probe_key(r.prompt)
+            if key in slot_of:
+                self.probes_deduped += 1
+            else:
+                slot_of[key] = len(uniq)
+                uniq.append(r.prompt)
+            slots.append(slot_of[key])
+        logits = self.engine.submit_probes(
+            uniq, max_batch=(self.probe_batch if self.probe_batch is not None
+                             else self.engine.max_probe_batch))
+        for r, s in zip(pending, slots):
+            r.logits = logits[s]
         return {r.rid: r.logits for r in pending}

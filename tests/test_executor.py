@@ -1,0 +1,381 @@
+"""Probe-plan executor: interleaved-vs-solo equivalence and probe dedup.
+
+Invariants of the executor refactor:
+
+ * every access path, driven as a resumable plan through
+   ``ProbePlanExecutor`` alongside arbitrary other plans, produces
+   per-query output AND ledger ``==``-identical to its solo synchronous
+   ``execute()`` — across all 5 paths x direction x LIMIT, including under
+   simulated structural failures mid-plan (split-retry fallback inside a
+   suspended plan);
+ * per-plan ledger records are exact even when plans share ONE oracle;
+ * ``BatchScheduler.run_probes`` dedups identical prompts across concurrent
+   submitters (execute once, fan results out) without touching billing;
+ * on the ModelOracle backend, interleaving concurrent queries through one
+   scheduler drain reduces serving submissions while keeping every query's
+   output and ledger identical to its solo run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ExactOracle, OrderQuery, PathParams, ProbePlanExecutor,
+                        SimulatedOracle, as_keys, available_paths,
+                        llm_order_by_many, make_path)
+from repro.core.executor import InquireEach, plan_sort_result
+from repro.core.oracles.simulated import FACTUAL, REASONING, OracleProfile
+from repro.core.types import SortSpec
+
+PATHS = sorted(available_paths())
+
+# REASONING has mild structural failures; FLAKY forces frequent mid-plan
+# window/score failures so the split-retry fallback runs inside suspended
+# plans on both sides of the comparison
+FLAKY = OracleProfile(name="flaky", invalid_rate=0.5, listwise_noise=0.4,
+                      score_noise=0.6)
+PROFILES = {"reasoning": REASONING, "factual": FACTUAL, "flaky": FLAKY}
+
+
+def _keys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    # variable-length texts: padded-length-class grouping must keep merged
+    # execution bit-identical for non-uniform keys too
+    return as_keys([f"key {'x' * (i % 7)} {i:03d}" for i in range(n)],
+                   list(rng.standard_normal(n)))
+
+
+def _ledger_tuple(oracle):
+    return (oracle.ledger.n_calls, oracle.ledger.input_tokens,
+            oracle.ledger.output_tokens, list(oracle.ledger.records))
+
+
+# ------------------------------------------------- interleaved == solo
+@pytest.mark.parametrize("profile", sorted(PROFILES))
+@pytest.mark.parametrize("desc,limit", [(False, None), (True, 7)])
+def test_interleaved_queries_match_solo_all_paths(profile, desc, limit):
+    """One concurrent query per access path: per-query order and ledger are
+    ==-identical to running each query alone."""
+    prof = PROFILES[profile]
+    keys = _keys(33)
+    solo = {}
+    for path in PATHS:
+        o = SimulatedOracle(prof)
+        res = make_path(path, PathParams(batch_size=4, votes=3)).execute(
+            keys, o, SortSpec("c", desc, limit))
+        solo[path] = (res.uids(), _ledger_tuple(o), res.n_calls, res.cost)
+    oracles = {path: SimulatedOracle(prof) for path in PATHS}
+    queries = [OrderQuery(keys, "c", oracles[path], descending=desc,
+                          limit=limit, path=path,
+                          params=PathParams(batch_size=4, votes=3))
+               for path in PATHS]
+    results = llm_order_by_many(queries)
+    for path, res in zip(PATHS, results):
+        uids, ledger, n_calls, cost = solo[path]
+        assert res.uids() == uids, path
+        assert _ledger_tuple(oracles[path]) == ledger, path
+        assert (res.n_calls, res.cost) == (n_calls, cost), path
+
+
+def test_interleaved_mixed_specs_match_solo():
+    """Queries with different criteria/direction/limit over one table."""
+    keys = _keys(24, seed=3)
+    qdefs = [("quick", "relevance", True, None, 1),
+             ("quick", "relevance", False, None, 1),
+             ("ext_merge", "clarity", True, 5, 1),
+             ("pointwise", "relevance", False, 3, 1),
+             ("quick", "tone", True, None, 3)]
+    solo = []
+    for path, crit, desc, limit, votes in qdefs:
+        o = SimulatedOracle(REASONING)
+        res = make_path(path, PathParams(batch_size=4, votes=votes)).execute(
+            keys, o, SortSpec(crit, desc, limit))
+        solo.append((res.uids(), _ledger_tuple(o)))
+    oracles = [SimulatedOracle(REASONING) for _ in qdefs]
+    results = llm_order_by_many([
+        OrderQuery(keys, crit, o, descending=desc, limit=limit, path=path,
+                   params=PathParams(batch_size=4, votes=votes))
+        for (path, crit, desc, limit, votes), o in zip(qdefs, oracles)])
+    for (uids, ledger), res, o in zip(solo, results, oracles):
+        assert res.uids() == uids
+        assert _ledger_tuple(o) == ledger
+
+
+def test_adaptive_batch_size_rides_executor():
+    """Alg. 1 (batch_size=0) is a SerialProbe: still exact under the
+    executor, including the chosen-m bookkeeping."""
+    keys = _keys(40, seed=5)
+    o_solo = ExactOracle()
+    res_solo = make_path("ext_pointwise", PathParams(batch_size=0)).execute(
+        keys, o_solo, SortSpec("v", False, None))
+    o_many = ExactOracle()
+    (res,) = llm_order_by_many([OrderQuery(keys, "v", o_many,
+                                           path="ext_pointwise",
+                                           params=PathParams(batch_size=0))])
+    assert res.uids() == res_solo.uids()
+    assert res.params == res_solo.params          # incl. chosen_batch_size
+    assert _ledger_tuple(o_many) == _ledger_tuple(o_solo)
+
+
+def test_llm_order_by_many_rejects_auto():
+    with pytest.raises(ValueError):
+        llm_order_by_many([OrderQuery(_keys(4), "c", ExactOracle(),
+                                      path="auto")])
+
+
+# --------------------------------------------------- executor mechanics
+def test_shared_oracle_per_plan_records_match_solo():
+    """Plans sharing ONE oracle still get exact per-plan accounting (the
+    basis of the optimizer's per-candidate sampled costs)."""
+    keys = _keys(20, seed=7)
+    solo = {}
+    for path in ("quick", "ext_merge"):
+        o = SimulatedOracle(REASONING)
+        make_path(path, PathParams(batch_size=4)).execute(
+            keys, o, SortSpec("c", True, None))
+        solo[path] = [tuple(r.__dict__.items()) for r in o.ledger.records]
+    shared = SimulatedOracle(REASONING)
+    ex = ProbePlanExecutor()
+    spec = SortSpec("c", True, None)
+    runs = {path: ex.submit_path(make_path(path, PathParams(batch_size=4)),
+                                 keys, shared, spec)
+            for path in ("quick", "ext_merge")}
+    ex.run()
+    total = 0
+    for path, run in runs.items():
+        assert run.error is None
+        got = [tuple(r.__dict__.items()) for r in run.records]
+        assert got == solo[path], path
+        total += len(run.records)
+    # every shared-ledger record is attributed to exactly one plan
+    assert total == shared.ledger.n_calls
+
+
+def test_single_round_plans_share_one_tick():
+    """Fairness/tick semantics: every suspended plan is serviced once per
+    tick, so N single-round plans complete in ONE tick."""
+    keys = _keys(12)
+    ex = ProbePlanExecutor()
+    o = ExactOracle()
+    spec = SortSpec("c", False, None)
+    runs = [ex.submit_path(make_path("pointwise"), keys, o, spec)
+            for _ in range(4)]
+    ex.run()
+    assert ex.ticks == 1
+    assert all(r.done and r.error is None for r in runs)
+
+
+def test_cancel_leaves_other_plans_intact():
+    keys = _keys(16, seed=9)
+    spec = SortSpec("c", False, None)
+    solo_oracle = ExactOracle()
+    res_solo = make_path("quick").execute(keys, solo_oracle, spec)
+    ex = ProbePlanExecutor()
+    o1, o2 = ExactOracle(), ExactOracle()
+    keep = ex.submit_path(make_path("quick"), keys, o1, spec)
+    kill = ex.submit_path(make_path("quick"), keys, o2, spec)
+
+    def on_tick(_ex):
+        kill.cancel("test cut")
+
+    ex.run(on_tick=on_tick)
+    assert kill.error is not None and kill.done
+    assert keep.error is None
+    got = plan_sort_result(keep, spec, len(keys), o1.prices)
+    assert got.uids() == res_solo.uids()
+    assert _ledger_tuple(o1) == _ledger_tuple(solo_oracle)
+
+
+def test_membership_plan_matches_direct_gate():
+    from repro.core.access_paths.base import Ordering
+    from repro.core.optimizer.membership import membership_plan, membership_rate
+    keys = _keys(15, seed=11)
+    o1, o2 = SimulatedOracle(REASONING), SimulatedOracle(REASONING)
+    ex = ProbePlanExecutor()
+    run = ex.submit_plan(membership_plan(keys), Ordering(o1, SortSpec("c")),
+                         name="gate")
+    ex.run()
+    assert run.result == membership_rate(keys, o2, "c")
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+def test_failing_membership_gate_propagates():
+    """Regression: a structurally failing gate must reach the caller (as the
+    pre-executor serial flow did), not read as a silent 0.0 rate."""
+    from repro.core import AccessPathOptimizer, InvalidOutputError
+    from repro.core.types import SortSpec as _SortSpec
+
+    class _BadInquire(ExactOracle):
+        def inquire(self, key, criteria):
+            self._charge_inquire(key)
+            raise InvalidOutputError("malformed inquiry output")
+
+    keys = _keys(30, seed=13)
+    with pytest.raises(InvalidOutputError):
+        AccessPathOptimizer().choose_and_execute(
+            keys, _BadInquire(), _SortSpec("c", True, 5))
+
+
+def test_inquire_probe_set_resolves_both_modes():
+    from repro.core.access_paths.base import Ordering
+    from repro.core.executor import resolve_probes
+    keys = _keys(6, seed=2)
+    o1, o2 = SimulatedOracle(REASONING), SimulatedOracle(REASONING)
+    a = resolve_probes(Ordering(o1, SortSpec("c")), InquireEach(keys), True)
+    b = resolve_probes(Ordering(o2, SortSpec("c")), InquireEach(keys), False)
+    assert a == b
+    assert _ledger_tuple(o1) == _ledger_tuple(o2)
+
+
+# -------------------------------------------- scheduler probe dedup (unit)
+class _FakeEngine:
+    """Minimal engine facade: deterministic per-prompt logits, records every
+    submission so dedup is observable without a model."""
+
+    paged_enabled = False
+    max_probe_batch = 256
+
+    def __init__(self):
+        self.submitted = []
+
+    def submit_probes(self, prompts, max_batch=None):
+        self.submitted.append(list(prompts))
+        out = np.zeros((len(prompts), 4), np.float32)
+        for i, p in enumerate(prompts):
+            key = p if isinstance(p, str) else "".join(p)
+            out[i] = (hash(key) % 997) + np.arange(4)
+        return out
+
+
+def test_scheduler_dedups_identical_probes_across_clients():
+    from repro.serving.scheduler import BatchScheduler
+    eng = _FakeEngine()
+    sched = BatchScheduler.__new__(BatchScheduler)
+    BatchScheduler.__init__(sched, eng)
+    prompts = ["alpha", "beta", "alpha", ("p", "s"), ("p", "s"), "alpha"]
+    rids = [sched.submit_probe(p) for p in prompts]
+    out = sched.run_probes()
+    # one submission containing only the 3 distinct prompts
+    assert eng.submitted == [["alpha", "beta", ("p", "s")]]
+    assert sched.probes_deduped == 3
+    # fan-out: duplicates observe the same logits their own row would have
+    assert np.array_equal(out[rids[0]], out[rids[2]])
+    assert np.array_equal(out[rids[0]], out[rids[5]])
+    assert np.array_equal(out[rids[3]], out[rids[4]])
+    assert not np.array_equal(out[rids[0]], out[rids[1]])
+    # drained; a later drain re-executes (dedup is per drain)
+    assert sched.run_probes() == {}
+    sched.submit_probe("alpha")
+    sched.run_probes()
+    assert eng.submitted[-1] == ["alpha"]
+
+
+def test_scheduler_dedup_keeps_str_and_pair_forms_distinct():
+    from repro.serving.scheduler import _probe_key
+    assert _probe_key("ab") != _probe_key(("a", "b"))
+    assert _probe_key(("a", "b")) == _probe_key(("a", "b"))
+
+
+# ------------------------------------------------------- property test
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    latents = st.lists(
+        st.floats(min_value=-50, max_value=50, allow_nan=False, width=32),
+        min_size=2, max_size=28, unique=True)
+
+    @given(latents=latents,
+           paths=st.lists(st.sampled_from(PATHS), min_size=2, max_size=4),
+           desc=st.booleans(),
+           limit=st.one_of(st.none(), st.integers(1, 8)),
+           profile=st.sampled_from(sorted(PROFILES)))
+    @settings(max_examples=25, deadline=None)
+    def test_property_interleaved_equals_solo(latents, paths, desc, limit,
+                                              profile):
+        prof = PROFILES[profile]
+        keys = as_keys([f"k{i}" for i in range(len(latents))], latents)
+        solo = []
+        for path in paths:
+            o = SimulatedOracle(prof)
+            res = make_path(path, PathParams(batch_size=4)).execute(
+                keys, o, SortSpec("c", desc, limit))
+            solo.append((res.uids(), _ledger_tuple(o)))
+        oracles = [SimulatedOracle(prof) for _ in paths]
+        results = llm_order_by_many([
+            OrderQuery(keys, "c", o, descending=desc, limit=limit, path=path,
+                       params=PathParams(batch_size=4))
+            for path, o in zip(paths, oracles)])
+        for (uids, ledger), res, o in zip(solo, results, oracles):
+            assert res.uids() == uids
+            assert _ledger_tuple(o) == ledger
+
+
+# ------------------------------------------------- ModelOracle backend
+@pytest.mark.slow
+class TestExecutorModelBackend:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        import jax
+        from repro.configs import get_reduced
+        from repro.models import LM
+        from repro.serving import ServeEngine
+        cfg = get_reduced("llama3-8b")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        return ServeEngine(lm, params, max_new_tokens=8)
+
+    def test_concurrent_queries_identical_and_fewer_submissions(self, engine):
+        from repro.core.oracles.model_oracle import ModelOracle
+        from repro.serving.scheduler import BatchScheduler
+        keys = as_keys([f"doc {'y' * (i % 5)} {i:02d}" for i in range(20)],
+                       list(np.random.default_rng(0).standard_normal(20)))
+        qdefs = [("quick", "relevance", True, None),
+                 ("quick", "relevance", False, None),   # asc twin: dedups
+                 ("ext_merge", "relevance", True, 6),
+                 ("pointwise", "clarity", False, None)]
+        solo, serial_subs = [], 0
+        for path, crit, desc, limit in qdefs:
+            o = ModelOracle(engine)
+            c0 = engine.stats.calls
+            res = make_path(path, PathParams(batch_size=4)).execute(
+                keys, o, SortSpec(crit, desc, limit))
+            serial_subs += engine.stats.calls - c0
+            solo.append((res.uids(), _ledger_tuple(o)))
+        oracles = [ModelOracle(engine) for _ in qdefs]
+        sched = BatchScheduler(engine)
+        c0 = engine.stats.calls
+        results = llm_order_by_many(
+            [OrderQuery(keys, crit, o, descending=desc, limit=limit,
+                        path=path, params=PathParams(batch_size=4))
+             for (path, crit, desc, limit), o in zip(qdefs, oracles)],
+            scheduler=sched)
+        merged_subs = engine.stats.calls - c0
+        for (uids, ledger), res, o in zip(solo, results, oracles):
+            assert res.uids() == uids
+            assert _ledger_tuple(o) == ledger
+        assert merged_subs < serial_subs
+        # the asc/desc twins share their entire probe stream
+        assert sched.probes_deduped > 0
+
+    def test_auto_scheduler_engages_for_shared_engine(self, engine):
+        from repro.core.executor import auto_scheduler
+        from repro.core.oracles.model_oracle import ModelOracle
+        sched = auto_scheduler([ModelOracle(engine), ModelOracle(engine)])
+        assert sched is not None and sched.engine is engine
+        assert auto_scheduler([ExactOracle()]) is None
+
+    def test_optimizer_pilots_ride_one_stream(self, engine):
+        """choose_and_execute on the ModelOracle backend: pilots + gate run
+        through the shared drain and the result stays valid."""
+        from repro.core import llm_order_by
+        from repro.core.oracles.model_oracle import ModelOracle
+        keys = as_keys([f"row {i:02d}" for i in range(24)],
+                       list(np.random.default_rng(1).standard_normal(24)))
+        oracle = ModelOracle(engine)
+        res, rep = llm_order_by(keys, "relevance", oracle, path="auto",
+                                descending=True, limit=6, sample_size=10)
+        assert len(res.order) == 6
+        assert rep.chosen is not None
+        assert rep.total_cost == pytest.approx(oracle.spend(), rel=1e-6)
