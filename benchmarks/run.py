@@ -1,7 +1,12 @@
-"""Benchmark harness: one module per paper table/figure.  Prints CSV.
+"""Benchmark harness: one module per paper table/figure (tables 1-3 and
+the figures reproduce the paper; tables 4-8 track this repo's serving
+stack: round batching, prefix-KV cache, paged decode, the probe-plan
+executor, and unified-loop co-scheduling).  Prints CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1 fig3
+    PYTHONPATH=src python -m benchmarks.run table8     # serving suites run
+                                                       # real forward passes
 """
 from __future__ import annotations
 
@@ -10,7 +15,8 @@ import time
 
 from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
                roofline, table1_calls, table2_cost_est, table3_samples,
-               table4_submissions)
+               table4_submissions, table5_prefix_cache, table6_paged_decode,
+               table7_executor, table8_cosched)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -22,6 +28,10 @@ SUITES = {
     "fig5": fig5_budget.main,          # budget-constrained selection
     "roofline": roofline.main,         # dry-run roofline table
     "table4": table4_submissions.main, # round batching: serving submissions
+    "table5": table5_prefix_cache.main,   # prefix-KV cache: prefill savings
+    "table6": table6_paged_decode.main,   # paged decode vs lockstep waste
+    "table7": table7_executor.main,       # probe-plan executor merging
+    "table8": table8_cosched.main,        # unified-loop co-scheduling latency
 }
 
 

@@ -27,11 +27,15 @@ Concurrent execution (:class:`ProbePlanExecutor`) drives any number of
 plans in **ticks**: every tick, each suspended plan's ready probe set is
 resolved once (fairness: no plan waits more than one tick behind its
 round-mates), and on a deferred-capable backend (ModelOracle + a
-``BatchScheduler``) all plans' probes of the tick ride ONE scheduler drain
-— merged into shared length-bucketed submissions with cross-plan dedup of
-identical prompts.  Per-plan ledger records are tracked even on a shared
-oracle, so a plan's accounting under the executor is record-for-record
-identical to its solo run.  See DESIGN.md "Probe-plan executor".
+``BatchScheduler``) all plans' rounds are begun as future-backed probe
+work and the tick pumps ONE step of the unified serving loop — the rounds
+ride that step's gap merged into shared length-bucketed submissions with
+cross-plan dedup of identical prompts, while any in-flight decode rows
+(judge rationales, another driver's generates) advance one token in the
+same step instead of the tick waiting behind their drain.  Per-plan ledger
+records are tracked even on a shared oracle, so a plan's accounting under
+the executor is record-for-record identical to its solo run.  See
+DESIGN.md "Probe-plan executor" and "Unified step loop".
 """
 from __future__ import annotations
 
@@ -223,11 +227,13 @@ class ProbePlanExecutor:
     ``scheduler`` (a :class:`~repro.serving.scheduler.BatchScheduler`) and
     deferred-capable oracles (``begin_probe_round``/``finish_probe_round``
     — ModelOracle's logit probes, which cannot fail structurally), all
-    plans' probes of a tick are enqueued first and drained in ONE
-    ``run_probes`` call: merged length-bucketed submissions, identical
-    prompts deduplicated across plans.  Oracles without deferred support
-    (Simulated/Exact/Caching wrappers) resolve synchronously inside the
-    tick — same interleaving, no serving-level merge.
+    plans' rounds of a tick are enqueued as future-backed probe work and
+    ONE ``pump`` of the unified step loop services them: merged
+    length-bucketed submissions, identical prompts deduplicated across
+    plans, and any in-flight decode rows advancing alongside.  Oracles
+    without deferred support (Simulated/Exact/Caching wrappers) resolve
+    synchronously inside the tick — same interleaving, no serving-level
+    merge.
 
     Billing: each plan's ledger records are captured per resolution, so
     ``run.records`` is record-for-record what a solo run of the same plan
@@ -299,9 +305,13 @@ class ProbePlanExecutor:
             run.records.extend(ledger.records[snap:])
             ready.append((run, value))
         if deferred:
-            # ONE drain for the whole tick: every deferred plan's probes in
-            # shared length-bucketed submissions, identical prompts deduped
-            self.scheduler.probe_results.update(self.scheduler.run_probes())
+            # ONE pump of the live loop for the whole tick: every deferred
+            # plan's probes ride the next step gap in shared length-bucketed
+            # submissions (identical prompts deduped across plans), and any
+            # in-flight decode rows — a judge rationale generation, another
+            # driver's rows — advance one token in the same step instead of
+            # the tick waiting behind their drain
+            self.scheduler.pump()
             for run, ps, token in deferred:
                 raw = run.ordering.oracle.finish_probe_round(
                     token, self.scheduler)
@@ -320,6 +330,29 @@ class ProbePlanExecutor:
             if not progressed and all(r.done for r in self.runs):
                 break
         return self.runs
+
+
+def attach_scheduler(oracles: Sequence, scheduler) -> list:
+    """Point each oracle that rides ``scheduler``'s engine (and has no
+    scheduler of its own) at the shared live loop, so oracle-side
+    generations (judge rationales) decode through it.  Returns the list of
+    oracles actually attached — pass it to :func:`detach_scheduler` when
+    the driving call ends, so a LATER call with a fresh scheduler
+    re-attaches instead of pumping a stale loop."""
+    attached = []
+    if scheduler is None:
+        return attached
+    for o in oracles:
+        if (o is not None and getattr(o, "scheduler", None) is None
+                and getattr(o, "engine", None) is scheduler.engine):
+            o.scheduler = scheduler
+            attached.append(o)
+    return attached
+
+
+def detach_scheduler(attached: Sequence) -> None:
+    for o in attached:
+        o.scheduler = None
 
 
 def auto_scheduler(oracles: Sequence):

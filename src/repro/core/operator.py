@@ -21,7 +21,8 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .access_paths.base import PathParams, make_path
-from .executor import ProbePlanExecutor, auto_scheduler, plan_sort_result
+from .executor import (ProbePlanExecutor, attach_scheduler, auto_scheduler,
+                       detach_scheduler, plan_sort_result)
 from .optimizer.cost_model import CandidateSpec
 from .optimizer.optimizer import AccessPathOptimizer, OptimizerConfig, OptimizerReport
 from .types import Key, SortResult, SortSpec
@@ -88,16 +89,26 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
                 "path='auto' queries through llm_order_by")
     if scheduler is None:
         scheduler = auto_scheduler([q.oracle for q in queries])
-    ex = ProbePlanExecutor(scheduler=scheduler)
-    runs = []
-    for i, q in enumerate(queries):
-        spec = SortSpec(q.criteria, q.descending, q.limit)
-        ap = make_path(q.path, q.params or PathParams())
-        runs.append((q, spec, ex.submit_path(ap, q.keys, q.oracle, spec,
-                                             name=f"q{i}:{q.path}")))
-    ex.run()
-    return [plan_sort_result(run, spec, len(q.keys), q.oracle.prices)
-            for q, spec, run in runs]
+    # every query's oracle becomes a client of the SAME live loop FOR THIS
+    # CALL: deferred probe rounds ride its step gaps, and any generation
+    # the oracle runs (judge rationales) decodes through it — so probes
+    # and rationale tokens co-schedule instead of alternating whole
+    # drains.  The attachment is scoped (restored on exit) so a later call
+    # with a fresh scheduler re-attaches instead of pumping a stale loop.
+    attached = attach_scheduler([q.oracle for q in queries], scheduler)
+    try:
+        ex = ProbePlanExecutor(scheduler=scheduler)
+        runs = []
+        for i, q in enumerate(queries):
+            spec = SortSpec(q.criteria, q.descending, q.limit)
+            ap = make_path(q.path, q.params or PathParams())
+            runs.append((q, spec, ex.submit_path(ap, q.keys, q.oracle, spec,
+                                                 name=f"q{i}:{q.path}")))
+        ex.run()
+        return [plan_sort_result(run, spec, len(q.keys), q.oracle.prices)
+                for q, spec, run in runs]
+    finally:
+        detach_scheduler(attached)
 
 
 class Table:

@@ -64,3 +64,37 @@ def estimate_full_cost(spec: CandidateSpec, sampled_cost: float,
     lo = cls.est_calls(n_sample, k_sample, spec.params)
     hi = cls.est_calls(n_full, k, spec.params)
     return sampled_cost * hi / max(lo, 1e-9)
+
+
+def est_sample_calls(spec: CandidateSpec, n_sample: int,
+                     k: Optional[int]) -> float:
+    """Table-1 call-complexity of one candidate's SAMPLE run — the
+    denominator of :func:`estimate_full_cost` and the per-candidate call
+    predictor behind budget-capped pilot overlap."""
+    k_sample = None if k is None else min(k, n_sample)
+    return _REGISTRY[spec.path].est_calls(n_sample, k_sample, spec.params)
+
+
+def dollars_per_est_call(observed: "list[tuple[CandidateSpec, float]]",
+                         n_sample: int, k: Optional[int]) -> Optional[float]:
+    """Measured $/est_call over completed pilot runs: total observed
+    sampled cost divided by total Table-1 estimated calls.  ``observed``
+    is [(candidate, actual sampled $)]; returns None until at least one
+    pilot has completed (the predictor is uncalibrated)."""
+    if not observed:
+        return None
+    total_cost = sum(cost for _spec, cost in observed)
+    total_calls = sum(est_sample_calls(spec, n_sample, k)
+                      for spec, _cost in observed)
+    return total_cost / max(total_calls, 1e-9)
+
+
+def predict_sample_cost(spec: CandidateSpec, n_sample: int, k: Optional[int],
+                        rate: float) -> float:
+    """Predicted sample-run spend of a not-yet-run candidate: its Table-1
+    sample call complexity times the measured $/est_call ``rate``.  Used by
+    the optimizer to admit OVERLAPPING pilots under a budget cap — a
+    candidate is co-admitted only while observed spend plus every in-flight
+    candidate's full prediction stays under the cap, so overshoot is
+    bounded by prediction error rather than by whole in-flight pilots."""
+    return est_sample_calls(spec, n_sample, k) * rate

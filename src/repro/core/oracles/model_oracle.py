@@ -21,7 +21,8 @@ from .base import LLAMA70B, Oracle, PriceSheet, PromptCosts, PromptParts
 class ModelOracle(Oracle):
     def __init__(self, engine, prices: PriceSheet = LLAMA70B,
                  costs: Optional[PromptCosts] = None,
-                 judge_rationale_tokens: int = 0):
+                 judge_rationale_tokens: int = 0,
+                 scheduler=None):
         super().__init__(prices=prices, costs=costs)
         self.engine = engine
         # > 0: the judge free-decodes a rationale per candidate before the
@@ -29,6 +30,12 @@ class ModelOracle(Oracle):
         # workload served by the engine's continuous-batching loop; the
         # candidates share one prefix-KV block run (criteria + sample)
         self.judge_rationale_tokens = judge_rationale_tokens
+        # optional BatchScheduler: when attached (llm_order_by_many and the
+        # optimizer attach their shared scheduler automatically), rationale
+        # generations run THROUGH the unified step loop — probe rounds from
+        # concurrent plans are answered in this oracle's decode step gaps
+        # instead of waiting for the whole generation to drain
+        self.scheduler = scheduler
 
     # -- billing helpers using real token counts -----------------------------
     def _real_tokens(self, text: str) -> int:
@@ -133,14 +140,17 @@ class ModelOracle(Oracle):
 
     # ---- deferred round verbs (probe-plan executor) -----------------------
     # A round can be split into BEGIN (bill the ledger — identical records
-    # to the synchronous verb — and enqueue the probe prompts into a
-    # BatchScheduler's probe queue) and FINISH (read the drained logits
-    # back and interpret them).  The executor begins every suspended plan's
-    # round, drains the queue ONCE — merging all plans' probes into shared
-    # length-bucketed submissions with cross-plan dedup — then finishes.
-    # Deferral is sound here because logit probes cannot fail structurally,
-    # so the Ordering-level retry/split fallback has nothing to catch; the
-    # raw results only need the direction fold applied
+    # to the synchronous verb — and enqueue the round's prompts into a
+    # BatchScheduler as ONE probe-round work item behind a RoundFuture) and
+    # FINISH (read the future's logits and interpret them).  The executor
+    # begins every suspended plan's round and pumps the unified step loop
+    # once — all plans' probes of the tick ride that step's gap in shared
+    # length-bucketed submissions with cross-plan dedup, while any in-flight
+    # decode rows advance alongside; a round begun mid-generation therefore
+    # resolves between decode steps instead of after the drain.  Deferral is
+    # sound here because logit probes cannot fail structurally, so the
+    # Ordering-level retry/split fallback has nothing to catch; the raw
+    # results only need the direction fold applied
     # (``Ordering.fold_compares`` / ``fold_scores`` / ``fold_window_result``).
 
     def begin_probe_round(self, kind: str, payload, criteria: str, sink):
@@ -150,58 +160,62 @@ class ModelOracle(Oracle):
         ``score_each`` / ``score_batches`` / ``rank_windows`` /
         ``inquire``; ``payload`` matches the corresponding batch verb."""
         eng = self.engine
+        prompts: list = []
+        meta = None
         if kind == "compare":
-            rids = []
             for a, b in payload:
                 inp = (self.costs.compare_prefix + self._real_tokens(a.text)
                        + self._real_tokens(b.text))
                 self.ledger.charge("compare", inp, self.costs.compare_out,
                                    n_keys=2)
-                rids.append(sink.submit_probe(
-                    eng._compare_parts(a.text, b.text, criteria)))
-            return (kind, rids, None)
-        if kind == "score_each":
-            rids = []
+                prompts.append(eng._compare_parts(a.text, b.text, criteria))
+        elif kind == "score_each":
             for k in payload:
                 self.ledger.charge(
                     "score",
                     self.costs.score_prefix + self._real_tokens(k.text),
                     self.costs.score_out_per_key, n_keys=1)
-                rids.append(sink.submit_probe(
-                    eng.score_parts(k.text, criteria)))
-            return (kind, rids, None)
-        if kind in ("score_batches", "rank_windows"):
+                prompts.append(eng.score_parts(k.text, criteria))
+        elif kind in ("score_batches", "rank_windows"):
             bill_kind = "score" if kind == "score_batches" else "rank"
             prefix = (self.costs.score_prefix if kind == "score_batches"
                       else self.costs.rank_prefix)
             per_key = (self.costs.score_out_per_key if kind == "score_batches"
                        else self.costs.rank_out_per_key)
-            rids = []
             for b in payload:
                 inp = prefix + sum(self._real_tokens(k.text) for k in b)
                 self.ledger.charge(bill_kind, inp, per_key * len(b),
                                    n_keys=len(b))
-                rids.extend(sink.submit_probe(eng.score_parts(k.text, criteria))
-                            for k in b)
-            return (kind, rids, [list(b) for b in payload])
-        if kind == "inquire":
-            rids = []
+                prompts.extend(eng.score_parts(k.text, criteria) for k in b)
+            meta = [list(b) for b in payload]
+        elif kind == "inquire":
             for k in payload:
                 self.ledger.charge(
                     "inquire",
                     self.costs.inquire_prefix + self._real_tokens(k.text),
                     self.costs.inquire_out)
-                rids.append(sink.submit_probe(self._inquire_prompt(k, criteria)))
-            return (kind, rids, None)
-        raise ValueError(f"unknown deferred round kind {kind!r}")
+                prompts.append(self._inquire_prompt(k, criteria))
+        else:
+            raise ValueError(f"unknown deferred round kind {kind!r}")
+        if hasattr(sink, "submit_probe_round"):
+            return (kind, sink.submit_probe_round(prompts), meta)
+        # legacy sink: per-probe rids read back from sink.probe_results
+        return (kind, [sink.submit_probe(p) for p in prompts], meta)
 
     def finish_probe_round(self, token, sink):
-        """Interpret one begun round's logits from ``sink.probe_results``
-        (which the caller populated by draining the queue).  Returns the
-        same raw values the synchronous batch verb would have."""
+        """Interpret one begun round's logits.  Future-based rounds resolve
+        through the sink's step loop (``sink.resolve`` pumps until the
+        round's step gap has serviced it — at most one step away); legacy
+        rid rounds read ``sink.probe_results``.  Returns the same raw
+        values the synchronous batch verb would have."""
         from ...serving.engine import read_compare, read_score, read_yes_no
-        kind, rids, meta = token
-        logits = [sink.probe_results.pop(rid) for rid in rids]
+        kind, handle, meta = token
+        if hasattr(handle, "result"):            # RoundFuture
+            if not handle.done:
+                sink.resolve(handle)
+            logits = handle.result()
+        else:
+            logits = [sink.probe_results.pop(rid) for rid in handle]
         if kind == "compare":
             return [read_compare(l) for l in logits]
         if kind == "score_each":
@@ -246,11 +260,20 @@ class ModelOracle(Oracle):
             # free-decode a rationale per candidate ranking: candidate
             # rationales are independent mixed-length generations, so they
             # ride the continuous-batching loop (short verdicts retire
-            # early; the shared criteria prefix is one pinned block run)
-            rationales = self.engine.generate(
-                [PromptParts(prefix, f" {lst}\nJudge rationale:")
-                 for lst in listings],
-                max_new=self.judge_rationale_tokens)
+            # early; the shared criteria prefix is one pinned block run).
+            # With a scheduler attached they run THROUGH the unified step
+            # loop, so concurrent plans' probe rounds are answered in this
+            # generation's step gaps instead of behind the whole drain.
+            rationale_prompts = [
+                PromptParts(prefix, f" {lst}\nJudge rationale:")
+                for lst in listings]
+            if self.scheduler is not None and self.scheduler.paged \
+                    and self.scheduler.engine is self.engine:
+                rationales = self.scheduler.generate(
+                    rationale_prompts, max_new=self.judge_rationale_tokens)
+            else:
+                rationales = self.engine.generate(
+                    rationale_prompts, max_new=self.judge_rationale_tokens)
             for r in rationales:
                 self.ledger.charge("judge", 0,
                                    self._real_tokens(r) if r else 1,

@@ -170,13 +170,39 @@ def _attn_decode_paged(p, x, cfg, angles, cache: PagedKV, ctx):
     """One decode token per row against the row's block run in the paged KV
     pool.  Each row carries its OWN absolute position (continuous batching
     mixes rows admitted at different times), unlike the lockstep decode's
-    shared scalar.  Bit-identical to :func:`_attn_decode` per row (see
-    layers.paged_decode_attention_dense)."""
+    shared scalar.  The default dense path is bit-identical to
+    :func:`_attn_decode` per row (see layers.paged_decode_attention_dense);
+    ``ctx["paged_impl"] == "kernel"`` swaps in the Pallas flash-decode over
+    scalar-prefetched block tables (allclose, not bitwise — the engine's
+    deployment switch)."""
     qkv = _qkv(p, x, cfg, angles)
-    out, cache = paged_decode_attention_dense(
-        qkv, cache, ctx["paged_tables"], ctx["paged_positions"],
-        ctx["paged_block_size"])
+    if ctx.get("paged_impl", "dense") == "kernel":
+        out, cache = _paged_decode_kernel(qkv, cache, ctx)
+    else:
+        out, cache = paged_decode_attention_dense(
+            qkv, cache, ctx["paged_tables"], ctx["paged_positions"],
+            ctx["paged_block_size"])
     return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
+
+
+def _paged_decode_kernel(qkv, paged: PagedKV, ctx):
+    """Pallas flash-decode step: write the new token's K/V into the pool
+    (same scatter as the dense path), then attend through the block table
+    with kernels.ops.paged_decode_attention.  Valid context length per row
+    is position + 1 (the token just written)."""
+    from ..kernels.ops import paged_decode_attention
+    q_new, k_new, v_new = qkv
+    tables = ctx["paged_tables"]
+    positions = ctx["paged_positions"]
+    bs = ctx["paged_block_size"]
+    b = k_new.shape[0]
+    blk = tables[jnp.arange(b), positions // bs]
+    slot = positions % bs
+    k_pool = paged.k.at[blk, slot].set(k_new[:, 0])
+    v_pool = paged.v.at[blk, slot].set(v_new[:, 0])
+    out = paged_decode_attention(q_new[:, 0], k_pool, v_pool, tables,
+                                 positions + 1)
+    return out[:, None], PagedKV(k_pool, v_pool)
 
 
 def _attn_cont(p, x, cfg, angles, cache: KVCache, reserve: int = 0):

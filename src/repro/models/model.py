@@ -222,7 +222,7 @@ class LM:
         return logits, caches
 
     def decode_step_paged(self, params, caches, tokens, positions, tables,
-                          *, block_size: int):
+                          *, block_size: int, impl: str = "dense"):
         """One decode token per row against the block-paged KV pool.
 
         caches: list (one per stack) of :class:`~.layers.PagedKV` with leaves
@@ -233,9 +233,14 @@ class LM:
         int32 per-row block tables (0-padded — block 0 is the dummy block).
 
         Returns (logits (B, V), caches with the step's K/V written).
-        Bit-identical per row to :meth:`decode_step` over a dense ring cache
-        holding the same tokens (tests/test_paged_decode.py).  Pure
-        full-attention token-input stacks only."""
+        ``impl`` picks the attention implementation: ``"dense"`` (default)
+        is the gather+attend XLA path, bit-identical per row to
+        :meth:`decode_step` over a dense ring cache holding the same tokens
+        (tests/test_paged_decode.py); ``"kernel"`` runs the Pallas paged
+        flash-decode (kernels/paged_attention.py) whose online-softmax
+        reduction order trades bitwise identity for allclose (the engine's
+        ``paged_kernel`` deployment switch).  Pure full-attention
+        token-input stacks only."""
         cfg = self.cfg
         assert cfg.input_mode == "tokens" and not cfg.mrope_sections, (
             "paged decode supports token-input, non-M-RoPE archs only")
@@ -244,7 +249,7 @@ class LM:
         ctx: dict[str, Any] = {
             "angles": self._angles(positions[:, None], 1, b),
             "paged_tables": tables, "paged_positions": positions,
-            "paged_block_size": block_size,
+            "paged_block_size": block_size, "paged_impl": impl,
         }
         new_caches = []
         for stack, c, (kind, n) in zip(params["stacks"], caches, cfg.pattern):

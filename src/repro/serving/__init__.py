@@ -1,6 +1,6 @@
 from .engine import ServeEngine, ServeStats
 from .kv_pool import KVBlockPool, PoolExhausted
-from .scheduler import BatchScheduler, Request
+from .scheduler import BatchScheduler, Request, RoundFuture
 
 __all__ = ["ServeEngine", "ServeStats", "KVBlockPool", "PoolExhausted",
-           "BatchScheduler", "Request"]
+           "BatchScheduler", "Request", "RoundFuture"]

@@ -40,6 +40,16 @@ token-identical to a solo lockstep ``generate_lockstep([prompt])`` run — a
 row's result no longer depends on its batch-mates at all.  Unsupported
 archs (non-attention blocks, MoE, qchunk, enc-dec) fall back to the
 lockstep loop.  See DESIGN.md "Paged KV pool".
+
+Probe submissions are pool citizens too: their transient prompt KV holds a
+block *lease* for the duration of the forward pass (capacity arbitration +
+peak accounting; shortfalls degrade to unpooled memory, never stall), and
+``prefetch_prefixes`` exposes region warming as a schedulable primitive —
+the scheduler's prefix-fill work items ride it.  The decode step's
+attention has a deployment-time Pallas switch (``paged_kernel``): default
+dense keeps the ``==`` contract, ``True`` runs the flash-decode kernel
+(allclose at PAGED_KERNEL_RTOL/ATOL), ``"check"`` runs both and asserts.
+See DESIGN.md "Unified step loop".
 """
 from __future__ import annotations
 
@@ -60,6 +70,19 @@ from .kv_pool import KVBlockPool, PoolExhausted
 TOK_A, TOK_B = ord("A"), ord("B")
 TOK_HI, TOK_LO = ord("9"), ord("0")
 TOK_YES, TOK_NO = ord("Y"), ord("N")
+
+# Pallas paged flash-decode vs the dense gather+attend path: the kernel's
+# online-softmax reduction order differs from the dense einsum softmax
+# (and the kernel keeps its softmax weights/accumulator in fp32 where the
+# dense path casts weights back to the cache dtype), so per-step logits
+# agree to these tolerances, not bitwise.  On bf16 stacks the drift is
+# ~1 bf16 ulp through the residual stream — measured worst-case ~0.034
+# absolute on the reduced configs, with large RELATIVE error only on
+# near-zero logits — so the bound is absolute-dominated with ~4x headroom;
+# pure-fp32 stacks land near 1e-6.  Greedy argmax agreement is the
+# operational contract the tolerance test checks alongside.
+PAGED_KERNEL_RTOL = 5e-2
+PAGED_KERNEL_ATOL = 1.2e-1
 
 # a probe prompt: plain string, or a (shared_prefix, per_key_suffix) pair —
 # core.oracles.base.PromptParts is such a pair (the full prompt is the
@@ -112,6 +135,13 @@ class ServeStats:
     # (benchmarks/table7_executor.py).
     probe_rows: int = 0
     probe_row_slots: int = 0
+    # probe-row pool citizenship: a probe submission's rows LEASE pool
+    # blocks covering their transient prompt KV for the duration of the
+    # forward pass, so probe memory shares the decode rows' budget and
+    # shows up in pool peak accounting.  A shortfall (decode rows hold the
+    # blocks) degrades to unpooled transient memory, never to a stall.
+    probe_blocks_leased: int = 0
+    probe_lease_shortfalls: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -151,7 +181,8 @@ class ServeEngine:
     def __init__(self, lm: LM, params, max_new_tokens: int = 32,
                  bucket_shapes: bool = True, max_probe_batch: int = 256,
                  prefix_cache_size: int = 64, pool_blocks: int = 768,
-                 block_size: int = 16, max_decode_rows: int = 32):
+                 block_size: int = 16, max_decode_rows: int = 32,
+                 paged_kernel: object = False):
         self.lm = lm
         self.params = params
         self.tok = ByteTokenizer()
@@ -197,6 +228,24 @@ class ServeEngine:
         # lands at the right absolute positions
         self._prefill_exact = jax.jit(partial(lm.prefill, reserve=0))
         self._prefill_cont = jax.jit(lm.prefill_cont)
+        # Deployment-time Pallas switch for the decode step's attention:
+        #   False   — dense gather+attend (the default; keeps the `==`
+        #             bit-identity contract vs solo lockstep),
+        #   True    — kernels/paged_attention.py flash-decode (pod serving;
+        #             online-softmax reduction order trades `==` for
+        #             allclose at PAGED_KERNEL_RTOL/ATOL),
+        #   "check" — run BOTH each step, assert allclose, return the dense
+        #             result (deployment validation mode).
+        self.paged_kernel = paged_kernel
+        if paged_kernel and not self.paged_enabled:
+            # an inert validation/deployment switch is worse than an error:
+            # the operator would believe the kernel was validated when it
+            # never ran a single step
+            raise ValueError(
+                f"paged_kernel={paged_kernel!r} requires a paged-capable "
+                f"engine (pool_blocks > 0 and a pure full-attention "
+                f"token-input stack); this arch/config falls back to "
+                f"lockstep decode, so the kernel would never execute")
         if self.paged_enabled:
             # the arena is the whole serve memory: donate it through the
             # step so backends that support aliasing update in place
@@ -204,6 +253,14 @@ class ServeEngine:
             self._decode_paged = jax.jit(
                 partial(lm.decode_step_paged, block_size=block_size),
                 donate_argnums=donate)
+            if paged_kernel:
+                # "check" must NOT donate the arena into the kernel call —
+                # the dense source-of-truth call consumes it right after
+                self._decode_paged_kernel = jax.jit(
+                    partial(lm.decode_step_paged, block_size=block_size,
+                            impl="kernel"),
+                    donate_argnums=(() if paged_kernel == "check"
+                                    else donate))
         self._embed_cache: dict = {}
 
     def _supports_prefix_cache(self) -> bool:
@@ -254,6 +311,16 @@ class ServeEngine:
         return batch
 
     # --------------------------------------------------------------- probes
+    @staticmethod
+    def _region_key(pids: tuple, sids: Sequence[int], cls: int) -> tuple:
+        """THE prefix-cache key of a structured row in padded class
+        ``cls``: (prefix token ids, absolute start position) — the region
+        ``PAD*start + prefix`` is a pure function of it (DESIGN.md
+        "Prefix-KV cache", Keying and bit-identity).  Every prefix-cache
+        client (probe routing, paged admission, prefetch) MUST key through
+        here so fills and lookups can never drift apart."""
+        return (pids, cls - len(pids) - len(sids))
+
     @staticmethod
     def _parts(prompt: Prompt) -> tuple[Optional[str], str]:
         """Normalize a probe prompt to (shared_prefix_or_None, suffix)."""
@@ -318,11 +385,11 @@ class ServeEngine:
             rows = structured[cls]
             counts: dict[tuple, int] = {}
             for _i, pids, sids in rows:
-                key = (pids, cls - len(pids) - len(sids))
+                key = self._region_key(pids, sids, cls)
                 counts[key] = counts.get(key, 0) + 1
             selected, lw = [], 0
             for i, pids, sids in rows:
-                key = (pids, cls - len(pids) - len(sids))
+                key = self._region_key(pids, sids, cls)
                 if key in self._prefix_lru or counts[key] >= 2:
                     selected.append((i, key))
                     lw = max(lw, len(sids))
@@ -347,15 +414,19 @@ class ServeEngine:
 
         for cls in sorted(plain):
             for g in chunked(sorted(plain[cls])):
-                tokens = self._pad_ids([enc[i] for i in g], maxlen=cls)
-                logits, _ = self._prefill(self.params,
-                                          self._make_batch(tokens))
-                self.stats.prefill_tokens += int(tokens.size)
-                self.stats.calls += 1
-                self.stats.probe_rows += len(g)
-                self.stats.probe_row_slots += int(tokens.shape[0])
-                out[np.asarray(g)] = np.asarray(
-                    logits.astype(jnp.float32))[:len(g)]  # drop bucket-pad rows
+                lease = self._lease_probe_blocks(len(g), cls)
+                try:
+                    tokens = self._pad_ids([enc[i] for i in g], maxlen=cls)
+                    logits, _ = self._prefill(self.params,
+                                              self._make_batch(tokens))
+                    self.stats.prefill_tokens += int(tokens.size)
+                    self.stats.calls += 1
+                    self.stats.probe_rows += len(g)
+                    self.stats.probe_row_slots += int(tokens.shape[0])
+                    out[np.asarray(g)] = np.asarray(
+                        logits.astype(jnp.float32))[:len(g)]  # drop pad rows
+                finally:
+                    self._release_lease(lease)
         for cls, lw, selected in window_jobs:
             entries, pins = self._fill_prefix_entries(
                 cls, {key for _, key in selected})
@@ -367,12 +438,68 @@ class ServeEngine:
                          for key, e in entries.items()}
                 for g in chunked(selected):
                     idx = [i for i, _ in g]
-                    logits = self._run_window(cls, lw, [enc[i] for i in idx],
-                                              [key for _, key in g], dense)
+                    lease = self._lease_probe_blocks(len(g), cls)
+                    try:
+                        logits = self._run_window(cls, lw,
+                                                  [enc[i] for i in idx],
+                                                  [key for _, key in g],
+                                                  dense)
+                    finally:
+                        self._release_lease(lease)
                     out[np.asarray(idx)] = logits
             finally:
                 self._release_pins(pins)
         return out
+
+    def _lease_probe_blocks(self, rows: int, cls: int) -> Optional[list]:
+        """Lease pool blocks covering ``rows`` probe rows of padded class
+        ``cls`` for the duration of one probe submission.  Probe KV is
+        transient (read the last-position logits, discard), so its pool
+        citizenship is a capacity *lease*: the blocks arbitrate one memory
+        budget with decode rows and prefix runs — pool peak/alloc
+        accounting sees probe traffic — and are returned the moment the
+        forward pass ends.  When decode rows hold the blocks the lease
+        degrades to unpooled transient memory (counted in
+        ``stats.probe_lease_shortfalls``) instead of stalling the round:
+        a probe storm must never block on its own accounting."""
+        if self.pool is None:
+            return None
+        ids = self.pool.lease(rows * self.pool.blocks_for(cls))
+        if ids is None:
+            self.stats.probe_lease_shortfalls += 1
+        else:
+            self.stats.probe_blocks_leased += len(ids)
+        return ids
+
+    def _release_lease(self, ids: Optional[list]) -> None:
+        if ids is not None:
+            self.pool.decref(ids)
+
+    def prefetch_prefixes(self, prompts: Sequence[Prompt]) -> int:
+        """Warm the prefix-KV LRU for structured ``(prefix, suffix)``
+        prompts ahead of the round or generate wave that needs them — the
+        serving-side primitive behind the scheduler's prefix-fill work
+        items.  Regions land pinned by the LRU only (no round pins), so a
+        later submission hits the cache and evictions stay safe.  Returns
+        the number of regions ensured resident."""
+        if not self.prefix_cache_enabled:
+            return 0
+        by_cls: dict[int, set] = {}
+        for p in prompts:
+            prefix, suffix = self._parts(p)
+            if prefix is None:
+                continue
+            pids = tuple(self.tok.encode(prefix))
+            sids = self.tok.encode(suffix, bos=False)
+            cls = self._pad_class(len(pids) + len(sids))
+            by_cls.setdefault(cls, set()).add(
+                self._region_key(pids, sids, cls))
+        ensured = 0
+        for cls in sorted(by_cls):
+            entries, pins = self._fill_prefix_entries(cls, by_cls[cls])
+            self._release_pins(pins)
+            ensured += len(entries)
+        return ensured
 
     def _fill_prefix_entries(self, cls: int, keys: set) -> tuple[dict, list]:
         """Prefill every missing (prefix ids, start) region of a class once,
@@ -753,14 +880,14 @@ class ServeEngine:
         counts: dict[tuple, int] = {}
         for rid, enc, cls, limit, pids, sids in reqs:
             if pids is not None:
-                key = (pids, cls - len(pids) - len(sids))
+                key = self._region_key(pids, sids, cls)
                 counts[(cls, key)] = counts.get((cls, key), 0) + 1
         plain: dict[int, list] = {}
         shared: dict[tuple, list] = {}
         for req in reqs:
             rid, enc, cls, limit, pids, sids = req
             if pids is not None:
-                key = (pids, cls - len(pids) - len(sids))
+                key = self._region_key(pids, sids, cls)
                 if key in self._prefix_lru or counts[(cls, key)] >= 2:
                     shared.setdefault((cls, key), []).append(req)
                     continue
@@ -906,9 +1033,22 @@ class ServeEngine:
             tables[i, :len(row.blocks)] = row.blocks
             toks[i, 0] = row.cur
             pos[i] = row.cls + row.t
-        logits, arenas = self._decode_paged(
-            self.params, self.pool.arenas, jnp.asarray(toks),
-            jnp.asarray(pos), jnp.asarray(tables))
+        args = (self.params, self.pool.arenas, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(tables))
+        if self.paged_kernel == "check":
+            # validation mode: kernel first (arena NOT donated), dense as
+            # the source of truth; per-step logits must agree to the
+            # documented tolerances
+            logits_k, _ = self._decode_paged_kernel(*args)
+            logits, arenas = self._decode_paged(*args)
+            np.testing.assert_allclose(
+                np.asarray(logits_k.astype(jnp.float32))[:b],
+                np.asarray(logits.astype(jnp.float32))[:b],
+                rtol=PAGED_KERNEL_RTOL, atol=PAGED_KERNEL_ATOL)
+        elif self.paged_kernel:
+            logits, arenas = self._decode_paged_kernel(*args)
+        else:
+            logits, arenas = self._decode_paged(*args)
         self.pool.arenas = arenas
         self.stats.decode_tokens += b
         self.stats.decode_row_steps += b_p

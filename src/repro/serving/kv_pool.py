@@ -57,6 +57,12 @@ class KVBlockPool:
         self._ref = np.zeros(num_blocks, np.int64)
         self.peak_in_use = 0
         self.total_allocs = 0
+        # probe-row leases (see ServeEngine._lease_probe_blocks): transient
+        # single-submission holds that arbitrate the same budget as decode
+        # rows; counted separately so capacity reports can split persistent
+        # occupancy from probe traffic
+        self.total_leased = 0
+        self.lease_shortfalls = 0
 
     # ---------------------------------------------------------- allocator
     @property
@@ -80,6 +86,18 @@ class KVBlockPool:
         self._ref[ids] = 1
         self.total_allocs += n
         self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return ids
+
+    def lease(self, n: int) -> "list[int] | None":
+        """Best-effort transient allocation: ``n`` blocks with refcount 1
+        when the free list can host them, ``None`` otherwise (the caller
+        proceeds with unpooled transient memory — a lease never raises and
+        never evicts).  Released via :meth:`decref` like any run."""
+        if n > len(self._free):
+            self.lease_shortfalls += 1
+            return None
+        ids = self.alloc(n)
+        self.total_leased += n
         return ids
 
     def incref(self, ids: Sequence[int]) -> None:

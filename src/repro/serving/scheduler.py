@@ -1,39 +1,53 @@
-"""Request scheduler: queue + continuous-batching decode over the engine.
+"""Unified token-granularity serving loop: ONE step loop over a typed
+work queue, co-scheduling decode rows, probe rounds, and prefix fills.
 
-On paged-pool-capable engines a drain runs the **token-level continuous
-step loop**: queued requests are admitted into free pool/row capacity,
-every decode step advances all active rows at their own positions, rows
-that finish retire and free their blocks immediately, and the queue is
-re-polled BETWEEN steps — so a late-submitted short request completes while
-a long judge generation is still decoding instead of waiting for the whole
-batch (no head-of-line blocking; see DESIGN.md "Paged KV pool").  Probe
-rounds queued via ``submit_probe`` are likewise drained between steps into
-``probe_results``.  Engines without paged support (recurrent/MoE archs)
-fall back to batch-level scheduling: the drain sorts the WHOLE backlog by
-prompt length, chunks it into (max_batch)-sized batches, and runs each
-batch prefill + lockstep decode to completion.
+``BatchScheduler`` owns a single admission queue of typed work items:
 
-Two request classes share the queue discipline:
+ * **decode work** (``submit`` / ``generate`` / ``run``) — prefill + greedy
+   decode rows that live across many steps in the paged pool;
+ * **probe work** (``submit_probe`` / ``submit_probe_round``) — single-token
+   read-out prefills (score / compare / yes-no) that complete the step they
+   are serviced in; a *round* groups the probes of one oracle round behind a
+   :class:`RoundFuture` that resolves when every member has logits;
+ * **prefix-fill work** (``submit_prefix_fill``) — prefix-KV region
+   prefills scheduled ahead of need, so a round's shared prefix can be
+   warmed in a step gap while decode rows keep streaming.
 
- * **generate** requests (``submit`` / ``run``) — prefill + greedy decode,
-   each request honoring its own ``max_new`` even when batched with longer
-   requests;
- * **probe** requests (``submit_probe`` / ``run_probes``) — single-token
-   read-outs (score / compare / yes-no), drained through
-   :meth:`ServeEngine.submit_probes` in length-bucketed submissions.  The
-   ModelOracle's round-batched verbs call ``engine.submit_probes``
-   directly (one operator, one round, no queueing needed); this queue is
-   the multi-client front for the same pathway — the probe-plan executor
-   (``core/executor.py``) defers every suspended plan's round into it and
-   drains once per scheduling tick, so concurrent ORDER BY operators and
-   optimizer pilots sharing one engine get their probes coalesced across
-   operators, with identical prompts deduplicated per drain (executed
-   once, results fanned out; see DESIGN.md "Probe-plan executor").
+Every :meth:`step` runs one pass of the admission policy and ONE decode
+step: queued decode items are admitted FIFO into free pool/row capacity,
+then ALL pending fills and probe work are serviced (probe submissions ride
+the step gap — merged across submitters into length-bucketed submissions
+with identical prompts deduplicated), then every active decode row advances
+one token and retiring rows free their blocks.  The ordering gives both
+fairness bounds by construction: a probe round submitted at any point is
+answered before the NEXT decode step (a long rationale cannot delay it by
+more than one step), and a probe storm cannot stall decode rows because
+each step decodes exactly once regardless of probe volume.
+
+Clients of the loop:
+
+ * ``run()`` drains the scheduler's own backlog by pumping :meth:`step`
+   until no decode work remains (``on_step`` fires between steps and may
+   submit more work mid-drain);
+ * ``generate()`` submits rows and pumps until THOSE rows finish — queued
+   probe rounds and other drivers' rows advance alongside, which is how a
+   judge rationale generation co-schedules with ORDER BY probes;
+ * the probe-plan executor (``core/executor.py``) begins every suspended
+   plan's deferred round (``ModelOracle.begin_probe_round`` →
+   ``submit_probe_round``) and pumps ONE step — all plans' probes land in
+   that step's gap, and their futures resolve between decode steps.
+
+Engines without paged support (recurrent/MoE archs) fall back to
+batch-level scheduling: the drain sorts the WHOLE backlog by prompt length,
+chunks it into (max_batch)-sized batches, and runs each batch prefill +
+lockstep decode to completion; probe work is serviced whenever the loop is
+pumped (there are no step gaps to interleave into).  See DESIGN.md
+"Unified step loop".
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import numpy as np
@@ -43,11 +57,14 @@ from .engine import ServeEngine
 _ids = itertools.count()
 
 
+# ------------------------------------------------------- typed work items
 @dataclass
 class Request:
+    """Decode work: one generate request (prefill + greedy decode row).
+    ``max_new`` 0 is a genuine zero budget; None means engine default."""
     rid: int
     prompt: object           # str or (shared_prefix, per_key_suffix) pair
-    max_new: int
+    max_new: Optional[int]
     output: Optional[str] = None
     block_need: Optional[int] = None     # memoized KV-pool block budget
 
@@ -56,11 +73,49 @@ class Request:
         return self.output is not None
 
 
+class RoundFuture:
+    """Resolves when every probe of one round has its logits.  ``result()``
+    returns the logits aligned with the round's submission order."""
+
+    __slots__ = ("_vals", "_left")
+
+    def __init__(self, n: int):
+        self._vals: list = [None] * n
+        self._left = n
+
+    @property
+    def done(self) -> bool:
+        return self._left == 0
+
+    def _set(self, slot: int, logits) -> None:
+        assert self._vals[slot] is None, "probe slot resolved twice"
+        self._vals[slot] = logits
+        self._left -= 1
+
+    def result(self) -> list:
+        assert self.done, "round future read before resolution"
+        return self._vals
+
+
 @dataclass
 class ProbeRequest:
+    """Probe work: one single-token read-out prompt.  Stand-alone probes
+    (``future is None``) deliver into ``scheduler.probe_results``; round
+    members deliver into their :class:`RoundFuture` slot."""
     rid: int
     prompt: object           # str or (shared_prefix, per_key_suffix) pair
     logits: Optional[np.ndarray] = None
+    future: Optional[RoundFuture] = None
+    slot: int = 0
+
+
+@dataclass
+class PrefixFill:
+    """Prefix-fill work: warm the engine's prefix-KV LRU for structured
+    prompts BEFORE the round or generate wave that needs them, so the fill
+    submission rides an earlier step gap."""
+    rid: int
+    prompts: list = field(default_factory=list)   # (prefix, suffix) pairs
 
 
 def _probe_key(prompt) -> tuple:
@@ -89,52 +144,76 @@ class BatchScheduler:
         # False pins the lockstep batch path (the benchmark baseline)
         self.paged = (engine.paged_enabled if paged is None
                       else paged and engine.paged_enabled)
-        self.queue: list[Request] = []
-        self.probe_queue: list[ProbeRequest] = []
+        # THE unified admission queue: typed work items in arrival order
+        self.work: list = []
         self.completed: dict[int, Request] = {}
         self.probe_results: dict[int, np.ndarray] = {}
         self.probes_deduped = 0    # duplicate prompts served by fan-out
+        self.steps = 0             # unified steps taken (decode or probe-only)
         self._rid_of_engine: dict[int, Request] = {}
+        # outputs finished by step() and not yet claimed by a driver
+        # (run() claims everything; generate() claims only its own rids)
+        self._fresh: dict[int, str] = {}
 
-    # ------------------------------------------------------------- generate
-    def submit(self, prompt, max_new: int = 32) -> int:
+    # ------------------------------------------------- queue introspection
+    @property
+    def queue(self) -> list:
+        """Pending decode work items (admission order)."""
+        return [w for w in self.work if isinstance(w, Request)]
+
+    @property
+    def probe_queue(self) -> list:
+        """Pending probe work items (round members and stand-alones)."""
+        return [w for w in self.work if isinstance(w, ProbeRequest)]
+
+    @property
+    def work_remaining(self) -> bool:
+        return bool(self.work) or bool(self._rid_of_engine)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, prompt, max_new: Optional[int] = 32) -> int:
+        """Enqueue decode work.  ``max_new`` is this REQUEST's budget: 0 is
+        a genuine zero budget (PR-3 contract), ``None`` means the engine
+        default."""
         r = Request(next(_ids), prompt, max_new)
-        self.queue.append(r)
+        self.work.append(r)
         return r.rid
 
-    def run(self, on_step: Optional[Callable] = None) -> dict[int, str]:
-        """Drain the queue; returns {rid: output} for THIS drain only.
-        (Earlier drains remain queryable via ``self.completed``.)
+    def submit_probe(self, prompt) -> int:
+        r = ProbeRequest(next(_ids), prompt)
+        self.work.append(r)
+        return r.rid
 
-        Continuous mode (paged engines): FIFO admission into free capacity
-        between decode steps; ``on_step(self)`` runs after every step, so
-        callers can submit NEW requests mid-drain — they are admitted into
-        slots vacated by retiring rows while long rows keep decoding.
-        Queued probes are answered between steps into ``probe_results``.
+    def submit_probe_round(self, prompts) -> RoundFuture:
+        """Enqueue one oracle round's probes as a unit; returns the
+        :class:`RoundFuture` that resolves — logits aligned with
+        ``prompts`` — when the loop services the round in a step gap."""
+        fut = RoundFuture(len(prompts))
+        for i, p in enumerate(prompts):
+            self.work.append(ProbeRequest(next(_ids), p, future=fut, slot=i))
+        return fut
 
-        Lockstep mode: the whole backlog is sorted by prompt length BEFORE
-        chunking into batches, so each padded batch contains similar-length
-        prompts."""
-        if self.paged:
-            return self._run_continuous(on_step)
-        drained: dict[int, str] = {}
-        pending, self.queue = self.queue, []
-        # sort by ENCODED length: tuple (prefix, suffix) prompts would all
-        # sort as len == 2 and defeat the length grouping
-        pending.sort(key=lambda r: len(self.engine._encode_prompt(r.prompt)))
-        for i in range(0, len(pending), self.max_batch):
-            batch = pending[i:i + self.max_batch]
-            outs = self.engine.generate_lockstep(
-                [r.prompt for r in batch],
-                max_new=max(r.max_new for r in batch),
-                max_new_per=[r.max_new for r in batch])
-            for r, o in zip(batch, outs):
-                r.output = o
-                self.completed[r.rid] = r
-                drained[r.rid] = o
-        return drained
+    def submit_prefix_fill(self, prompts) -> int:
+        """Enqueue a prefix-KV warm-up for structured ``(prefix, suffix)``
+        prompts; the fill submission runs in the next step gap."""
+        f = PrefixFill(next(_ids), [p for p in prompts
+                                    if not isinstance(p, str)])
+        self.work.append(f)
+        return f.rid
 
-    def _run_continuous(self, on_step: Optional[Callable]) -> dict[int, str]:
+    # ------------------------------------------------------ the step loop
+    def step(self) -> dict[int, str]:
+        """ONE unified scheduling step (paged engines only):
+
+          1. admit queued decode work FIFO into free pool/row capacity;
+          2. service pending prefix fills, then ALL pending probe work
+             (merged submissions, cross-submitter dedup, futures resolve);
+          3. one paged decode step — active rows advance one token, rows
+             that finish retire and free their blocks.
+
+        Returns {rid: output} for decode work finished this step (also
+        recorded in ``completed`` and claimable via ``_fresh``)."""
+        assert self.paged, "step() requires a paged-capable engine"
         eng = self.engine
 
         def get_req(r: Request):
@@ -142,34 +221,136 @@ class BatchScheduler:
                 r.block_need = eng.paged_block_need(r.prompt, r.max_new)
             return r.prompt, r.max_new, r.block_need
 
-        drained: dict[int, str] = {}
-        while self.queue or self._rid_of_engine:
-            for req, erid in eng._paged_admit_wave(self.queue, get_req,
+        self.steps += 1
+        # -- 1. decode admission (FIFO among decode items; probe and fill
+        # items never block it — they hold no persistent capacity)
+        decode_items = []
+        rest: list = []
+        for w in self.work:
+            (decode_items if isinstance(w, Request) else rest).append(w)
+        if decode_items:
+            for req, erid in eng._paged_admit_wave(decode_items, get_req,
                                                    max_wave=self.max_batch):
                 self._rid_of_engine[erid] = req
-            if self.probe_queue:          # probe rounds ride the step gaps
-                self.probe_results.update(self.run_probes())
-            for erid, text in eng.paged_step().items():
-                req = self._rid_of_engine.pop(erid, None)
-                if req is None:           # a concurrent driver's row — e.g.
-                    eng._paged_finished[erid] = text   # on_step ran generate
-                    continue
-                req.output = text
-                self.completed[req.rid] = req
-                drained[req.rid] = text
+        self.work = rest + decode_items       # unadmitted decode items wait
+
+        # -- 2. fills then probes ride the step gap
+        self._service_fills()
+        if any(isinstance(w, ProbeRequest) for w in self.work):
+            self.probe_results.update(self.run_probes())
+
+        # -- 3. one decode step (a no-op when no rows are active, so a
+        # probe storm burns probe submissions, never decode progress)
+        finished: dict[int, str] = {}
+        for erid, text in eng.paged_step().items():
+            req = self._rid_of_engine.pop(erid, None)
+            if req is None:               # a concurrent driver's row — e.g.
+                eng._paged_finished[erid] = text   # a nested generate
+                continue
+            req.output = text
+            self.completed[req.rid] = req
+            self._fresh[req.rid] = text
+            finished[req.rid] = text
+        return finished
+
+    def pump(self) -> bool:
+        """Advance the loop once: one unified :meth:`step` on paged
+        engines; on lockstep engines there are no step gaps, so pending
+        probe work is serviced directly.  Returns True while work remains."""
+        if self.paged:
+            self.step()
+        else:
+            self._service_fills()
+            self.probe_results.update(self.run_probes())
+        return self.work_remaining
+
+    def resolve(self, future: RoundFuture) -> RoundFuture:
+        """Pump the loop until ``future`` resolves (probes are serviced
+        every step, so this takes at most one step — during which in-flight
+        decode rows advance one token alongside)."""
+        while not future.done:
+            progressed = self.pump()
+            if not future.done and not progressed:
+                raise RuntimeError("round future cannot resolve: its probe "
+                                   "work is no longer queued")
+        return future
+
+    # ----------------------------------------------------------- generate
+    def generate(self, prompts, max_new: Optional[int] = None) -> list[str]:
+        """Run generate requests THROUGH the live loop: submit them and
+        pump until they finish.  Other queued work — probe rounds from
+        concurrent plans, other drivers' decode rows — advances in the same
+        steps, which is what lets a judge-rationale generation overlap
+        ORDER BY probes at token granularity.  Outputs are claimed by this
+        call only (an enclosing ``run`` drain keeps its own rows)."""
+        if not self.paged:
+            return self.engine.generate(prompts, max_new=max_new)
+        # scalar max_new follows ServeEngine.generate's contract: 0/None
+        # means "engine default" (a per-request zero budget is submit()'s
+        # business), so the paged and lockstep branches agree
+        rids = [self.submit(p, max_new or None) for p in prompts]
+        pending = set(rids)
+        while pending:
+            self.step()
+            pending -= self._fresh.keys()
+        return [self._fresh.pop(r) for r in rids]
+
+    # ---------------------------------------------------------------- run
+    def run(self, on_step: Optional[Callable] = None) -> dict[int, str]:
+        """Drain the queue; returns {rid: output} for THIS drain only.
+        (Earlier drains remain queryable via ``self.completed``.)
+
+        Continuous mode (paged engines): pumps the unified step loop until
+        no decode work remains; ``on_step(self)`` runs after every step, so
+        callers can submit NEW requests mid-drain — they are admitted into
+        slots vacated by retiring rows while long rows keep decoding.
+        Queued probe work is answered between steps.
+
+        Lockstep mode: the whole backlog is sorted by prompt length BEFORE
+        chunking into batches, so each padded batch contains similar-length
+        prompts."""
+        if self.paged:
+            return self._run_continuous(on_step)
+        drained: dict[int, str] = {}
+        pending = [w for w in self.work if isinstance(w, Request)]
+        self.work = [w for w in self.work if not isinstance(w, Request)]
+        # sort by ENCODED length: tuple (prefix, suffix) prompts would all
+        # sort as len == 2 and defeat the length grouping
+        pending.sort(key=lambda r: len(self.engine._encode_prompt(r.prompt)))
+        for i in range(0, len(pending), self.max_batch):
+            batch = pending[i:i + self.max_batch]
+            limits = [r.max_new if r.max_new is not None
+                      else self.engine.max_new for r in batch]
+            outs = self.engine.generate_lockstep(
+                [r.prompt for r in batch],
+                max_new=max(limits), max_new_per=limits)
+            for r, o in zip(batch, outs):
+                r.output = o
+                self.completed[r.rid] = r
+                drained[r.rid] = o
+        return drained
+
+    def _run_continuous(self, on_step: Optional[Callable]) -> dict[int, str]:
+        drained: dict[int, str] = {}
+
+        def claim() -> None:
+            for rid in [r for r in self._fresh if r in self.completed]:
+                drained[rid] = self._fresh.pop(rid)
+
+        while any(isinstance(w, Request) for w in self.work) \
+                or self._rid_of_engine:
+            self.step()
+            claim()
             if on_step is not None:
                 on_step(self)
+        claim()
         return drained
 
     # --------------------------------------------------------------- probes
-    def submit_probe(self, prompt) -> int:
-        r = ProbeRequest(next(_ids), prompt)
-        self.probe_queue.append(r)
-        return r.rid
-
     def run_probes(self) -> dict[int, np.ndarray]:
-        """Drain the probe queue through length-bucketed padded submissions;
-        returns {rid: last-position logits} for this drain.
+        """Service ALL pending probe work through length-bucketed padded
+        submissions; returns {rid: last-position logits} for stand-alone
+        probes of this drain (round members resolve into their futures).
 
         Cross-client dedup: concurrent operators draining through one
         scheduler routinely submit IDENTICAL prompts in the same drain
@@ -181,7 +362,8 @@ class BatchScheduler:
         function of the logical prompt and happens at the oracle layer,
         so serving-side dedup follows the prefix-cache convention: fewer
         forward-pass rows, identical accounting."""
-        pending, self.probe_queue = self.probe_queue, []
+        pending = [w for w in self.work if isinstance(w, ProbeRequest)]
+        self.work = [w for w in self.work if not isinstance(w, ProbeRequest)]
         if not pending:
             return {}
         slot_of: dict[tuple, int] = {}
@@ -198,6 +380,20 @@ class BatchScheduler:
         logits = self.engine.submit_probes(
             uniq, max_batch=(self.probe_batch if self.probe_batch is not None
                              else self.engine.max_probe_batch))
+        out: dict[int, np.ndarray] = {}
         for r, s in zip(pending, slots):
             r.logits = logits[s]
-        return {r.rid: r.logits for r in pending}
+            if r.future is not None:
+                r.future._set(r.slot, r.logits)
+            else:
+                out[r.rid] = r.logits
+        return out
+
+    def _service_fills(self) -> None:
+        fills = [w for w in self.work if isinstance(w, PrefixFill)]
+        if not fills:
+            return
+        self.work = [w for w in self.work if not isinstance(w, PrefixFill)]
+        prompts = [p for f in fills for p in f.prompts]
+        if prompts:
+            self.engine.prefetch_prefixes(prompts)
