@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure (tables 1-3 and
-the figures reproduce the paper; tables 4-8 track this repo's serving
+the figures reproduce the paper; tables 4-9 track this repo's serving
 stack: round batching, prefix-KV cache, paged decode, the probe-plan
-executor, and unified-loop co-scheduling).  Prints CSV.
+executor, unified-loop co-scheduling, and locality scheduling).  Prints
+CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1 fig3
@@ -16,7 +17,7 @@ import time
 from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
                roofline, table1_calls, table2_cost_est, table3_samples,
                table4_submissions, table5_prefix_cache, table6_paged_decode,
-               table7_executor, table8_cosched)
+               table7_executor, table8_cosched, table9_locality)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -32,6 +33,7 @@ SUITES = {
     "table6": table6_paged_decode.main,   # paged decode vs lockstep waste
     "table7": table7_executor.main,       # probe-plan executor merging
     "table8": table8_cosched.main,        # unified-loop co-scheduling latency
+    "table9": table9_locality.main,       # locality scheduling + memo
 }
 
 

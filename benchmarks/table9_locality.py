@@ -1,0 +1,299 @@
+"""Table 9 (repo-specific): locality-creating probe scheduling.
+
+Three measurements over the REAL ModelOracle backend, comparing the
+**reactive** PR 2 scheme (``ServeEngine(locality=False)``, fills on
+demand, no prefetch) against the **locality** stack (GGR group-and-reorder
+window jobs + executor prefix prefetch pipelining —
+serving/locality.py):
+
+ * **quick N=64** — one quicksort query with variable-length keys (the
+   per-group suffix windows only pay off when suffix spans straddle
+   power-of-two buckets), driven through the probe-plan executor on the
+   unified loop;
+ * **many4** — the 4-query ``llm_order_by_many`` workload (quick ASC +
+   quick DESC twins over one criteria, ext_merge, pointwise) sharing one
+   engine;
+ * **memo** — a second wave of the same 4 queries arriving later with a
+   shared :class:`SemanticMemo`: repeat comparisons/scores are served
+   from the cross-query cache under first-requester-pays billing.
+
+Acceptance (ISSUE 6): the reordered+prefetched runs must show strictly
+higher prefix hit-rate AND prefill-tokens-saved than the reactive
+baseline on BOTH workloads, with per-query orderings and ledgers (memo
+wave: *reconciled* ledgers — billed records + recorded cache-hit shadows)
+byte-identical (``==``) to solo execution, and a strict prefill-reduction
+improvement over the reactive PR 2 baseline.
+
+    PYTHONPATH=src python -m benchmarks.table9_locality [--json OUT] [N ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import PathParams, ProbePlanExecutor, as_keys, make_path
+from repro.core.executor import plan_sort_result
+from repro.core.operator import OrderQuery, llm_order_by_many
+from repro.core.oracles.cache import SemanticMemo
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.core.types import SortSpec
+
+CRITERIA = "relevance"
+
+
+def _lm():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm, params, **kw):
+    from repro.serving import ServeEngine
+    return ServeEngine(lm, params, max_new_tokens=8, **kw)
+
+
+def _keys(n: int):
+    # variable-length keys: suffix spans straddle power-of-two window
+    # buckets, which is where per-group windows beat the class-global one
+    rng = np.random.default_rng(0)
+    return as_keys([f"doc {'x' * (3 * (i % 11))} {i:03d}" for i in range(n)],
+                   list(rng.standard_normal(n)))
+
+
+def _stats(eng, sched=None, mark=None):
+    s = eng.stats
+    now = dict(prefill=s.prefill_tokens, hits=s.prefix_hits,
+               misses=s.prefix_misses, saved=s.prefix_tokens_saved,
+               probe_rows=s.probe_rows, calls=s.calls,
+               fills=(sched.fills_serviced if sched else 0))
+    if mark is None:
+        return now
+    d = {k: now[k] - mark[k] for k in now}
+    d["hit_rate"] = round(d["hits"] / max(d["hits"] + d["misses"], 1), 4)
+    return d
+
+
+# --------------------------------------------------------- quick N=64
+def _run_quick(eng, keys, spec, prefetch: bool) -> tuple[dict, object, list]:
+    """One quicksort query through the executor on the unified loop."""
+    from repro.serving import BatchScheduler
+    sched = BatchScheduler(eng)
+    oracle = ModelOracle(eng)
+    ex = ProbePlanExecutor(scheduler=sched, prefetch=prefetch)
+    mark = _stats(eng, sched)
+    t0 = time.perf_counter()
+    run = ex.submit_path(make_path("quick", PathParams(batch_size=4)),
+                         keys, oracle, spec)
+    ex.run()
+    res = plan_sort_result(run, spec, len(keys), oracle.prices)
+    d = _stats(eng, sched, mark)
+    d["seconds"] = round(time.perf_counter() - t0, 3)
+    return d, res, list(oracle.ledger.records)
+
+
+def run_quick(lm, params, n: int) -> dict:
+    keys, spec = _keys(n), SortSpec(CRITERIA, True, None)
+    # solo reference: the PR 1 synchronous execute (order + ledger oracle)
+    eng_solo = _engine(lm, params)
+    solo_oracle = ModelOracle(eng_solo)
+    solo = make_path("quick", PathParams(batch_size=4)).execute(
+        keys, solo_oracle, spec)
+    # cache-off denominator for the prefill reduction
+    eng_off = _engine(lm, params, prefix_cache_size=0)
+    off, res_off, led_off = _run_quick(eng_off, keys, spec, prefetch=False)
+    # reactive PR 2 baseline vs the locality stack
+    eng_re = _engine(lm, params, locality=False)
+    rea, res_re, led_re = _run_quick(eng_re, keys, spec, prefetch=False)
+    eng_lo = _engine(lm, params)
+    loc, res_lo, led_lo = _run_quick(eng_lo, keys, spec, prefetch=True)
+
+    row = dict(
+        workload="quick", n=n,
+        prefill_off=off["prefill"], prefill_reactive=rea["prefill"],
+        prefill_locality=loc["prefill"],
+        reduction_reactive=round(1 - rea["prefill"] / off["prefill"], 4),
+        reduction_locality=round(1 - loc["prefill"] / off["prefill"], 4),
+        hit_rate_reactive=rea["hit_rate"], hit_rate_locality=loc["hit_rate"],
+        tokens_saved_reactive=rea["saved"], tokens_saved_locality=loc["saved"],
+        fills_serviced=loc["fills"],
+        seconds_reactive=rea["seconds"], seconds_locality=loc["seconds"],
+        order_identical=(solo.uids() == res_off.uids() == res_re.uids()
+                         == res_lo.uids()),
+        ledger_identical=(list(solo_oracle.ledger.records) == led_off
+                          == led_re == led_lo),
+    )
+    assert row["order_identical"], f"quick N={n}: order diverged from solo"
+    assert row["ledger_identical"], f"quick N={n}: ledger diverged from solo"
+    assert row["hit_rate_locality"] > row["hit_rate_reactive"], (
+        f"quick N={n}: locality hit rate {row['hit_rate_locality']} not "
+        f"above reactive {row['hit_rate_reactive']}")
+    assert row["tokens_saved_locality"] > row["tokens_saved_reactive"], (
+        f"quick N={n}: locality saved {row['tokens_saved_locality']} <= "
+        f"reactive {row['tokens_saved_reactive']}")
+    assert row["reduction_locality"] > row["reduction_reactive"], (
+        f"quick N={n}: no prefill-reduction improvement over the reactive "
+        f"PR 2 baseline ({row['reduction_locality']:.1%} vs "
+        f"{row['reduction_reactive']:.1%})")
+    return row
+
+
+# ------------------------------------------- 4-query llm_order_by_many
+def _queries(keys, engine):
+    p4 = PathParams(batch_size=4)
+    return [
+        OrderQuery(keys, CRITERIA, ModelOracle(engine), descending=False,
+                   path="quick", params=p4),
+        OrderQuery(keys, CRITERIA, ModelOracle(engine), descending=True,
+                   path="quick", params=p4),
+        OrderQuery(keys[: 3 * len(keys) // 4], CRITERIA, ModelOracle(engine),
+                   path="ext_merge", params=p4),
+        OrderQuery(keys[: len(keys) // 2], CRITERIA, ModelOracle(engine),
+                   path="pointwise"),
+    ]
+
+
+def _solo_refs(lm, params, keys):
+    eng = _engine(lm, params)
+    refs = []
+    for q in _queries(keys, eng):
+        spec = SortSpec(q.criteria, q.descending, q.limit)
+        oracle = ModelOracle(eng)
+        res = make_path(q.path, q.params or PathParams()).execute(
+            q.keys, oracle, spec)
+        refs.append((res.uids(), list(oracle.ledger.records)))
+    return refs
+
+
+def run_many(lm, params, n: int) -> dict:
+    keys = _keys(n)
+    solo = _solo_refs(lm, params, keys)
+
+    def one(locality: bool, prefetch: bool):
+        eng = _engine(lm, params, locality=locality)
+        qs = _queries(keys, eng)
+        mark = _stats(eng)
+        t0 = time.perf_counter()
+        results = llm_order_by_many(qs, prefetch=prefetch)
+        d = _stats(eng, mark=mark)
+        d["seconds"] = round(time.perf_counter() - t0, 3)
+        ok_order = all(r.uids() == s[0] for r, s in zip(results, solo))
+        ok_ledger = all(list(q.oracle.ledger.records) == s[1]
+                        for q, s in zip(qs, solo))
+        return d, ok_order, ok_ledger
+
+    rea, rea_order, rea_ledger = one(locality=False, prefetch=False)
+    loc, loc_order, loc_ledger = one(locality=True, prefetch=True)
+    row = dict(
+        workload="many4", n=n, n_queries=4,
+        prefill_reactive=rea["prefill"], prefill_locality=loc["prefill"],
+        hit_rate_reactive=rea["hit_rate"], hit_rate_locality=loc["hit_rate"],
+        tokens_saved_reactive=rea["saved"], tokens_saved_locality=loc["saved"],
+        seconds_reactive=rea["seconds"], seconds_locality=loc["seconds"],
+        order_identical=rea_order and loc_order,
+        ledger_identical=rea_ledger and loc_ledger,
+    )
+    assert row["order_identical"], "many4: a query's order diverged from solo"
+    assert row["ledger_identical"], "many4: a query's ledger diverged from solo"
+    assert row["hit_rate_locality"] > row["hit_rate_reactive"], (
+        f"many4: locality hit rate {row['hit_rate_locality']} not above "
+        f"reactive {row['hit_rate_reactive']}")
+    assert row["tokens_saved_locality"] > row["tokens_saved_reactive"], (
+        f"many4: locality saved {row['tokens_saved_locality']} <= reactive "
+        f"{row['tokens_saved_reactive']}")
+    return row
+
+
+# --------------------------------------- cross-query semantic memo wave
+def run_memo(lm, params, n: int) -> dict:
+    keys = _keys(n)
+    solo = _solo_refs(lm, params, keys)
+    eng = _engine(lm, params)
+    memo = SemanticMemo()
+    qs1 = _queries(keys, eng)
+    m0 = _stats(eng)
+    llm_order_by_many(qs1, semantic_memo=memo)
+    m1 = _stats(eng, mark=m0)
+    # the second wave arrives later (a fresh llm_order_by_many call, fresh
+    # oracles): every per-item probe already answered for wave 1 is served
+    # from the memo — first-requester-pays, so wave-2 ledgers bill only
+    # what the memo could not answer and reconciliation restores the rest
+    qs2 = _queries(keys, eng)
+    results2 = llm_order_by_many(qs2, semantic_memo=memo)
+    m2 = _stats(eng, mark=m0)
+    wave2_rows = m2["probe_rows"] - m1["probe_rows"]
+
+    order_ok = all(r.uids() == s[0] for r, s in zip(results2, solo))
+    # wave 1 paid for everything it asked first — its billed ledgers ARE
+    # the solo ledgers; wave 2 reconciles billed records + hit shadows
+    wave1_ledger_ok = all(list(q.oracle.ledger.records) == s[1]
+                          for q, s in zip(qs1, solo))
+    reconciled_ok = all(q.oracle.reconciled_records() == s[1]
+                        for q, s in zip(qs2, solo))
+    billed2 = sum(len(q.oracle.ledger.records) for q in qs2)
+    shadows2 = sum(len(q.oracle.memo_hit_log) for q in qs2)
+    solo_records = sum(len(s[1]) for s in solo)
+    row = dict(
+        workload="memo", n=n, n_queries=4,
+        memo_entries=len(memo), memo_hits=memo.hits, memo_misses=memo.misses,
+        wave1_probe_rows=m1["probe_rows"], wave2_probe_rows=wave2_rows,
+        wave2_billed_records=billed2, wave2_hit_shadows=shadows2,
+        solo_records=solo_records,
+        order_identical=order_ok,
+        wave1_ledger_identical=wave1_ledger_ok,
+        reconciled_identical=reconciled_ok,
+        conservation=(billed2 + shadows2 == solo_records),
+    )
+    assert row["order_identical"], "memo wave 2: order diverged from solo"
+    assert row["wave1_ledger_identical"], (
+        "memo wave 1 (all first requests) should bill the solo ledgers")
+    assert row["reconciled_identical"], (
+        "memo wave 2: reconciled records (billed + hit shadows) diverged "
+        "from the solo ledgers")
+    assert row["conservation"], (
+        f"ledger conservation failed: {billed2} billed + {shadows2} hit "
+        f"shadows != {solo_records} solo records")
+    assert memo.hits > 0, "memo wave 2 produced no cross-query hits"
+    assert wave2_rows < m1["probe_rows"], (
+        "the memo'd wave should reach the backend with fewer probe rows")
+    return row
+
+
+def run(sizes: list[int]) -> list[dict]:
+    lm, params = _lm()
+    rows = []
+    for n in sizes:
+        rows.append(run_quick(lm, params, n))
+        rows.append(run_many(lm, params, max(n // 2, 8)))
+        rows.append(run_memo(lm, params, max(n // 2, 8)))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import parse_json_flag
+    argv, json_path = parse_json_flag(sys.argv[1:])
+    sizes = [int(a) for a in argv if a.isdigit()] or [64]
+    rows = run(sizes)
+    cols = ("workload", "n", "hit_rate_reactive", "hit_rate_locality",
+            "tokens_saved_reactive", "tokens_saved_locality",
+            "order_identical", "ledger_identical")
+    memo_cols = ("workload", "n", "memo_hits", "wave1_probe_rows",
+                 "wave2_probe_rows", "wave2_billed_records",
+                 "wave2_hit_shadows", "solo_records", "order_identical",
+                 "reconciled_identical", "conservation")
+    for r in rows:
+        use = memo_cols if r["workload"] == "memo" else cols
+        print(",".join(str(c) for c in use))
+        print(",".join(str(r[c]) for c in use))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -238,10 +238,26 @@ class ProbePlanExecutor:
     Billing: each plan's ledger records are captured per resolution, so
     ``run.records`` is record-for-record what a solo run of the same plan
     would have billed, even when plans share one oracle instance.
+
+    Prefetch pipelining (``prefetch``, default on whenever a scheduler is
+    attached): at the end of every tick — after plans advance and expose
+    their NEXT pending probe sets — each deferrable plan's upcoming round
+    is previewed (``ModelOracle.preview_round_prompts``, no billing) and
+    the shared prefix regions worth warming
+    (:func:`repro.serving.locality.prefetch_candidates`) are enqueued as
+    ``PrefixFill`` work on the scheduler.  The fills ride the NEXT step
+    gap of the unified loop — overlapping any in-flight decode — so when
+    the round's probes arrive a tick later, their regions are already
+    LRU-resident.  Pure serving-side warm-up: routing, results, and
+    ledgers are untouched (only candidate regions the routing policy
+    would cache anyway are filled).
     """
 
-    def __init__(self, scheduler=None):
+    def __init__(self, scheduler=None, prefetch: Optional[bool] = None):
         self.scheduler = scheduler
+        self.prefetch = (scheduler is not None if prefetch is None
+                         else prefetch and scheduler is not None)
+        self.prefetches = 0            # PrefixFill work items enqueued
         self.runs: list[PlanRun] = []
         self.ticks = 0
 
@@ -318,7 +334,33 @@ class ProbePlanExecutor:
                 ready.append((run, _fold_raw(run.ordering, ps, raw)))
         for run, value in ready:
             run._advance(value)
+        if self.prefetch:
+            self._prefetch_next_rounds()
         return any(not r.done for r in self.runs)
+
+    def _prefetch_next_rounds(self) -> None:
+        """Peek every live plan's NEXT pending probe set and enqueue
+        prefix fills for the regions it will share, so the warm-ups ride
+        the step gap(s) between this tick and the round's own service
+        step (class docstring)."""
+        prompts: list = []
+        for run in self.runs:
+            ps = run.pending
+            if run.done or ps is None or not self._can_defer(run, ps):
+                continue
+            oracle = run.ordering.oracle
+            if not hasattr(oracle, "preview_round_prompts"):
+                continue
+            prompts.extend(oracle.preview_round_prompts(
+                _DEFERRED_KIND[type(ps)], _deferred_payload(ps),
+                run.ordering.spec.criteria))
+        if not prompts:
+            return
+        from ..serving.locality import prefetch_candidates
+        fills = prefetch_candidates(self.scheduler.engine, prompts)
+        if fills:
+            self.scheduler.submit_prefix_fill(fills)
+            self.prefetches += 1
 
     def run(self, on_tick: Optional[Callable] = None) -> list[PlanRun]:
         """Tick until every plan completes.  ``on_tick(self)`` runs after
@@ -353,6 +395,28 @@ def attach_scheduler(oracles: Sequence, scheduler) -> list:
 def detach_scheduler(attached: Sequence) -> None:
     for o in attached:
         o.scheduler = None
+
+
+def attach_memo(oracles: Sequence, memo) -> list:
+    """Point each deferred-capable oracle without a memo of its own at the
+    shared :class:`~repro.core.oracles.cache.SemanticMemo`.  Returns the
+    oracles actually attached — pass to :func:`detach_memo` when the
+    driving call ends (the memo itself outlives the call; only the
+    attachment is scoped)."""
+    attached = []
+    if memo is None:
+        return attached
+    for o in oracles:
+        if (o is not None and hasattr(o, "begin_probe_round")
+                and getattr(o, "memo", None) is None):
+            o.memo = memo
+            attached.append(o)
+    return attached
+
+
+def detach_memo(attached: Sequence) -> None:
+    for o in attached:
+        o.memo = None
 
 
 def auto_scheduler(oracles: Sequence):

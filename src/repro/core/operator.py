@@ -21,8 +21,9 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .access_paths.base import PathParams, make_path
-from .executor import (ProbePlanExecutor, attach_scheduler, auto_scheduler,
-                       detach_scheduler, plan_sort_result)
+from .executor import (ProbePlanExecutor, attach_memo, attach_scheduler,
+                       auto_scheduler, detach_memo, detach_scheduler,
+                       plan_sort_result)
 from .optimizer.cost_model import CandidateSpec
 from .optimizer.optimizer import AccessPathOptimizer, OptimizerConfig, OptimizerReport
 from .types import Key, SortResult, SortSpec
@@ -68,7 +69,8 @@ class OrderQuery:
 
 
 def llm_order_by_many(queries: Sequence[OrderQuery], *,
-                      scheduler=None) -> list[SortResult]:
+                      scheduler=None, semantic_memo=None,
+                      prefetch: Optional[bool] = None) -> list[SortResult]:
     """Execute several LLM ORDER BY queries concurrently over one engine.
 
     All queries' access-path plans advance together through a
@@ -80,8 +82,28 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
     ``SortResult``'s order AND accounting are ``==``-identical to running
     that query alone (the executor tracks per-plan ledger records).
 
+    ``semantic_memo``: a shared
+    :class:`~repro.core.oracles.cache.SemanticMemo` (or ``True`` for a
+    fresh one) consulted by every deferred-capable oracle before emitting
+    per-item probes — comparisons, pointwise scores, inquiries already
+    answered for ANOTHER query (or an earlier call reusing the memo) are
+    served from the memo instead of the backend.  Billing becomes
+    first-requester-pays: a hit query's ``SortResult`` accounting shows
+    only what it was billed, and ``oracle.reconciled_records()`` rebuilds
+    its solo ledger byte-identically.  Orderings are unchanged either way
+    (memo values are the raw probe results the query's own probes would
+    have produced).  Default ``None``: no memo, per-query ledgers stay
+    solo-identical.
+
+    ``prefetch``: forwards to
+    :class:`~repro.core.executor.ProbePlanExecutor` — ``None`` (default)
+    enables prefix-region prefetch pipelining whenever a scheduler is in
+    play; ``False`` pins the reactive fill-on-demand behavior (the
+    benchmarks' baseline).
+
     Static paths only — ``path="auto"`` (the optimizer) manages its own
     concurrent pilot executor and cannot be nested here."""
+    from .oracles.cache import SemanticMemo
     for q in queries:
         if q.path == "auto":
             raise ValueError(
@@ -89,15 +111,20 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
                 "path='auto' queries through llm_order_by")
     if scheduler is None:
         scheduler = auto_scheduler([q.oracle for q in queries])
+    if semantic_memo is True:
+        semantic_memo = SemanticMemo()
     # every query's oracle becomes a client of the SAME live loop FOR THIS
     # CALL: deferred probe rounds ride its step gaps, and any generation
     # the oracle runs (judge rationales) decodes through it — so probes
     # and rationale tokens co-schedule instead of alternating whole
     # drains.  The attachment is scoped (restored on exit) so a later call
-    # with a fresh scheduler re-attaches instead of pumping a stale loop.
+    # with a fresh scheduler re-attaches instead of pumping a stale loop;
+    # the memo attachment is scoped the same way (the memo itself is the
+    # caller's and outlives the call — cross-CALL reuse is the point).
     attached = attach_scheduler([q.oracle for q in queries], scheduler)
+    attached_memo = attach_memo([q.oracle for q in queries], semantic_memo)
     try:
-        ex = ProbePlanExecutor(scheduler=scheduler)
+        ex = ProbePlanExecutor(scheduler=scheduler, prefetch=prefetch)
         runs = []
         for i, q in enumerate(queries):
             spec = SortSpec(q.criteria, q.descending, q.limit)
@@ -109,6 +136,7 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
                 for q, spec, run in runs]
     finally:
         detach_scheduler(attached)
+        detach_memo(attached_memo)
 
 
 class Table:

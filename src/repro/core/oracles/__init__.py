@@ -1,7 +1,8 @@
 from .base import Oracle, PriceSheet, TokenLedger, LLAMA70B, LLAMA405B, GPT41
 from .simulated import ExactOracle, FlakyOracle, OracleProfile, SimulatedOracle
-from .cache import CachingOracle
+from .cache import CachingOracle, SemanticMemo, canon_criteria, stable_key
 
 __all__ = ["Oracle", "PriceSheet", "TokenLedger", "LLAMA70B", "LLAMA405B",
            "GPT41", "ExactOracle", "FlakyOracle", "OracleProfile",
-           "SimulatedOracle", "CachingOracle"]
+           "SimulatedOracle", "CachingOracle", "SemanticMemo",
+           "canon_criteria", "stable_key"]

@@ -36,6 +36,15 @@ class ModelOracle(Oracle):
         # concurrent plans are answered in this oracle's decode step gaps
         # instead of waiting for the whole generation to drain
         self.scheduler = scheduler
+        # optional cross-query SemanticMemo (core/oracles/cache.py),
+        # consulted by begin_probe_round for the per-item kinds: memo hits
+        # skip both billing AND the backend probe (first-requester-pays),
+        # and are logged as (ledger position, stored CallRecord) shadow
+        # pairs so reconciled_records() rebuilds the exact solo ledger.
+        # None (the default) keeps deferred rounds byte-identical to the
+        # synchronous verbs — attach via llm_order_by_many(semantic_memo=)
+        self.memo = None
+        self.memo_hit_log: list[tuple[int, object]] = []
 
     # -- billing helpers using real token counts -----------------------------
     def _real_tokens(self, text: str) -> int:
@@ -153,29 +162,95 @@ class ModelOracle(Oracle):
     # results only need the direction fold applied
     # (``Ordering.fold_compares`` / ``fold_scores`` / ``fold_window_result``).
 
+    def _probe_prompt(self, kind: str, item, criteria: str):
+        """The serving prompt of ONE per-item probe (``compare`` /
+        ``score_each`` / ``inquire``) — shared by begin_probe_round and
+        :meth:`preview_round_prompts` so prefetch warms exactly the
+        regions the round will touch."""
+        if kind == "compare":
+            a, b = item
+            return self.engine._compare_parts(a.text, b.text, criteria)
+        if kind == "score_each":
+            return self.engine.score_parts(item.text, criteria)
+        return self._inquire_prompt(item, criteria)
+
+    def _charge_probe(self, kind: str, item) -> None:
+        """Bill ONE per-item probe — identical record to the synchronous
+        batch verbs."""
+        if kind == "compare":
+            a, b = item
+            inp = (self.costs.compare_prefix + self._real_tokens(a.text)
+                   + self._real_tokens(b.text))
+            self.ledger.charge("compare", inp, self.costs.compare_out,
+                               n_keys=2)
+        elif kind == "score_each":
+            self.ledger.charge(
+                "score",
+                self.costs.score_prefix + self._real_tokens(item.text),
+                self.costs.score_out_per_key, n_keys=1)
+        else:
+            self.ledger.charge(
+                "inquire",
+                self.costs.inquire_prefix + self._real_tokens(item.text),
+                self.costs.inquire_out)
+
+    def preview_round_prompts(self, kind: str, payload, criteria: str) -> list:
+        """The prompts the NEXT ``begin_probe_round(kind, payload, ...)``
+        call will submit, built WITHOUT billing or side effects — the
+        executor's prefetch pipeline warms their prefix regions in an
+        earlier step gap.  Memo-resident items are excluded: they will
+        never reach the backend, so warming their regions is waste."""
+        if kind in ("score_batches", "rank_windows"):
+            return [self.engine.score_parts(k.text, criteria)
+                    for b in payload for k in b]
+        if kind not in ("compare", "score_each", "inquire"):
+            return []
+        items = payload
+        if self.memo is not None:
+            items = [it for it in payload
+                     if self.memo.get(self.memo.key(kind, it, criteria))
+                     is None]
+        return [self._probe_prompt(kind, it, criteria) for it in items]
+
     def begin_probe_round(self, kind: str, payload, criteria: str, sink):
         """Bill one round now and enqueue its prompts into ``sink`` (a
         BatchScheduler); returns an opaque token for
         :meth:`finish_probe_round`.  ``kind`` is one of ``compare`` /
         ``score_each`` / ``score_batches`` / ``rank_windows`` /
-        ``inquire``; ``payload`` matches the corresponding batch verb."""
+        ``inquire``; ``payload`` matches the corresponding batch verb.
+
+        With a :class:`~repro.core.oracles.cache.SemanticMemo` attached
+        (``self.memo``), the per-item kinds consult it first: a hit skips
+        billing and the probe (logging a reconciliation shadow — see
+        :meth:`reconciled_records`); misses are billed normally and their
+        values land in the memo at finish time, CallRecord attached."""
         eng = self.engine
         prompts: list = []
         meta = None
-        if kind == "compare":
-            for a, b in payload:
-                inp = (self.costs.compare_prefix + self._real_tokens(a.text)
-                       + self._real_tokens(b.text))
-                self.ledger.charge("compare", inp, self.costs.compare_out,
-                                   n_keys=2)
-                prompts.append(eng._compare_parts(a.text, b.text, criteria))
-        elif kind == "score_each":
-            for k in payload:
-                self.ledger.charge(
-                    "score",
-                    self.costs.score_prefix + self._real_tokens(k.text),
-                    self.costs.score_out_per_key, n_keys=1)
-                prompts.append(eng.score_parts(k.text, criteria))
+        plan = None                    # memo plan: (hits, keys, records)
+        if kind in ("compare", "score_each", "inquire"):
+            hits: dict[int, object] = {}
+            miss_keys: list = []
+            miss_records: list = []
+            for i, item in enumerate(payload):
+                mkey = None
+                if self.memo is not None:
+                    mkey = self.memo.key(kind, item, criteria)
+                    ent = self.memo.get(mkey)
+                    if ent is not None:
+                        value, record = ent
+                        hits[i] = value
+                        self.memo.hits += 1
+                        self.memo_hit_log.append(
+                            (len(self.ledger.records), record))
+                        continue
+                    self.memo.misses += 1
+                self._charge_probe(kind, item)
+                miss_keys.append(mkey)
+                miss_records.append(self.ledger.records[-1])
+                prompts.append(self._probe_prompt(kind, item, criteria))
+            if self.memo is not None:
+                plan = (hits, miss_keys, miss_records)
         elif kind in ("score_batches", "rank_windows"):
             bill_kind = "score" if kind == "score_batches" else "rank"
             prefix = (self.costs.score_prefix if kind == "score_batches"
@@ -188,42 +263,64 @@ class ModelOracle(Oracle):
                                    n_keys=len(b))
                 prompts.extend(eng.score_parts(k.text, criteria) for k in b)
             meta = [list(b) for b in payload]
-        elif kind == "inquire":
-            for k in payload:
-                self.ledger.charge(
-                    "inquire",
-                    self.costs.inquire_prefix + self._real_tokens(k.text),
-                    self.costs.inquire_out)
-                prompts.append(self._inquire_prompt(k, criteria))
         else:
             raise ValueError(f"unknown deferred round kind {kind!r}")
         if hasattr(sink, "submit_probe_round"):
-            return (kind, sink.submit_probe_round(prompts), meta)
+            return (kind, sink.submit_probe_round(prompts), meta, plan)
         # legacy sink: per-probe rids read back from sink.probe_results
-        return (kind, [sink.submit_probe(p) for p in prompts], meta)
+        return (kind, [sink.submit_probe(p) for p in prompts], meta, plan)
 
     def finish_probe_round(self, token, sink):
         """Interpret one begun round's logits.  Future-based rounds resolve
         through the sink's step loop (``sink.resolve`` pumps until the
         round's step gap has serviced it — at most one step away); legacy
         rid rounds read ``sink.probe_results``.  Returns the same raw
-        values the synchronous batch verb would have."""
+        values the synchronous batch verb would have.  Rounds begun with a
+        memo plan fan hits and fresh results back into payload order and
+        publish the fresh values (with their billed CallRecords) to the
+        memo."""
         from ...serving.engine import read_compare, read_score, read_yes_no
-        kind, handle, meta = token
+        kind, handle, meta, plan = token
         if hasattr(handle, "result"):            # RoundFuture
             if not handle.done:
                 sink.resolve(handle)
             logits = handle.result()
         else:
             logits = [sink.probe_results.pop(rid) for rid in handle]
-        if kind == "compare":
-            return [read_compare(l) for l in logits]
-        if kind == "score_each":
-            return [read_score(l) for l in logits]
-        if kind == "inquire":
-            return [read_yes_no(l) for l in logits]
-        return self._split_rounds([read_score(l) for l in logits], meta,
-                                  rank=(kind == "rank_windows"))
+        if kind in ("score_batches", "rank_windows"):
+            return self._split_rounds([read_score(l) for l in logits], meta,
+                                      rank=(kind == "rank_windows"))
+        read = {"compare": read_compare, "score_each": read_score,
+                "inquire": read_yes_no}[kind]
+        fresh = [read(l) for l in logits]
+        if plan is None:
+            return fresh
+        hits, miss_keys, miss_records = plan
+        for mkey, value, record in zip(miss_keys, fresh, miss_records):
+            self.memo.put(mkey, value, record)
+        out: list = [None] * (len(hits) + len(fresh))
+        it = iter(fresh)
+        for i in range(len(out)):
+            out[i] = hits[i] if i in hits else next(it)
+        return out
+
+    def reconciled_records(self) -> list:
+        """This oracle's ledger with the memo hits' shadow
+        :class:`CallRecord`\\ s re-inserted at the positions solo execution
+        would have billed them — byte-identical (``==``) to the solo run's
+        ``ledger.records`` when the memo'd values came from identical
+        probes (the first-requester-pays reconciliation contract: sum of
+        per-query billed ledgers + hit shadows == solo ledgers)."""
+        out: list = []
+        li = 0
+        log = self.memo_hit_log
+        for pos in range(len(self.ledger.records) + 1):
+            while li < len(log) and log[li][0] == pos:
+                out.append(log[li][1])
+                li += 1
+            if pos < len(self.ledger.records):
+                out.append(self.ledger.records[pos])
+        return out
 
     def _inquire_prompt(self, key: Key, criteria: str) -> PromptParts:
         # structured (shared_prefix, per_key_suffix): a whole membership

@@ -1,6 +1,8 @@
 from .engine import ServeEngine, ServeStats
 from .kv_pool import KVBlockPool, PoolExhausted
+from .locality import plan_window_jobs, prefetch_candidates
 from .scheduler import BatchScheduler, Request, RoundFuture
 
 __all__ = ["ServeEngine", "ServeStats", "KVBlockPool", "PoolExhausted",
-           "BatchScheduler", "Request", "RoundFuture"]
+           "BatchScheduler", "Request", "RoundFuture",
+           "plan_window_jobs", "prefetch_candidates"]

@@ -66,6 +66,7 @@ import numpy as np
 from ..data.tokenizer import BOS, EOS, PAD, ByteTokenizer
 from ..models.model import LM
 from .kv_pool import KVBlockPool, PoolExhausted
+from .locality import plan_window_jobs
 
 TOK_A, TOK_B = ord("A"), ord("B")
 TOK_HI, TOK_LO = ord("9"), ord("0")
@@ -182,7 +183,7 @@ class ServeEngine:
                  bucket_shapes: bool = True, max_probe_batch: int = 256,
                  prefix_cache_size: int = 64, pool_blocks: int = 768,
                  block_size: int = 16, max_decode_rows: int = 32,
-                 paged_kernel: object = False):
+                 paged_kernel: object = False, locality: bool = True):
         self.lm = lm
         self.params = params
         self.tok = ByteTokenizer()
@@ -209,6 +210,13 @@ class ServeEngine:
         self.prefix_cache_enabled = (
             prefix_cache_size > 0 and self._supports_prefix_cache())
         self._prefix_lru: OrderedDict[tuple, PrefixEntry] = OrderedDict()
+        # Locality-creating probe scheduling (serving/locality.py): window
+        # jobs are region-clustered with per-group suffix windows, capped
+        # at the LRU capacity, and ordered cold-first/warm-last.  False
+        # restores the reactive PR 2 scheme (one class-global window job)
+        # — the benchmarks' baseline.  Either way results are bit-identical
+        # to monolithic prefill; only serving stats move.
+        self.locality = locality
         # Block-paged KV pool + continuous-batching decode (same arch gate as
         # the prefix cache: the pool holds full-attention KV, and chunked
         # prefill must be a pure per-row function); pool_blocks=0 disables
@@ -248,8 +256,10 @@ class ServeEngine:
                 f"lockstep decode, so the kernel would never execute")
         if self.paged_enabled:
             # the arena is the whole serve memory: donate it through the
-            # step so backends that support aliasing update in place
-            donate = (1,) if jax.default_backend() != "cpu" else ()
+            # step so the backend aliases it in place — on every backend,
+            # including CPU (XLA:CPU honors the aliasing; the previous
+            # CPU carve-out paid a full arena copy per decode step)
+            donate = (1,)
             self._decode_paged = jax.jit(
                 partial(lm.decode_step_paged, block_size=block_size),
                 donate_argnums=donate)
@@ -387,25 +397,36 @@ class ServeEngine:
             for _i, pids, sids in rows:
                 key = self._region_key(pids, sids, cls)
                 counts[key] = counts.get(key, 0) + 1
-            selected, lw = [], 0
+            selected = []
             for i, pids, sids in rows:
                 key = self._region_key(pids, sids, cls)
                 if key in self._prefix_lru or counts[key] >= 2:
-                    selected.append((i, key))
-                    lw = max(lw, len(sids))
+                    selected.append((i, key, len(sids)))
                 else:
                     plain.setdefault(cls, []).append(i)
             if not selected:
                 continue
-            # uniform per-class window: bucket the suffix span so a handful
-            # of compiled (rows, lw) shapes serve every round; rows shorter
-            # than lw recompute a few of their own prefix-tail tokens, which
-            # is bit-identical (causal KV slicing is exact at any split)
-            lw = _next_pow2(max(lw, 8)) if self.bucket_shapes else lw
-            if lw >= cls:                          # no cached span left
-                plain.setdefault(cls, []).extend(i for i, _ in selected)
-                continue
-            window_jobs.append((cls, lw, selected))
+            if self.locality:
+                # GGR pass (serving/locality.py): region-clustered jobs
+                # with per-group suffix windows, <= prefix_cache_size
+                # regions per job, cold jobs before warm jobs
+                jobs = plan_window_jobs(selected,
+                                        lru_keys=self._prefix_lru.keys(),
+                                        cache_size=self.prefix_cache_size,
+                                        bucket=self.bucket_shapes)
+            else:
+                # reactive baseline: one class-global window sized by the
+                # round's worst row; rows shorter than lw recompute a few
+                # of their own prefix-tail tokens, which is bit-identical
+                # (causal KV slicing is exact at any split)
+                lw = max(s for _, _, s in selected)
+                lw = _next_pow2(max(lw, 8)) if self.bucket_shapes else lw
+                jobs = [(lw, [(i, key) for i, key, _ in selected])]
+            for lw, sel in jobs:
+                if lw >= cls:                      # no cached span left
+                    plain.setdefault(cls, []).extend(i for i, _ in sel)
+                    continue
+                window_jobs.append((cls, lw, sel))
 
         def chunked(idx):
             # max_batch None here means the engine was built with

@@ -149,6 +149,8 @@ class BatchScheduler:
         self.completed: dict[int, Request] = {}
         self.probe_results: dict[int, np.ndarray] = {}
         self.probes_deduped = 0    # duplicate prompts served by fan-out
+        self.fills_serviced = 0    # PrefixFill work items serviced
+        self.regions_prefetched = 0   # prefix regions ensured resident
         self.steps = 0             # unified steps taken (decode or probe-only)
         self._rid_of_engine: dict[int, Request] = {}
         # outputs finished by step() and not yet claimed by a driver
@@ -396,4 +398,5 @@ class BatchScheduler:
         self.work = [w for w in self.work if not isinstance(w, PrefixFill)]
         prompts = [p for f in fills for p in f.prompts]
         if prompts:
-            self.engine.prefetch_prefixes(prompts)
+            self.fills_serviced += len(fills)
+            self.regions_prefetched += self.engine.prefetch_prefixes(prompts)

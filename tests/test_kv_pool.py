@@ -45,6 +45,36 @@ def test_exhaustion_raises_and_leaves_state_clean(pool):
     assert pool.free_blocks == 16
 
 
+def test_lease_success_counts_and_returns(pool):
+    ids = pool.lease(6)
+    assert ids is not None and len(ids) == 6
+    assert pool.total_leased == 6 and pool.lease_shortfalls == 0
+    assert pool.blocks_in_use == 6
+    pool.decref(ids)                             # a lease is a normal run
+    assert pool.blocks_in_use == 0 and pool.free_blocks == 16
+
+
+def test_lease_shortfall_takes_nothing_and_never_raises(pool):
+    held = pool.alloc(12)
+    got = pool.lease(7)                          # only 4 free
+    assert got is None
+    assert pool.lease_shortfalls == 1 and pool.total_leased == 0
+    assert pool.free_blocks == 4                 # shortfall took nothing
+    # the pool stays fully usable after a shortfall
+    ok = pool.lease(4)
+    assert ok is not None and pool.free_blocks == 0
+    pool.decref(ok)
+    pool.decref(held)
+    assert pool.free_blocks == 16 and pool.blocks_in_use == 0
+
+
+def test_lease_shortfalls_accumulate(pool):
+    pool.alloc(16)
+    for i in range(3):
+        assert pool.lease(1) is None
+    assert pool.lease_shortfalls == 3
+
+
 def test_blocks_for(pool):
     assert pool.blocks_for(0) == 0
     assert pool.blocks_for(1) == 1

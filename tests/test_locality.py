@@ -1,0 +1,310 @@
+"""Locality scheduling (serving/locality.py), prefetch pipelining, and the
+cross-query SemanticMemo.
+
+Fast sections are pure-Python (no model forwards): the GGR window-job
+planner, prefetch candidate selection over a stub engine, memo key/ledger
+mechanics.  The slow section drives the real reduced model: locality
+on/off bit-identity, prefetch hit-rate gains, memo'd llm_order_by_many
+reconciliation, and probe-lease shortfall degradation.
+"""
+import numpy as np
+import pytest
+
+from repro.core.oracles.cache import SemanticMemo, canon_criteria, stable_key
+from repro.serving.locality import (_next_pow2, group_rows_by_region,
+                                    group_window, plan_window_jobs,
+                                    prefetch_candidates)
+
+K_A, K_B, K_C = ("a", 0), ("b", 0), ("c", 0)   # stand-in region keys
+
+
+# ------------------------------------------------- GGR planner (fast)
+def test_group_rows_by_region_first_appearance_order():
+    sel = [(0, K_B, 5), (1, K_A, 9), (2, K_B, 7), (3, K_A, 3)]
+    groups = group_rows_by_region(sel)
+    assert [k for k, _ in groups] == [K_B, K_A]
+    assert groups[0][1] == [(0, 5), (2, 7)]
+    assert groups[1][1] == [(1, 9), (3, 3)]
+
+
+def test_group_window_buckets_and_exact():
+    assert group_window([(0, 3)], bucket=True) == 8       # floor
+    assert group_window([(0, 9), (1, 30)], bucket=True) == 32
+    assert group_window([(0, 9), (1, 30)], bucket=False) == 30
+
+
+def test_plan_window_jobs_per_group_windows():
+    """Groups with different suffix spans get DIFFERENT windows instead of
+    one class-global worst-case window."""
+    sel = [(0, K_A, 6), (1, K_A, 7), (2, K_B, 60), (3, K_B, 50)]
+    jobs = plan_window_jobs(sel, lru_keys=(), cache_size=64)
+    assert sorted(w for w, _ in jobs) == [8, 64]
+    by_w = {w: rows for w, rows in jobs}
+    assert [i for i, _ in by_w[8]] == [0, 1]
+    assert [i for i, _ in by_w[64]] == [2, 3]
+
+
+def test_plan_window_jobs_merges_equal_windows_capped():
+    """Equal-window groups merge into one job until the distinct-region cap
+    (the LRU capacity) splits them — a job can never thrash the LRU."""
+    sel = [(i, (f"r{i}", 0), 10) for i in range(5)]       # 5 regions, w=16
+    merged = plan_window_jobs(sel, lru_keys=(), cache_size=64)
+    assert len(merged) == 1 and len(merged[0][1]) == 5
+    capped = plan_window_jobs(sel, lru_keys=(), cache_size=2)
+    assert [len(rows) for _, rows in capped] == [2, 2, 1]
+    # cap floor: cache_size=0 still makes progress one region at a time
+    floor = plan_window_jobs(sel, lru_keys=(), cache_size=0)
+    assert [len(rows) for _, rows in floor] == [1] * 5
+
+
+def test_plan_window_jobs_cold_first_warm_last():
+    sel = [(0, K_A, 6), (1, K_B, 6), (2, K_C, 60)]
+    jobs = plan_window_jobs(sel, lru_keys={K_A}, cache_size=1)
+    # K_A's job is warm (LRU-resident) -> runs last; cold jobs keep their
+    # window-sorted order
+    assert [i for _, rows in jobs for i, _ in rows] == [1, 2, 0]
+    assert jobs[-1][1] == [(0, K_A)]
+
+
+def test_plan_window_jobs_identity_fan_back():
+    """Every selected row appears in exactly one job with its own key —
+    the engine fans results back by row id, so coverage == identity."""
+    rng = np.random.default_rng(0)
+    sel = [(i, (f"r{rng.integers(6)}", 0), int(rng.integers(1, 100)))
+           for i in range(40)]
+    jobs = plan_window_jobs(sel, lru_keys={("r0", 0)}, cache_size=3)
+    flat = [(i, k) for _, rows in jobs for i, k in rows]
+    assert sorted(i for i, _ in flat) == list(range(40))
+    assert dict(flat) == {i: k for i, k, _ in sel}
+    for w, rows in jobs:
+        slen = {i: s for i, _, s in sel}
+        assert all(slen[i] <= w for i, _ in rows)
+
+
+# ------------------------------------- prefetch candidates (fast, stub)
+class _StubTok:
+    def encode(self, text, bos=True):
+        return [ord(c) for c in text]
+
+
+class _StubEngine:
+    """The attribute surface prefetch_candidates touches, no model."""
+    prefix_cache_enabled = True
+    tok = _StubTok()
+
+    def __init__(self, lru=()):
+        self._prefix_lru = dict.fromkeys(lru)
+
+    def _parts(self, p):
+        return p if isinstance(p, tuple) else (None, p)
+
+    def _pad_class(self, n):
+        return _next_pow2(max(n, 8))
+
+    def _region_key(self, pids, sids, cls):
+        return (pids, cls - len(pids) - len(sids))
+
+
+def test_prefetch_candidates_requires_two_unique_sharers():
+    eng = _StubEngine()
+    # region "pp" shared by two distinct prompts -> candidate; "qq" is a
+    # singleton -> warming it would flip the engine's routing policy
+    got = prefetch_candidates(eng, [("pp", "a"), ("pp", "b"), ("qq", "c")])
+    assert got == [("pp", "a")]                  # one representative
+
+
+def test_prefetch_candidates_dedups_identical_prompts():
+    """The scheduler dedups identical prompts before submission, so two
+    copies of ONE prompt must not count as region sharing."""
+    eng = _StubEngine()
+    assert prefetch_candidates(eng, [("pp", "a"), ("pp", "a")]) == []
+
+
+def test_prefetch_candidates_skips_resident_and_plain():
+    pids = tuple(_StubTok().encode("pp"))
+    key = (pids, 8 - len(pids) - 1)              # cls 8, 1-token suffix
+    eng = _StubEngine(lru=[key])
+    prompts = [("pp", "a"), ("pp", "b"), "plain prompt"]
+    assert prefetch_candidates(eng, prompts) == []   # resident -> no fill
+    assert prefetch_candidates(_StubEngine(), prompts) == [("pp", "a")]
+
+
+def test_prefetch_candidates_disabled_engine():
+    eng = _StubEngine()
+    eng.prefix_cache_enabled = False
+    assert prefetch_candidates(eng, [("pp", "a"), ("pp", "b")]) == []
+
+
+# ----------------------------------------------- SemanticMemo (fast)
+def _k(uid):
+    from repro.core import Key
+    return Key(uid=uid, text=f"doc {uid}", latent=float(uid))
+
+
+def test_memo_key_canonicalizes_criteria_and_direction():
+    m = SemanticMemo()
+    k1 = m.key("compare", (_k(1), _k(2)), "degree  of\npositivity")
+    k2 = m.key("compare", (_k(1), _k(2)), " degree of positivity ")
+    assert k1 == k2
+    assert m.key("compare", (_k(2), _k(1)), "degree of positivity") != k1
+    assert m.key("score_each", _k(1), "x") != m.key("inquire", _k(1), "x")
+
+
+def test_memo_first_put_wins():
+    m = SemanticMemo()
+    k = m.key("score_each", _k(7), "c")
+    m.put(k, 0.25, "rec1")
+    m.put(k, 0.99, "rec2")                       # late duplicate ignored
+    assert m.get(k) == (0.25, "rec1") and len(m) == 1
+
+
+def test_reconciled_records_interleaving():
+    """Hit shadows logged at ledger positions re-interleave into the solo
+    record order: billed [m1, m3] + hits {0: h0, 1: h2, 2: h4} ->
+    [h0, m1, h2, m3, h4]."""
+    from repro.core.oracles.model_oracle import ModelOracle
+    o = ModelOracle(engine=None)
+    o.memo = SemanticMemo()
+    o.memo_hit_log.append((0, "h0"))
+    o.ledger.charge("compare", 10, 1, n_keys=2, tag="m1")
+    o.memo_hit_log.append((1, "h2"))
+    o.ledger.charge("compare", 10, 1, n_keys=2, tag="m3")
+    o.memo_hit_log.append((2, "h4"))
+    recs = o.reconciled_records()
+    assert [r if isinstance(r, str) else r.tag for r in recs] == \
+        ["h0", "m1", "h2", "m3", "h4"]
+
+
+def test_canon_and_stable_key_helpers():
+    assert canon_criteria("  a\t b\n c ") == "a b c"
+    assert stable_key("compare", (1, 2), "c") == \
+        stable_key("compare", (1, 2), "c")
+    assert stable_key("compare", (1, 2), "c") != \
+        stable_key("compare", (1, 2), "d")
+
+
+# ------------------------------------------------ real engine (slow)
+@pytest.fixture(scope="module")
+def lm_params():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm_params, **kw):
+    from repro.serving import ServeEngine
+    lm, params = lm_params
+    return ServeEngine(lm, params, max_new_tokens=8, **kw)
+
+
+def _keys(n, seed=3):
+    from repro.core import as_keys
+    return as_keys([f"doc {'x' * (3 * (i % 7))} {i:02d}" for i in range(n)],
+                   list(np.random.default_rng(seed).standard_normal(n)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("path", ["quick", "ext_merge", "pointwise"])
+def test_locality_reorder_is_bit_identical(lm_params, path):
+    """GGR window jobs are serving-side only: order and ledger match the
+    locality=False engine byte-for-byte; only ServeStats move."""
+    from repro.core import PathParams, llm_order_by
+    from repro.core.oracles.model_oracle import ModelOracle
+    keys = _keys(12)
+    out = {}
+    for loc in (False, True):
+        eng = _engine(lm_params, locality=loc)
+        oracle = ModelOracle(eng)
+        res, _ = llm_order_by(keys, "relevance", oracle, path=path,
+                              params=PathParams(batch_size=4))
+        out[loc] = (res.uids(), list(oracle.ledger.records))
+    assert out[True] == out[False]
+
+
+@pytest.mark.slow
+def test_prefetch_pipelining_raises_hit_rate(lm_params):
+    """Executor prefetch warms next-round regions through the scheduler's
+    fill queue: strictly more prefix hits, identical order and ledger."""
+    from repro.core import PathParams, ProbePlanExecutor, make_path
+    from repro.core.executor import plan_sort_result
+    from repro.core.oracles.model_oracle import ModelOracle
+    from repro.core.types import SortSpec
+    from repro.serving import BatchScheduler
+    keys, spec = _keys(24), SortSpec("relevance", True, None)
+    out = {}
+    for pf in (False, True):
+        eng = _engine(lm_params)
+        sched = BatchScheduler(eng)
+        oracle = ModelOracle(eng)
+        ex = ProbePlanExecutor(scheduler=sched, prefetch=pf)
+        run = ex.submit_path(make_path("quick", PathParams(batch_size=4)),
+                             keys, oracle, spec)
+        ex.run()
+        res = plan_sort_result(run, spec, len(keys), oracle.prices)
+        out[pf] = dict(order=res.uids(), recs=list(oracle.ledger.records),
+                       hits=eng.stats.prefix_hits, fills=sched.fills_serviced,
+                       prefetches=ex.prefetches)
+    assert out[True]["order"] == out[False]["order"]
+    assert out[True]["recs"] == out[False]["recs"]
+    assert out[True]["prefetches"] > 0 and out[True]["fills"] > 0
+    assert out[True]["hits"] > out[False]["hits"]
+
+
+@pytest.mark.slow
+def test_memo_wave2_reconciles_to_solo(lm_params):
+    """A second llm_order_by_many wave sharing the memo: identical orders,
+    reconciled ledgers byte-identical to solo, fewer backend probe rows."""
+    from repro.core import PathParams, llm_order_by_many, make_path
+    from repro.core.operator import OrderQuery
+    from repro.core.oracles.model_oracle import ModelOracle
+    from repro.core.types import SortSpec
+    keys = _keys(10)
+
+    def queries(eng):
+        return [OrderQuery(keys, "relevance", ModelOracle(eng), path="quick",
+                           params=PathParams(batch_size=4)),
+                OrderQuery(keys, "relevance", ModelOracle(eng), path="quick",
+                           params=PathParams(batch_size=4), descending=True)]
+
+    eng = _engine(lm_params)
+    solo = []
+    for q in queries(eng):
+        spec = SortSpec(q.criteria, q.descending, q.limit)
+        o = ModelOracle(eng)
+        res = make_path(q.path, q.params).execute(q.keys, o, spec)
+        solo.append((res.uids(), list(o.ledger.records)))
+
+    memo = SemanticMemo()
+    llm_order_by_many(queries(eng), semantic_memo=memo)
+    rows_after_w1 = eng.stats.probe_rows
+    qs2 = queries(eng)
+    results2 = llm_order_by_many(qs2, semantic_memo=memo)
+    assert memo.hits > 0
+    assert eng.stats.probe_rows - rows_after_w1 < rows_after_w1
+    for (r, q, s) in zip(results2, qs2, solo):
+        assert r.uids() == s[0]
+        assert q.oracle.reconciled_records() == s[1]
+        assert (len(q.oracle.ledger.records) + len(q.oracle.memo_hit_log)
+                == len(s[1]))
+
+
+@pytest.mark.slow
+def test_probe_lease_shortfall_degrades_not_breaks(lm_params):
+    """A pool too small to lease probe blocks: shortfall counters move,
+    logits stay bit-identical to a roomy engine, zero block leaks."""
+    import jax.numpy as jnp
+    big = _engine(lm_params, pool_blocks=768)
+    tiny = _engine(lm_params, pool_blocks=8)
+    prompts = [f"Rate \"doc {'y' * i}\" for relevance (0-9):"
+               for i in range(6)]
+    free0 = tiny.pool.free_blocks
+    lb = big.submit_probes(prompts)
+    lt = tiny.submit_probes(prompts)
+    assert tiny.stats.probe_lease_shortfalls > 0
+    assert tiny.pool.lease_shortfalls > 0
+    assert big.stats.probe_lease_shortfalls == 0
+    assert (jnp.asarray(lb) == jnp.asarray(lt)).all()
+    assert tiny.pool.free_blocks == free0           # nothing leaked

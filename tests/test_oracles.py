@@ -84,6 +84,40 @@ def test_cache_hits_are_free():
     assert o.hits == 1 and o.misses == 1
 
 
+def test_cache_key_canonicalizes_criteria_whitespace():
+    """Regression (ISSUE 6 satellite): memo keys normalize criteria
+    whitespace, so logically identical calls spelled with different
+    spacing/newlines hit one entry instead of re-billing."""
+    keys = mk(4)
+    o = CachingOracle(SimulatedOracle(REASONING))
+    v1 = o.score_batch(keys, "degree  of\n positivity")
+    calls = o.ledger.n_calls
+    v2 = o.score_batch(keys, " degree of positivity ")
+    assert v1 == v2
+    assert o.ledger.n_calls == calls             # second spelling was free
+    assert o.hits == 1 and o.misses == 1
+    # compare + inquire variants share the same canonicalization
+    a, b = keys[0], keys[1]
+    r1 = o.compare(a, b, "x\ty")
+    r2 = o.compare(a, b, "x y")
+    assert r1 == r2 and o.hits == 2
+    assert o.inquire(a, "c  c") == o.inquire(a, "c c")
+    assert o.hits == 3
+    # distinct criteria stay distinct entries
+    o.score_batch(keys, "different criteria")
+    assert o.misses == 4
+
+
+def test_cache_key_stable_hash_no_collisions_on_structure():
+    """The stable key separates kind / uid tuple / criteria structurally:
+    permuted uids or a different verb never alias one entry."""
+    from repro.core.oracles.cache import CachingOracle as C
+    assert C._ck("score", (1, 2), "c") == C._ck("score", iter((1, 2)), "c")
+    assert C._ck("score", (1, 2), "c") != C._ck("score", (2, 1), "c")
+    assert C._ck("score", (1, 2), "c") != C._ck("rank", (1, 2), "c")
+    assert C._ck("score", (12,), "c") != C._ck("score", (1, 2), "c")
+
+
 def test_exact_oracle_judge_picks_true_best():
     keys = mk(10, seed=4)
     best = sorted(keys, key=lambda k: k.latent)
