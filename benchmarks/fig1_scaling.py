@@ -3,7 +3,6 @@ dataset (NBA-heights-like) and a reasoning dataset (DL19-like), plus the
 log-linear test-time-scaling fit (accuracy ~ a + b*log10(cost))."""
 from __future__ import annotations
 
-import math
 
 import numpy as np
 

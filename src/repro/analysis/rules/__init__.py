@@ -1,0 +1,25 @@
+"""Rule registry: one instance per invariant, in catalog order.
+
+Adding a rule = write the module, instantiate it here, document it in the
+DESIGN.md "Static analysis" catalog, and add a good/bad fixture pair to
+tests/test_analysis.py (the bad snippet must fail if the rule is removed).
+"""
+from .determinism import DeterminismRule
+from .jit import JitPurityRule
+from .kv import KVPairingRule
+from .ledger import LedgerDisciplineRule
+from .regionkey import RegionKeyRule
+from .unused import UnusedNameRule
+
+ALL_RULES = (
+    KVPairingRule(),
+    LedgerDisciplineRule(),
+    JitPurityRule(),
+    RegionKeyRule(),
+    DeterminismRule(),
+    UnusedNameRule(),
+)
+
+__all__ = ["ALL_RULES", "KVPairingRule", "LedgerDisciplineRule",
+           "JitPurityRule", "RegionKeyRule", "DeterminismRule",
+           "UnusedNameRule"]

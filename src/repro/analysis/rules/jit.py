@@ -1,0 +1,188 @@
+"""jit-purity: no host-side impurity or traced-value branching under trace.
+
+Functions handed to ``jax.jit`` / ``pl.pallas_call`` / ``shard_map`` run
+once at trace time; impure calls (``time.*``, stdlib ``random``,
+``datetime.now``, ``print``, ``np.random``) execute at trace time only and
+silently freeze into the compiled graph, while ``.item()`` forces a host
+sync that defeats async dispatch.  A Python ``if`` on a name bound from a
+``jnp`` op is a trace-time error (ConcretizationTypeError) at best and a
+shape-dependent miscompile at worst — the rule flags it statically so the
+mistake never reaches a device.
+
+Resolution is same-module and syntactic: decorator forms ``@jax.jit``,
+``@partial(jax.jit, ...)`` (including aliased ``@_partial(_shard_map, ...)``
+as in models/moe.py), and call forms ``jit(f)`` / ``pl.pallas_call(k, ...)``
+where ``f`` is a local ``def``/``lambda`` or ``partial`` thereof.  Callees
+we cannot resolve (bound methods like ``lm.prefill``) are skipped — a
+documented limitation, not a pass.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from ..astutil import dotted_name, last_segment
+from ..framework import Finding, ModuleSource, Rule
+
+WRAPPERS = frozenset({"jit", "pallas_call", "shard_map"})
+BANNED_BARE = frozenset({"print", "input", "breakpoint"})
+DATETIME_NOW = frozenset({"now", "utcnow", "today"})
+
+
+class JitPurityRule(Rule):
+    id = "jit-purity"
+    summary = ("bodies traced by jax.jit/pallas_call/shard_map must not call "
+               "time/random/datetime.now/print/.item(), nor branch with "
+               "Python if on names bound from jnp ops")
+
+    def check(self, mod: ModuleSource) -> Iterable[Finding]:
+        defs = _local_defs(mod.tree)
+        seen = set()
+        targets = []
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_wrapper_decorator(d) for d in node.decorator_list):
+                    targets.append(node)
+            elif isinstance(node, ast.Call) and _is_wrapper(node.func) \
+                    and node.args:
+                fn = _resolve(node.args[0], defs)
+                if fn is not None:
+                    targets.append(fn)
+
+        for fn in targets:
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            yield from self._check_body(mod, fn)
+
+    def _check_body(self, mod: ModuleSource, fn) -> Iterable[Finding]:
+        label = getattr(fn, "name", "<lambda>")
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                msg = _impure_call(node)
+                if msg:
+                    yield self.finding(
+                        mod, node,
+                        f"{msg} inside traced body '{label}' — runs once at "
+                        f"trace time / forces host sync")
+        traced = _jnp_bound_names(fn)
+        if not traced:
+            return
+        for node in ast.walk(fn):
+            test = None
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                test = node.test
+            if test is None:
+                continue
+            hit = _traced_operand(test, traced)
+            if hit:
+                yield self.finding(
+                    mod, node,
+                    f"Python branch on '{hit}' (bound from a jnp op) inside "
+                    f"traced body '{label}' — use jnp.where/lax.cond")
+
+
+# --------------------------------------------------------------- matching
+
+def _is_wrapper(expr: ast.expr) -> bool:
+    name = dotted_name(expr)
+    return name is not None and last_segment(name).lstrip("_") in WRAPPERS
+
+
+def _is_wrapper_decorator(dec: ast.expr) -> bool:
+    if _is_wrapper(dec):                      # @jax.jit
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_wrapper(dec.func):             # @jax.jit(...)
+            return True
+        name = dotted_name(dec.func)          # @partial(jax.jit, ...)
+        if name and last_segment(name).lstrip("_") == "partial" \
+                and dec.args and _is_wrapper(dec.args[0]):
+            return True
+    return False
+
+
+def _local_defs(tree: ast.AST) -> dict:
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    defs[t.id] = node.value
+    return defs
+
+
+def _resolve(expr: ast.expr, defs: dict):
+    if isinstance(expr, ast.Lambda):
+        return expr
+    if isinstance(expr, ast.Name):
+        return defs.get(expr.id)
+    if isinstance(expr, ast.Call):            # jit(partial(f, ...))
+        name = dotted_name(expr.func)
+        if name and last_segment(name).lstrip("_") == "partial" and expr.args:
+            return _resolve(expr.args[0], defs)
+    return None
+
+
+def _impure_call(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name) and call.func.id in BANNED_BARE:
+        return f"impure call {call.func.id}()"
+    name = dotted_name(call.func)
+    if name:
+        parts = name.split(".")
+        if parts[0] == "time" and len(parts) > 1:
+            return f"impure call {name}()"
+        if parts[0] == "datetime" and parts[-1] in DATETIME_NOW:
+            return f"impure call {name}()"
+        if parts[0] == "random" and len(parts) > 1:
+            return f"nondeterministic call {name}()"
+        if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+                and parts[1] == "random":
+            return f"nondeterministic call {name}()"
+    if isinstance(call.func, ast.Attribute) and call.func.attr == "item" \
+            and not call.args:
+        return "device sync .item()"
+    return None
+
+
+def _jnp_bound_names(fn) -> frozenset:
+    traced = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not isinstance(node.value, ast.Call):
+            continue
+        name = dotted_name(node.value.func)
+        if not name:
+            continue
+        if name.split(".")[0] == "jnp" or name.startswith("jax.numpy."):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    traced.add(t.id)
+                elif isinstance(t, ast.Tuple):
+                    traced.update(e.id for e in t.elts
+                                  if isinstance(e, ast.Name))
+    return frozenset(traced)
+
+
+def _traced_operand(test: ast.expr, traced: frozenset) -> Optional[str]:
+    """Direct traced-name operands only: x.ndim / len(x) are trace-static."""
+    if isinstance(test, ast.Name):
+        return test.id if test.id in traced else None
+    if isinstance(test, ast.Compare):
+        for operand in [test.left, *test.comparators]:
+            if isinstance(operand, ast.Name) and operand.id in traced:
+                return operand.id
+        return None
+    if isinstance(test, ast.BoolOp):
+        for v in test.values:
+            hit = _traced_operand(v, traced)
+            if hit:
+                return hit
+        return None
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _traced_operand(test.operand, traced)
+    return None

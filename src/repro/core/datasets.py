@@ -15,7 +15,7 @@ Text lengths matter: they drive token billing and judge context degradation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

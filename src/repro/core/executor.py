@@ -43,7 +43,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 from .oracles.base import CallRecord, LedgerView
-from .types import InvalidOutputError, Key, SortResult, SortSpec
+from .types import InvalidOutputError, SortResult, SortSpec
 
 
 # --------------------------------------------------------------- probe sets
@@ -326,12 +326,26 @@ class ProbePlanExecutor:
             # submissions (identical prompts deduped across plans), and any
             # in-flight decode rows — a judge rationale generation, another
             # driver's rows — advance one token in the same step instead of
-            # the tick waiting behind their drain
-            self.scheduler.pump()
-            for run, ps, token in deferred:
-                raw = run.ordering.oracle.finish_probe_round(
-                    token, self.scheduler)
-                ready.append((run, _fold_raw(run.ordering, ps, raw)))
+            # the tick waiting behind their drain.  begin_probe_round has
+            # already billed and enqueued every round, so each token MUST be
+            # finished even when the pump or an earlier fold raises: the
+            # finally drain collects abandoned rounds so no billed probes
+            # stay queued in the scheduler behind a propagating error
+            pending = list(deferred)
+            try:
+                self.scheduler.pump()
+                while pending:
+                    run, ps, token = pending.pop(0)
+                    raw = run.ordering.oracle.finish_probe_round(
+                        token, self.scheduler)
+                    ready.append((run, _fold_raw(run.ordering, ps, raw)))
+            finally:
+                for run, _ps, token in pending:
+                    try:
+                        run.ordering.oracle.finish_probe_round(
+                            token, self.scheduler)
+                    except Exception:
+                        pass  # best-effort drain on the error path
         for run, value in ready:
             run._advance(value)
         if self.prefetch:

@@ -8,7 +8,7 @@ Table-2 benchmark validates it against true execution cost.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from ..access_paths.base import PathParams, _REGISTRY

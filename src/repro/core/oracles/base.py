@@ -16,7 +16,7 @@ call-count and dollar accounting is exact and identical across backends.
 from __future__ import annotations
 
 import abc
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import NamedTuple, Optional, Sequence
 
 from ..types import InvalidOutputError, Key

@@ -18,7 +18,7 @@ Plan knobs (the hillclimbing levers):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -11,7 +11,6 @@ import os
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .borda_count import borda_count as _borda

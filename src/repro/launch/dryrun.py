@@ -19,8 +19,7 @@ from repro.launch.mesh import make_production_mesh                  # noqa: E402
 from repro.launch.roofline import (collective_bytes_by_kind,        # noqa: E402
                                    roofline_terms)
 from repro.launch.specs import (batch_specs_for, cache_specs_for,   # noqa: E402
-                                cell_applicable, decode_token_spec,
-                                input_specs)
+                                cell_applicable, decode_token_spec)
 from repro.models.config import SHAPES                              # noqa: E402
 from repro.models.model import LM                                   # noqa: E402
 from repro.training.optimizer import OptimConfig, apply_updates     # noqa: E402

@@ -14,7 +14,6 @@ unchanged — cost-based access-path selection end-to-end on our own pods.
 from __future__ import annotations
 
 import json
-from typing import Optional
 
 from ..core.oracles.base import PriceSheet
 from ..models.config import SHAPES

@@ -8,13 +8,12 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_reduced, list_archs
-from repro.core import PathParams, as_keys, llm_order_by
+from repro.core import as_keys, llm_order_by
 from repro.core.oracles.model_oracle import ModelOracle
 from repro.models import LM
-from repro.serving import BatchScheduler, ServeEngine
+from repro.serving import ServeEngine
 
 
 def main() -> None:

@@ -13,9 +13,6 @@ import jax
 
 from repro.configs import get_config, get_reduced, list_archs
 from repro.data import DataConfig, DataPipeline
-from repro.distributed import (ShardingPlan, batch_specs, named, param_specs,
-                               zero1_specs)
-from repro.launch.mesh import make_local_mesh
 from repro.models import LM
 from repro.training import OptimConfig, TrainConfig, Trainer
 

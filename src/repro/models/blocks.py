@@ -14,8 +14,7 @@ scalar decode position.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +24,11 @@ from .layers import (KVCache, PagedKV, apply_rope, causal_mask, dense_init,
                      dtype_of, f32, full_mask, gqa_attention,
                      paged_decode_attention_dense, rms_norm, swiglu)
 from .moe import init_moe_params, moe_ffn
-from .ssm import (SSMState, init_ssm_params, init_ssm_state, ssm_prefill_state,
+from .ssm import (init_ssm_params, init_ssm_state, ssm_prefill_state,
                   ssm_sequence, ssm_step)
-from .xlstm import (MLSTMState, SLSTMState, init_mlstm_params,
-                    init_mlstm_state, init_slstm_params, init_slstm_state,
-                    mlstm_sequence, mlstm_step, slstm_sequence, slstm_step)
+from .xlstm import (init_mlstm_params, init_mlstm_state, init_slstm_params,
+                    init_slstm_state, mlstm_sequence, mlstm_step,
+                    slstm_sequence, slstm_step)
 
 WINDOWED = {"swa", "moe_swa", "hymba_l"}
 HAS_FFN = {"attn", "swa", "moe", "moe_swa", "hymba_g", "hymba_l", "enc", "xdec"}

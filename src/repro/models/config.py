@@ -20,9 +20,8 @@ Block kinds:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional
 
 FULL_ATTN_KINDS = ("attn", "moe", "enc", "xdec", "hymba_g")
 CACHED_KINDS = ("attn", "swa", "moe", "moe_swa", "hymba_g", "hymba_l",

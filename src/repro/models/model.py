@@ -20,14 +20,13 @@ Cross-entropy is computed in sequence chunks (never materializing the full
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .blocks import apply_stack, init_block_cache, init_stack
-from .config import ModelConfig, InputShape
+from .config import ModelConfig
 from .layers import dtype_of, f32, rms_norm, rope_angles
 
 LOSS_CHUNK = 128

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..data.tokenizer import BOS, EOS, PAD, ByteTokenizer
+from ..data.tokenizer import EOS, PAD, ByteTokenizer
 from ..models.model import LM
 from .kv_pool import KVBlockPool, PoolExhausted
 from .locality import plan_window_jobs
@@ -485,7 +485,9 @@ class ServeEngine:
         a probe storm must never block on its own accounting."""
         if self.pool is None:
             return None
-        ids = self.pool.lease(rows * self.pool.blocks_for(cls))
+        # ownership transfers to the caller, which releases via
+        # _release_lease in its own try/finally
+        ids = self.pool.lease(rows * self.pool.blocks_for(cls))  # lint: disable=kv-pairing
         if ids is None:
             self.stats.probe_lease_shortfalls += 1
         else:
@@ -518,8 +520,10 @@ class ServeEngine:
         ensured = 0
         for cls in sorted(by_cls):
             entries, pins = self._fill_prefix_entries(cls, by_cls[cls])
-            self._release_pins(pins)
-            ensured += len(entries)
+            try:
+                ensured += len(entries)
+            finally:
+                self._release_pins(pins)
         return ensured
 
     def _fill_prefix_entries(self, cls: int, keys: set) -> tuple[dict, list]:
@@ -541,7 +545,9 @@ class ServeEngine:
 
         def pin(entry: PrefixEntry) -> None:
             if entry.blocks is not None:
-                self.pool.incref(entry.blocks)
+                # ownership transfers to the caller via the returned pin
+                # list (released with _release_pins in a try/finally there)
+                self.pool.incref(entry.blocks)  # lint: disable=kv-pairing
                 pins.append(entry.blocks)
 
         by_len: dict[int, list[tuple]] = {}
@@ -919,10 +925,10 @@ class ServeEngine:
         for (cls, key), group in sorted(shared.items(),
                                         key=lambda kv: kv[0][0]):
             entries, pins = self._fill_prefix_entries(cls, {key})
-            entry = entries[key]
-            n_shared = (0 if entry.blocks is None
-                        else entry.length // self.pool.block_size)
             try:
+                entry = entries[key]
+                n_shared = (0 if entry.blocks is None
+                            else entry.length // self.pool.block_size)
                 if n_shared == 0:
                     # region shorter than a block (or dense fallback):
                     # nothing to append onto — admit monolithically.  Unpin
@@ -968,7 +974,9 @@ class ServeEngine:
         try:
             for nb in counts:
                 if incref_run is not None:
-                    self.pool.incref(incref_run)
+                    # released by the except-PoolExhausted rollback below;
+                    # on success ownership lives in the returned row runs
+                    self.pool.incref(incref_run)  # lint: disable=kv-pairing
                 while (self.pool.free_blocks < nb and self._prefix_lru):
                     self._evict_one_prefix()
                 runs.append(self.pool.alloc(nb))

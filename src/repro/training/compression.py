@@ -18,7 +18,6 @@ Two entry points:
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

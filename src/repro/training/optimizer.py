@@ -7,7 +7,6 @@ function of the (traced) step so the whole update stays inside one jit.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

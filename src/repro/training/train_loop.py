@@ -8,13 +8,11 @@ this code — the mesh only changes the shardings passed to jit.
 """
 from __future__ import annotations
 
-import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models.model import LM
 from . import checkpoint as ckpt

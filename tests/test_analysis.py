@@ -1,0 +1,440 @@
+"""Invariant-linter tests: every rule gets a paired good/bad fixture
+(the bad snippet MUST produce exactly that rule's finding — deleting a
+rule from the registry fails these — and the good snippet MUST stay
+silent), plus framework-level suppression, baseline round-trip, CLI exit
+codes, and the merged-tree-is-clean gate CI relies on."""
+import json
+import textwrap
+from pathlib import Path
+
+from repro.analysis import (ALL_RULES, check_source, load_baseline,
+                            run_paths, split_new, write_baseline)
+from repro.analysis.__main__ import main as lint_main
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def lint(src, relpath="src/repro/fixture.py"):
+    return check_source(textwrap.dedent(src), relpath)
+
+
+def rules_hit(src, relpath="src/repro/fixture.py"):
+    return {f.rule for f in lint(src, relpath)}
+
+
+# ------------------------------------------------------------- registry
+def test_registry_covers_documented_rules():
+    ids = {r.id for r in ALL_RULES}
+    assert ids == {"kv-pairing", "ledger-discipline", "jit-purity",
+                   "region-key-unification", "determinism", "unused-name"}
+    assert all(r.summary for r in ALL_RULES)
+
+
+# ------------------------------------------------------------ kv-pairing
+BAD_KV = """
+    def admit(self, cls):
+        self.pool.incref(self.blocks)
+        do_work()
+"""
+
+GOOD_KV_FINALLY = """
+    def admit(self, cls):
+        try:
+            self.pool.incref(self.blocks)
+            do_work()
+        finally:
+            self.pool.decref(self.blocks)
+"""
+
+GOOD_KV_ADJACENT = """
+    def admit(self, cls):
+        ids = self.pool.lease(4)
+        try:
+            do_work(ids)
+        finally:
+            self._release_lease(ids)
+"""
+
+GOOD_KV_WITH = """
+    def admit(self, cls):
+        with self.pool.guard():
+            self.pool.incref(self.blocks)
+            do_work()
+"""
+
+
+def test_kv_pairing_bad_flags():
+    assert "kv-pairing" in rules_hit(BAD_KV)
+
+
+def test_kv_pairing_good_variants_pass():
+    for good in (GOOD_KV_FINALLY, GOOD_KV_ADJACENT, GOOD_KV_WITH):
+        assert "kv-pairing" not in rules_hit(good)
+
+
+def test_kv_pairing_acquire_in_try_needs_releasing_finally():
+    # a try/finally whose finally does NOT release is still a leak
+    src = """
+    def admit(self):
+        try:
+            self.pool.incref(self.blocks)
+        finally:
+            log("done")
+    """
+    assert "kv-pairing" in rules_hit(src)
+
+
+def test_kv_pairing_scoped_to_src():
+    assert "kv-pairing" not in rules_hit(BAD_KV, "tests/fixture.py")
+
+
+# ------------------------------------------------------ ledger-discipline
+BAD_CHARGE = """
+    def serve(self):
+        self.oracle.ledger.charge("compare", 10)
+"""
+
+BAD_CTOR = """
+    def serve(self):
+        rec = CallRecord(kind="compare", tokens=10)
+"""
+
+BAD_ROUND = """
+    def tick(self):
+        token = self.oracle.begin_probe_round("compare", [], "c", sched)
+        pump()
+        raw = self.oracle.finish_probe_round(token, sched)
+"""
+
+GOOD_ROUND = """
+    def tick(self):
+        token = self.oracle.begin_probe_round("compare", [], "c", sched)
+        try:
+            pump()
+        finally:
+            raw = self.oracle.finish_probe_round(token, sched)
+"""
+
+
+def test_ledger_charge_outside_oracles_flags():
+    assert "ledger-discipline" in rules_hit(BAD_CHARGE,
+                                            "src/repro/serving/fixture.py")
+    assert "ledger-discipline" in rules_hit(BAD_CTOR,
+                                            "src/repro/serving/fixture.py")
+
+
+def test_ledger_charge_inside_oracles_allowed():
+    for src in (BAD_CHARGE, BAD_CTOR):
+        assert "ledger-discipline" not in rules_hit(
+            src, "src/repro/core/oracles/fixture.py")
+
+
+def test_round_pairing_bad_flags_good_passes():
+    assert "ledger-discipline" in rules_hit(BAD_ROUND)
+    assert "ledger-discipline" not in rules_hit(GOOD_ROUND)
+
+
+def test_round_with_no_finish_at_all_flags():
+    src = """
+    def tick(self):
+        token = self.oracle.begin_probe_round("compare", [], "c", sched)
+    """
+    found = lint(src)
+    assert any(f.rule == "ledger-discipline" and "never served" in f.message
+               for f in found)
+
+
+# ------------------------------------------------------------- jit-purity
+BAD_JIT_DECORATOR = """
+    import time
+
+    @jax.jit
+    def step(x):
+        t0 = time.perf_counter()
+        return x * t0
+"""
+
+BAD_JIT_PARTIAL = """
+    @partial(jax.jit, static_argnames=("n",))
+    def step(x, n):
+        print(x)
+        return x
+"""
+
+BAD_JIT_CALLSITE = """
+    def kernel(x):
+        return x.item()
+
+    f = jax.jit(kernel)
+"""
+
+BAD_JIT_BRANCH = """
+    @jax.jit
+    def step(x):
+        y = jnp.sum(x)
+        if y > 0:
+            return x
+        return -x
+"""
+
+GOOD_JIT = """
+    @jax.jit
+    def step(x, n):
+        y = jnp.sum(x)
+        z = jnp.where(y > 0, x, -x)
+        if n > 1:  # static python arg: fine
+            z = z * 2
+        if z.ndim == 2:  # shape attribute: trace-static, fine
+            z = z[None]
+        return z
+
+    def helper(x):
+        print(x)  # not traced — fine
+        return x
+"""
+
+
+def test_jit_purity_bad_variants_flag():
+    for bad in (BAD_JIT_DECORATOR, BAD_JIT_PARTIAL, BAD_JIT_CALLSITE,
+                BAD_JIT_BRANCH):
+        assert "jit-purity" in rules_hit(bad), bad
+
+
+def test_jit_purity_good_passes():
+    assert "jit-purity" not in rules_hit(GOOD_JIT)
+
+
+def test_jit_purity_aliased_shard_map_decorator():
+    # models/moe.py idiom: @_partial(_shard_map, ...)
+    src = """
+    @_partial(_shard_map, mesh=mesh, in_specs=specs)
+    def moe_step(x):
+        import random
+        return random.random()
+    """
+    assert "jit-purity" in rules_hit(src)
+
+
+def test_jit_purity_applies_outside_src_too():
+    assert "jit-purity" in rules_hit(BAD_JIT_DECORATOR, "tests/fixture.py")
+
+
+# ------------------------------------------------- region-key-unification
+BAD_REGION = """
+    def route(self, pids, sids, cls):
+        key = (pids, cls - len(pids) - len(sids))
+        return key
+"""
+
+GOOD_REGION = """
+    def _region_key(self, pids, sids, cls):
+        return (pids, cls - len(pids) - len(sids))
+
+    def route(self, pids, sids, cls):
+        return self._region_key(pids, sids, cls)
+
+    def other(self, a, b):
+        return (a, b - 1)  # 2-tuple with Sub but no len(): fine
+"""
+
+
+def test_region_key_bad_flags_good_passes():
+    assert "region-key-unification" in rules_hit(BAD_REGION)
+    assert "region-key-unification" not in rules_hit(GOOD_REGION)
+
+
+# ------------------------------------------------------------ determinism
+BAD_HASH = """
+    def seed_for(self, key):
+        return hash(key) % 1000
+"""
+
+BAD_RANDOM = """
+    import random
+
+    def pick(self, xs):
+        return random.choice(xs)
+"""
+
+BAD_NP_RANDOM = """
+    def noise(self):
+        return np.random.randn(3)
+"""
+
+BAD_UNSEEDED_RNG = """
+    def rng(self):
+        return np.random.default_rng()
+"""
+
+GOOD_DETERMINISM = """
+    def rng(self, seed):
+        r1 = np.random.default_rng(seed)
+        r2 = np.random.default_rng(12345)
+        g = np.random.Generator(np.random.PCG64(seed))
+        k = jax.random.PRNGKey(0)        # keyed jax RNG: fine
+        s = jax.random.split(k)
+        return r1, r2, g, s
+"""
+
+
+def test_determinism_bad_variants_flag():
+    for bad in (BAD_HASH, BAD_RANDOM, BAD_NP_RANDOM, BAD_UNSEEDED_RNG):
+        assert "determinism" in rules_hit(bad), bad
+
+
+def test_determinism_good_passes():
+    assert "determinism" not in rules_hit(GOOD_DETERMINISM)
+
+
+def test_determinism_scoped_to_src():
+    # tests/benchmarks may hash freely (fixtures, ad-hoc seeds)
+    assert "determinism" not in rules_hit(BAD_HASH, "benchmarks/fixture.py")
+
+
+# ------------------------------------------------------------ unused-name
+BAD_UNUSED = """
+    import os
+    from dataclasses import dataclass, field
+
+    @dataclass
+    class C:
+        x: int = 0
+"""
+
+GOOD_UNUSED = """
+    from __future__ import annotations
+
+    import os
+    from dataclasses import dataclass
+
+    @dataclass
+    class C:
+        home: str = os.sep
+"""
+
+
+def test_unused_name_bad_flags():
+    found = [f for f in lint(BAD_UNUSED) if f.rule == "unused-name"]
+    assert {f.message for f in found} == {"'os' imported but unused",
+                                          "'field' imported but unused"}
+
+
+def test_unused_name_good_passes():
+    assert "unused-name" not in rules_hit(GOOD_UNUSED)
+
+
+def test_unused_name_exempts_init_and_dunder_all():
+    src = "import os\nfrom sys import argv\n"
+    assert "unused-name" not in rules_hit(src, "src/repro/sub/__init__.py")
+    src_all = "from sys import argv\n__all__ = ['argv']\n"
+    assert "unused-name" not in rules_hit(src_all)
+
+
+# ----------------------------------------------------- framework features
+def test_suppression_comment_drops_finding():
+    src = """
+    def seed_for(self, key):
+        return hash(key) % 1000  # lint: disable=determinism
+    """
+    assert "determinism" not in rules_hit(src)
+
+
+def test_suppression_is_rule_specific():
+    src = """
+    def seed_for(self, key):
+        return hash(key) % 1000  # lint: disable=kv-pairing
+    """
+    assert "determinism" in rules_hit(src)
+
+
+def test_suppression_all():
+    src = """
+    def seed_for(self, key):
+        return hash(key) % 1000  # lint: disable=all
+    """
+    assert rules_hit(src) == set()
+
+
+def test_finding_sort_and_str():
+    found = lint(BAD_HASH)
+    f = found[0]
+    assert str(f) == f"{f.path}:{f.line}: [determinism] {f.message}"
+    assert found == sorted(found)
+
+
+def test_baseline_round_trip(tmp_path):
+    found = lint(BAD_HASH)
+    base = tmp_path / "baseline.json"
+    write_baseline(base, found)
+    loaded = load_baseline(base)
+    # line numbers survive the round trip; matching ignores them
+    assert loaded == sorted(found)
+    new, accepted = split_new(found, loaded)
+    assert new == [] and accepted == found
+    shifted = [type(f)(path=f.path, line=f.line + 7, rule=f.rule,
+                       message=f.message) for f in found]
+    new, accepted = split_new(shifted, loaded)
+    assert new == []  # baseline is line-churn tolerant
+    other = lint(BAD_RANDOM)
+    new, _ = split_new(other, loaded)
+    assert new == other  # different finding stays new
+
+
+def test_run_paths_reports_parse_errors(tmp_path):
+    bad = tmp_path / "src" / "repro" / "broken.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def broken(:\n")
+    report = run_paths([str(bad)], root=tmp_path)
+    assert report.files == 1
+    assert [f.rule for f in report.findings] == ["parse-error"]
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "dirty.py").write_text("def f(k):\n    return hash(k)\n")
+    out = tmp_path / "report.json"
+    rc = lint_main([str(pkg), "--json", str(out)])
+    text = capsys.readouterr().out
+    assert rc == 1
+    assert "[determinism]" in text
+    payload = json.loads(out.read_text())
+    assert payload["files"] == 1
+    assert [f["rule"] for f in payload["new"]] == ["determinism"]
+    assert "determinism" in payload["rules"]
+
+    (pkg / "dirty.py").write_text("def f(k):\n    return k\n")
+    assert lint_main([str(pkg)]) == 0
+    capsys.readouterr()
+
+
+def test_cli_baseline_workflow(tmp_path, capsys):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "dirty.py").write_text("def f(k):\n    return hash(k)\n")
+    base = tmp_path / "baseline.json"
+    assert lint_main([str(pkg), "--baseline", str(base),
+                      "--write-baseline"]) == 0
+    # baselined finding no longer fails the run...
+    assert lint_main([str(pkg), "--baseline", str(base)]) == 0
+    # ...but a fresh violation does
+    (pkg / "worse.py").write_text("import random\nr = random.random()\n")
+    assert lint_main([str(pkg), "--baseline", str(base)]) == 1
+    capsys.readouterr()
+
+
+def test_cli_usage_errors(capsys):
+    assert lint_main([]) == 2
+    assert lint_main(["--rules"]) == 0
+    text = capsys.readouterr().out
+    assert "kv-pairing" in text and "determinism" in text
+
+
+# ------------------------------------------------------- merged-tree gate
+def test_repo_is_clean():
+    """The gate CI enforces: the merged tree lints clean (suppressions are
+    allowed, new findings are not)."""
+    report = run_paths(["src", "tests", "benchmarks"], root=REPO)
+    assert report.files > 100
+    assert report.findings == [], "\n".join(str(f) for f in report.findings)

@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.serving.scheduler import (BatchScheduler, PrefixFill, ProbeRequest,
-                                     Request, RoundFuture)
+                                     Request)
 
 
 # ------------------------------------------------- fast: loop mechanics

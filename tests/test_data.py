@@ -1,7 +1,7 @@
 """Data pipeline + tokenizer."""
 import numpy as np
 
-from repro.data import BOS, EOS, PAD, ByteTokenizer, DataConfig, DataPipeline
+from repro.data import EOS, PAD, ByteTokenizer, DataConfig, DataPipeline
 
 
 def test_tokenizer_roundtrip():

@@ -1,16 +1,14 @@
 """Distributed extras: explicit compressed all-reduce, elastic-mesh
 re-lowering, activation-sharding context."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_reduced
-from repro.distributed import (ShardingPlan, activation_spec, batch_specs,
-                               named, param_specs, sequence_parallel_spec)
+from repro.distributed import (ShardingPlan, activation_spec, named,
+                               param_specs, sequence_parallel_spec)
 from repro.launch.mesh import make_local_mesh
 from repro.models import LM
 from repro.training.compression import compress_leaf, ef_allreduce

@@ -1,0 +1,207 @@
+"""Regression tests for the true positives the invariant linter surfaced
+(PR 7): every billed probe round is finished even when the tick errors
+mid-flight, and the engine's prefix-fill pins cannot leak pool blocks when
+an exception lands between the fill and its consumption.
+
+The executor tests run on fakes (fast, tier-1); the engine tests drive a
+real model like tests/test_paged_decode.py and are slow-marked.
+"""
+import jax
+import pytest
+
+from repro.core.access_paths.base import Ordering
+from repro.core.executor import ProbePlanExecutor, ScoreEach
+from repro.core.types import SortSpec
+
+
+# ---------------------------------------------------- executor round drain
+class _Ledger:
+    def __init__(self):
+        self.records = []
+
+    def snapshot(self):
+        return len(self.records)
+
+
+class _RoundOracle:
+    """Deferred-capable fake: counts begun/finished round tokens."""
+
+    def __init__(self):
+        self.ledger = _Ledger()
+        self.begun = []
+        self.finished = []
+
+    def begin_probe_round(self, kind, payload, criteria, scheduler):
+        token = (len(self.begun), len(payload))
+        self.begun.append(token)
+        return token
+
+    def finish_probe_round(self, token, scheduler):
+        self.finished.append(token)
+        return [0.0] * token[1]
+
+
+class _ExplodingScheduler:
+    def __init__(self, fail_times=1):
+        self.fail_times = fail_times
+        self.pumps = 0
+
+    def pump(self):
+        self.pumps += 1
+        if self.pumps <= self.fail_times:
+            raise RuntimeError("injected pump failure")
+
+
+def _score_plan(keys):
+    vals = yield ScoreEach(list(keys))
+    return list(vals)
+
+
+def _submit(execr, oracle, keys):
+    return execr.submit_plan(_score_plan(keys),
+                             Ordering(oracle, SortSpec("c")),
+                             name=f"plan-{keys[0]}")
+
+
+def test_tick_pump_failure_still_finishes_every_begun_round():
+    """Regression (executor.tick): begin_probe_round bills and enqueues the
+    round immediately, so a pump() failure mid-tick must not abandon the
+    begun tokens — the finally drain finishes them all."""
+    oracle = _RoundOracle()
+    sched = _ExplodingScheduler(fail_times=1)
+    execr = ProbePlanExecutor(scheduler=sched, prefetch=False)
+    _submit(execr, oracle, ["a", "b"])
+    _submit(execr, oracle, ["c", "d", "e"])
+    with pytest.raises(RuntimeError, match="injected pump failure"):
+        execr.tick()
+    assert len(oracle.begun) == 2
+    assert sorted(oracle.finished) == sorted(oracle.begun)
+
+
+def test_tick_first_finish_failure_drains_later_tokens():
+    """A finish_probe_round that raises must not strand its round-mates:
+    the failing token counts as consumed, every other token drains."""
+    oracle = _RoundOracle()
+    calls = {"n": 0}
+    orig = oracle.finish_probe_round
+
+    def finish(token, scheduler):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected finish failure")
+        return orig(token, scheduler)
+
+    oracle.finish_probe_round = finish
+    execr = ProbePlanExecutor(scheduler=_ExplodingScheduler(fail_times=0),
+                              prefetch=False)
+    _submit(execr, oracle, ["a", "b"])
+    _submit(execr, oracle, ["c", "d"])
+    _submit(execr, oracle, ["e", "f"])
+    with pytest.raises(RuntimeError, match="injected finish failure"):
+        execr.tick()
+    # token 0 failed (consumed either way); tokens 1 and 2 were drained
+    assert len(oracle.begun) == 3
+    assert sorted(oracle.finished) == sorted(oracle.begun[1:])
+
+
+def test_tick_success_path_unchanged():
+    oracle = _RoundOracle()
+    execr = ProbePlanExecutor(scheduler=_ExplodingScheduler(fail_times=0),
+                              prefetch=False)
+    runs = [_submit(execr, oracle, ["a", "b"]),
+            _submit(execr, oracle, ["c", "d", "e"])]
+    while execr.tick():
+        pass
+    assert [r.result for r in runs] == [[0.0, 0.0], [0.0, 0.0, 0.0]]
+    assert sorted(oracle.finished) == sorted(oracle.begun)
+
+
+# ------------------------------------------------------ engine pin hygiene
+@pytest.fixture(scope="module")
+def lm_params():
+    from repro.configs import get_reduced
+    from repro.models import LM
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm_params, **kw):
+    from repro.serving import ServeEngine
+    lm, params = lm_params
+    kw.setdefault("max_new_tokens", 4)
+    return ServeEngine(lm, params, **kw)
+
+
+PREFIX = "Criteria: relevance\nPassage B: the shared pivot block text\n"
+
+
+def _lru_blocks(eng):
+    return sum(len(e.blocks) for e in eng._prefix_lru.values()
+               if e.blocks is not None)
+
+
+@pytest.mark.slow
+def test_paged_admit_releases_pins_when_fill_result_is_unusable(lm_params):
+    """Regression (engine.paged_admit): an exception between
+    _fill_prefix_entries and the admission try-block used to leak the
+    round's pins.  Inject a fill that pins but returns no entry: the
+    KeyError must propagate AND the pins must be released."""
+    eng = _engine(lm_params)
+    orig = eng._fill_prefix_entries
+
+    def broken(cls, keys):
+        entries, pins = orig(cls, keys)
+        assert pins, "fixture must actually pin pool blocks"
+        return {}, pins                     # entry lookup will fail
+
+    eng._fill_prefix_entries = broken
+    # equal-length suffixes: same padded class AND same (prefix, start)
+    # region, so both rows route shared and the fill is actually consulted
+    prompts = [(PREFIX, "Passage A: one\n"), (PREFIX, "Passage A: two\n")]
+    with pytest.raises(KeyError):
+        eng.generate(prompts, max_new=2)
+    eng._fill_prefix_entries = orig
+    assert eng.paged_active == 0
+    assert eng.pool.blocks_in_use == _lru_blocks(eng)  # no stray pins
+    eng.clear_prefix_cache()
+    assert eng.pool.blocks_in_use == 0
+
+
+@pytest.mark.slow
+def test_prefetch_prefixes_releases_pins_on_exception(lm_params):
+    """Regression (engine.prefetch_prefixes): the fill's round pins are now
+    released in a finally, so an exception while consuming the fill result
+    cannot strand block references."""
+    eng = _engine(lm_params)
+    orig = eng._fill_prefix_entries
+
+    class _Boom(dict):
+        def __len__(self):
+            raise RuntimeError("injected consume failure")
+
+    def broken(cls, keys):
+        entries, pins = orig(cls, keys)
+        assert pins
+        return _Boom(entries), pins
+
+    eng._fill_prefix_entries = broken
+    with pytest.raises(RuntimeError, match="injected consume failure"):
+        eng.prefetch_prefixes([(PREFIX, "Passage A: warm\n")])
+    eng._fill_prefix_entries = orig
+    assert eng.pool.blocks_in_use == _lru_blocks(eng)
+    eng.clear_prefix_cache()
+    assert eng.pool.blocks_in_use == 0
+
+
+@pytest.mark.slow
+def test_prefetch_prefixes_leaves_only_lru_pins(lm_params):
+    """Happy path: warming regions leaves exactly the LRU's pinned runs —
+    round pins from the fill are all returned."""
+    eng = _engine(lm_params)
+    n = eng.prefetch_prefixes([(PREFIX, f"Passage A: item {i}\n")
+                               for i in range(3)])
+    assert n >= 1
+    assert eng.pool.blocks_in_use == _lru_blocks(eng) > 0
+    eng.clear_prefix_cache()
+    assert eng.pool.blocks_in_use == 0

@@ -1,6 +1,5 @@
 """KVBlockPool allocator/refcount/arena unit tests (no model forwards) and
 the paged decode-attention kernel oracle checks."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -9,7 +9,7 @@ import pytest
 pytestmark = pytest.mark.slow  # model forward passes: heavyweight
 
 from repro.configs import get_config, get_reduced, list_archs
-from repro.models import LM, SHAPES
+from repro.models import LM
 
 ARCHS = list_archs()
 

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (AccessPathOptimizer, ExactOracle, OptimizerConfig,
+from repro.core import (AccessPathOptimizer, OptimizerConfig,
                         SimulatedOracle, llm_order_by)
 from repro.core.datasets import passages, world_population
 from repro.core.optimizer.cost_model import (CandidateSpec, default_candidates,

@@ -1,6 +1,5 @@
 """Oracle semantics: determinism, antisymmetry, billing, caching."""
 import numpy as np
-import pytest
 
 from repro.core import (CachingOracle, ExactOracle, LLAMA405B, LLAMA70B,
                         SimulatedOracle, as_keys)

@@ -1,6 +1,5 @@
 """Serving engine, scheduler, and the real-model ModelOracle path."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -11,7 +11,6 @@ from repro.distributed import (ShardingPlan, batch_specs, cache_specs, named,
                                param_specs, zero1_specs)
 from repro.launch.mesh import make_local_mesh
 from repro.models import LM
-from repro.training import init_opt_state
 
 
 def fake_mesh_16x16():
