@@ -1,8 +1,8 @@
 """Benchmark harness: one module per paper table/figure (tables 1-3 and
-the figures reproduce the paper; tables 4-9 track this repo's serving
+the figures reproduce the paper; tables 4-10 track this repo's serving
 stack: round batching, prefix-KV cache, paged decode, the probe-plan
-executor, unified-loop co-scheduling, and locality scheduling).  Prints
-CSV.
+executor, unified-loop co-scheduling, locality scheduling, and
+multi-tenant priority/preemption).  Prints CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1 fig3
@@ -17,7 +17,8 @@ import time
 from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
                roofline, table1_calls, table2_cost_est, table3_samples,
                table4_submissions, table5_prefix_cache, table6_paged_decode,
-               table7_executor, table8_cosched, table9_locality)
+               table7_executor, table8_cosched, table9_locality,
+               table10_tenancy)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -34,6 +35,7 @@ SUITES = {
     "table7": table7_executor.main,       # probe-plan executor merging
     "table8": table8_cosched.main,        # unified-loop co-scheduling latency
     "table9": table9_locality.main,       # locality scheduling + memo
+    "table10": table10_tenancy.main,      # priority classes + preemption
 }
 
 

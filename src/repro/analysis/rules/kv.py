@@ -24,8 +24,11 @@ from typing import Iterable
 from ..astutil import callee_attr, calls_in, enclosing_statement, following_statement
 from ..framework import Finding, ModuleSource, Rule, in_src
 
-#: method names that take a refcount / pool lease.
-ACQUIRES = frozenset({"incref", "lease", "_lease_probe_blocks",
+#: method names that take a refcount / pool lease.  ``alloc`` joined the
+#: set with the preemption work: suspend/resume moves whole block runs in
+#: and out of the pool, so a raw alloc whose blocks never reach a row (or
+#: a rollback) is exactly the stranded-pin class this rule exists for.
+ACQUIRES = frozenset({"alloc", "incref", "lease", "_lease_probe_blocks",
                       "_fill_prefix_entries"})
 #: method names that give one back.
 RELEASES = frozenset({"decref", "release", "_release_lease", "_release_pins",

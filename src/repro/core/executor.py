@@ -178,12 +178,13 @@ class PlanRun:
     """One plan's execution state under the executor."""
 
     def __init__(self, name: str, gen, ordering, coalesce: bool = True,
-                 path=None):
+                 path=None, tenant: str = "default"):
         self.name = name
         self.gen = gen
         self.ordering = ordering
         self.coalesce = coalesce
         self.path = path               # AccessPath instance (describe_params)
+        self.tenant = tenant           # serving tenant class (TenantSpec)
         self.pending = None            # probe set awaiting resolution
         self.primed = False
         self.done = False
@@ -253,30 +254,69 @@ class ProbePlanExecutor:
     would cache anyway are filled).
     """
 
-    def __init__(self, scheduler=None, prefetch: Optional[bool] = None):
+    def __init__(self, scheduler=None, prefetch: Optional[bool] = None,
+                 tenant_budgets: Optional[dict] = None):
         self.scheduler = scheduler
         self.prefetch = (scheduler is not None if prefetch is None
                          else prefetch and scheduler is not None)
         self.prefetches = 0            # PrefixFill work items enqueued
         self.runs: list[PlanRun] = []
         self.ticks = 0
+        # per-tenant LEDGER budgets (billed input+output tokens): a tenant
+        # whose plans' combined ledger slices cross its budget has every
+        # remaining plan cancelled before the next round begins.  Merged
+        # with the scheduler's TenantSpec.ledger_budget entries; an
+        # explicit mapping here wins per name.
+        self.tenant_budgets = dict(tenant_budgets or {})
+        self.budget_cancelled = 0      # plans cancelled by a ledger budget
 
     # ------------------------------------------------------------- submit
     def submit_plan(self, gen, ordering, name: str = "",
-                    coalesce: bool = True, path=None) -> PlanRun:
+                    coalesce: bool = True, path=None,
+                    tenant: str = "default") -> PlanRun:
         run = PlanRun(name or f"plan-{len(self.runs)}", gen, ordering,
-                      coalesce=coalesce, path=path)
+                      coalesce=coalesce, path=path, tenant=tenant)
         self.runs.append(run)
         return run
 
     def submit_path(self, path, keys, oracle, spec: SortSpec,
-                    name: str = "") -> PlanRun:
+                    name: str = "", tenant: str = "default") -> PlanRun:
         """Convenience: submit one access path's plan on ``keys``."""
         from .access_paths.base import Ordering
         ordering = Ordering(oracle, spec)
         return self.submit_plan(path._plan(list(keys), spec), ordering,
                                 name=name or path.name,
-                                coalesce=path.params.coalesce, path=path)
+                                coalesce=path.params.coalesce, path=path,
+                                tenant=tenant)
+
+    # ---------------------------------------------------- ledger budgets
+    def _ledger_budget(self, tenant: str) -> Optional[int]:
+        if tenant in self.tenant_budgets:
+            return self.tenant_budgets[tenant]
+        specs = getattr(self.scheduler, "tenants", None)
+        if specs and tenant in specs:
+            return specs[tenant].ledger_budget
+        return None
+
+    def _tenant_billed(self, tenant: str) -> int:
+        """Billed tokens (input + output) across this executor's runs of
+        one tenant — the per-plan ledger slices, so a shared oracle bills
+        each tenant only for its own plans' records."""
+        return sum(r.input_tokens + r.output_tokens
+                   for run in self.runs if run.tenant == tenant
+                   for r in run.records)
+
+    def _enforce_ledger_budgets(self, live: list) -> list:
+        out = []
+        for run in live:
+            budget = self._ledger_budget(run.tenant)
+            if budget is not None and self._tenant_billed(run.tenant) >= budget:
+                run.cancel(f"tenant {run.tenant!r} ledger budget "
+                           f"({budget} tokens) exhausted")
+                self.budget_cancelled += 1
+                continue
+            out.append(run)
+        return out
 
     # --------------------------------------------------------------- ticks
     def _can_defer(self, run: PlanRun, ps) -> bool:
@@ -294,6 +334,7 @@ class ProbePlanExecutor:
                 run._advance(None)
             if not run.done:
                 live.append(run)
+        live = self._enforce_ledger_budgets(live)
         if not live:
             return False
         self.ticks += 1

@@ -13,7 +13,9 @@
 resumable probe plan, and every scheduling tick merges the ready probes of
 all queries into shared serving submissions (with cross-query dedup of
 identical prompts).  Per-query results and ledgers are byte-identical to
-running each query solo.
+running each query solo.  ``path="auto"`` queries ride the same tick
+stream: their optimizer pipeline runs as an incremental driver on the
+shared executor, under per-query admission control.
 """
 from __future__ import annotations
 
@@ -25,7 +27,8 @@ from .executor import (ProbePlanExecutor, attach_memo, attach_scheduler,
                        auto_scheduler, detach_memo, detach_scheduler,
                        plan_sort_result)
 from .optimizer.cost_model import CandidateSpec
-from .optimizer.optimizer import AccessPathOptimizer, OptimizerConfig, OptimizerReport
+from .optimizer.optimizer import (AccessPathOptimizer, OptimizerConfig,
+                                  OptimizerDriver, OptimizerReport)
 from .types import Key, SortResult, SortSpec
 from .oracles.base import Oracle
 
@@ -57,7 +60,18 @@ class OrderQuery:
 
     Each query carries its OWN oracle so per-query billing stays exact;
     oracles may (and for serving-level coalescing should) share one
-    engine — e.g. one ``ModelOracle(engine)`` per query."""
+    engine — e.g. one ``ModelOracle(engine)`` per query.
+
+    ``path="auto"`` runs the full optimizer pipeline for this query on the
+    SHARED executor (see :class:`~repro.core.optimizer.optimizer.OptimizerDriver`);
+    ``budget``/``strategy``/``sample_size``/``judge_oracle``/``candidates``
+    mirror :func:`llm_order_by`'s optimizer knobs and are ignored for
+    static paths.  After :func:`llm_order_by_many` returns, an auto
+    query's ``report`` field holds its :class:`OptimizerReport`.
+
+    ``tenant`` names the priority class every serving-level submission of
+    this query is billed to (see
+    :class:`~repro.serving.scheduler.TenantSpec`)."""
 
     keys: Sequence[Key]
     criteria: str
@@ -66,6 +80,13 @@ class OrderQuery:
     limit: Optional[int] = None
     path: str = "quick"
     params: Optional[PathParams] = None
+    budget: Optional[float] = None
+    strategy: str = "borda"
+    sample_size: int = 20
+    judge_oracle: Optional[Oracle] = None
+    candidates: Optional[list[CandidateSpec]] = None
+    tenant: str = "default"
+    report: Optional[OptimizerReport] = None
 
 
 def llm_order_by_many(queries: Sequence[OrderQuery], *,
@@ -101,16 +122,19 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
     play; ``False`` pins the reactive fill-on-demand behavior (the
     benchmarks' baseline).
 
-    Static paths only — ``path="auto"`` (the optimizer) manages its own
-    concurrent pilot executor and cannot be nested here."""
+    ``path="auto"`` queries run their WHOLE optimizer pipeline — the
+    membership gate, every pilot, selection, and the winner's full
+    execution — as plans on this same shared executor via one
+    :class:`~repro.core.optimizer.optimizer.OptimizerDriver` per query, so
+    optimizer probe rounds co-schedule with every other query's.  Each
+    driver's budget arithmetic reads only its own oracle's ledger, so
+    per-query admission control (and the final report) matches a solo
+    :func:`llm_order_by` run byte-for-byte."""
     from .oracles.cache import SemanticMemo
-    for q in queries:
-        if q.path == "auto":
-            raise ValueError(
-                "llm_order_by_many supports static access paths only; run "
-                "path='auto' queries through llm_order_by")
+    oracles = [q.oracle for q in queries]
+    judges = [q.judge_oracle for q in queries if q.judge_oracle is not None]
     if scheduler is None:
-        scheduler = auto_scheduler([q.oracle for q in queries])
+        scheduler = auto_scheduler(oracles + judges)
     if semantic_memo is True:
         semantic_memo = SemanticMemo()
     # every query's oracle becomes a client of the SAME live loop FOR THIS
@@ -121,20 +145,59 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
     # with a fresh scheduler re-attaches instead of pumping a stale loop;
     # the memo attachment is scoped the same way (the memo itself is the
     # caller's and outlives the call — cross-CALL reuse is the point).
-    attached = attach_scheduler([q.oracle for q in queries], scheduler)
-    attached_memo = attach_memo([q.oracle for q in queries], semantic_memo)
+    # Tenant tags are scoped identically: each query's oracle bills its
+    # serving-level rounds to the query's priority class for this call.
+    attached = attach_scheduler(oracles + judges, scheduler)
+    attached_memo = attach_memo(oracles, semantic_memo)
+    _MISSING = object()
+    tenant_saved = []
+    for q in queries:
+        for o in (q.oracle, q.judge_oracle):
+            if o is not None and q.tenant != "default":
+                tenant_saved.append((o, getattr(o, "tenant", _MISSING)))
+                o.tenant = q.tenant
     try:
         ex = ProbePlanExecutor(scheduler=scheduler, prefetch=prefetch)
         runs = []
         for i, q in enumerate(queries):
             spec = SortSpec(q.criteria, q.descending, q.limit)
-            ap = make_path(q.path, q.params or PathParams())
-            runs.append((q, spec, ex.submit_path(ap, q.keys, q.oracle, spec,
-                                                 name=f"q{i}:{q.path}")))
-        ex.run()
-        return [plan_sort_result(run, spec, len(q.keys), q.oracle.prices)
-                for q, spec, run in runs]
+            if q.path == "auto":
+                opt = AccessPathOptimizer(
+                    OptimizerConfig(sample_size=q.sample_size,
+                                    budget=q.budget, strategy=q.strategy),
+                    candidates=q.candidates)
+                runs.append((q, spec, OptimizerDriver(
+                    opt, list(q.keys), q.oracle, spec,
+                    judge_oracle=q.judge_oracle, executor=ex,
+                    tenant=q.tenant, name=f"q{i}:auto")))
+            else:
+                ap = make_path(q.path, q.params or PathParams())
+                runs.append((q, spec, ex.submit_path(
+                    ap, q.keys, q.oracle, spec, name=f"q{i}:{q.path}",
+                    tenant=q.tenant)))
+        drivers = [r for _q, _s, r in runs if isinstance(r, OptimizerDriver)]
+        if drivers:
+            def on_tick(_ex) -> None:
+                for d in drivers:
+                    d.on_tick(_ex)
+            ex.run(on_tick=on_tick)
+        else:
+            ex.run()
+        out = []
+        for q, spec, r in runs:
+            if isinstance(r, OptimizerDriver):
+                q.report = r.report
+                out.append(r.result)
+            else:
+                out.append(plan_sort_result(r, spec, len(q.keys),
+                                            q.oracle.prices))
+        return out
     finally:
+        for o, prev in reversed(tenant_saved):
+            if prev is _MISSING:
+                del o.tenant
+            else:
+                o.tenant = prev
         detach_scheduler(attached)
         detach_memo(attached_memo)
 

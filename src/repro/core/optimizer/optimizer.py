@@ -140,242 +140,6 @@ class AccessPathOptimizer:
             return ndcg_between(uids, gold_uids, k=spec.limit)
         return kendall_tau_between(uids, gold_uids)
 
-    # ------------------------------------------------------------- main entry
-    def choose_and_execute(self, keys: Sequence[Key], oracle: Oracle,
-                           spec: SortSpec,
-                           judge_oracle: Optional[Oracle] = None,
-                           scheduler=None
-                           ) -> tuple[SortResult, OptimizerReport]:
-        keys = list(keys)
-        cfg = self.config
-        report = OptimizerReport()
-        snap = oracle.ledger.snapshot()
-        sample = self._sample(keys)
-        report.sample_uids = [k.uid for k in sample]
-
-        # -- stages 1+2: gate + pilot candidates on ONE executor -----------
-        # The membership gate's inquiry round and every candidate's sample
-        # run advance together: each tick merges their ready probes into a
-        # shared serving drain instead of looping candidate-by-candidate.
-        sample_spec = SortSpec(spec.criteria, spec.descending,
-                               None if spec.limit is None
-                               else min(spec.limit, len(sample)))
-        k_s = None if spec.limit is None else min(spec.limit, len(sample))
-        ordered = sorted(self.candidates,
-                         key=lambda c: est_sample_calls(c, len(sample), k_s))
-        sample_cap = (None if cfg.budget is None
-                      else cfg.budget * cfg.sampling_fraction)
-
-        sched = scheduler if scheduler is not None else auto_scheduler([oracle])
-        # the pilot phase drives the SAME live serving loop everything else
-        # rides: deferred rounds resolve in its step gaps, and any
-        # oracle-side generation (judge rationales) co-schedules with them.
-        # Scoped to this call — detached in the finally below, so repeat
-        # optimizations never pump a stale loop.
-        attached = attach_scheduler([oracle, judge_oracle], sched)
-        try:
-            return self._choose_and_execute(keys, oracle, spec, judge_oracle,
-                                            sched, report, snap, sample,
-                                            sample_spec, k_s, ordered,
-                                            sample_cap)
-        finally:
-            detach_scheduler(attached)
-
-    def _choose_and_execute(self, keys, oracle, spec, judge_oracle, sched,
-                            report, snap, sample, sample_spec, k_s, ordered,
-                            sample_cap):
-        cfg = self.config
-        ex = ProbePlanExecutor(scheduler=sched)
-        gate = ex.submit_plan(membership_plan(sample), Ordering(oracle, spec),
-                              name="membership")
-        pilots: list[tuple[CandidateSpec, object]] = []
-        backlog = list(ordered)
-
-        def admit(n: int) -> None:
-            while backlog and n > 0:
-                cand = backlog.pop(0)
-                pilots.append((cand, ex.submit_path(
-                    cand.make(), sample, oracle, sample_spec,
-                    name=cand.label)))
-                n -= 1
-
-        def sampled_cost(run) -> float:
-            return LedgerView(list(run.records)).cost(oracle.prices)
-
-        def predicted(cand) -> float:
-            return predict_sample_cost(cand, len(sample), k_s, state["rate$"])
-
-        # no budget: every pilot rides the gate's tick; budget: cheapest
-        # rides it, the rest are admitted predictively while under the cap
-        admit(len(backlog) if sample_cap is None else 1)
-        state: dict = {"member": False, "rate$": None}
-
-        def on_tick(_ex) -> None:
-            report.max_concurrent_pilots = max(
-                report.max_concurrent_pilots,
-                sum(1 for _c, r in pilots if not r.done))
-            if gate.done and "rate" not in state:
-                if gate.error is not None:
-                    # a structurally failing gate propagated before the
-                    # executor refactor; keep that contract rather than
-                    # reading a silent 0.0 membership rate
-                    raise gate.error
-                state["rate"] = gate.result
-                report.membership_rate = state["rate"]
-                if state["rate"] >= cfg.membership_threshold:
-                    state["member"] = True       # Sec. 5.2 short-circuit
-                    for _c, run in pilots:
-                        run.cancel("membership short-circuit")
-                    backlog.clear()
-                    return
-            if sample_cap is None or not backlog:
-                return
-            # Budget-capped sampling is spend-observed: the cap check sees
-            # completed pilots' full sampled costs, and once spend crosses
-            # the cap with one successful sample the rest are dropped.
-            spent_now = oracle.ledger.since(snap).cost(oracle.prices)
-            succeeded = any(r.done and r.error is None for _c, r in pilots)
-            inflight = [(c, r) for c, r in pilots if not r.done]
-            if spent_now >= sample_cap and succeeded:
-                for cand in backlog:
-                    report.dropped.append((cand.label, "sampling-budget"))
-                backlog.clear()
-                return
-            # serial floor (exactly the pre-overlap semantics): with
-            # nothing in flight and headroom left, admit the next cheapest
-            # regardless of prediction — prediction may only ADD overlap,
-            # never starve a candidate the serial policy would have sampled
-            if not inflight:
-                admit(1)
-                inflight = [pilots[-1]]
-            if not cfg.pilot_overlap:
-                return
-            # predictive overlap: calibrate $/est_call on completed pilots,
-            # then co-admit while observed spend + every in-flight
-            # candidate's FULL predicted sample cost fits under the cap —
-            # overshoot is bounded by prediction error, not by whole
-            # in-flight pilots (ROADMAP "budgeted-pilot overlap")
-            state["rate$"] = dollars_per_est_call(
-                [(c, sampled_cost(r)) for c, r in pilots
-                 if r.done and r.error is None], len(sample), k_s)
-            if state["rate$"] is None:
-                return                      # uncalibrated: stay serial
-            committed = spent_now + sum(predicted(c) for c, _r in inflight)
-            while backlog and committed + predicted(backlog[0]) <= sample_cap:
-                committed += predicted(backlog[0])
-                admit(1)
-
-        ex.run(on_tick=on_tick)
-
-        if state["member"]:
-            report.chosen = CandidateSpec("pointwise")
-            report.reason = "membership"
-            report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
-            result = report.chosen.make().execute(keys, oracle, spec)
-            report.execution_cost = result.cost
-            return result, report
-
-        alive: list[CandidateSpec] = []
-        for cand, run in pilots:
-            if run.error is not None:
-                why = (str(run.error) if isinstance(run.error, PlanCancelled)
-                       else f"invalid-output: {run.error}")
-                report.dropped.append((cand.label, why))
-                continue
-            # the run's per-plan ledger slice IS its sampled cost — identical
-            # records to a solo execute() of the same candidate
-            res = plan_sort_result(run, sample_spec, len(sample),
-                                   oracle.prices)
-            report.sample_results[cand.label] = res
-            est = estimate_full_cost(cand, res.cost, len(sample), len(keys), spec.limit)
-            report.est_costs[cand.label] = est
-            alive.append(cand)
-
-        # -- stage 3: budget filter ------------------------------------------
-        spent = oracle.ledger.since(snap).cost(oracle.prices)
-        in_budget = []
-        for cand in alive:
-            est = report.est_costs[cand.label]
-            margin = (cfg.safety_comparison if cand.comparison_based
-                      else cfg.safety_value)
-            if cfg.budget is not None and spent + est * margin > cfg.budget:
-                report.dropped.append(
-                    (cand.label, f"over-budget est=${est:.3f}x{margin:g}"))
-            else:
-                in_budget.append(cand)
-        if not in_budget and alive:
-            # nothing affordable: degrade to the cheapest estimate
-            cheapest = min(alive, key=lambda c: report.est_costs[c.label])
-            in_budget = [cheapest]
-            report.reason = "budget-forced-cheapest"
-        report.in_budget = [c.label for c in in_budget]
-        if not in_budget:
-            raise RuntimeError("no runnable candidate access path")
-
-        # -- stage 4: selection -----------------------------------------------
-        if cfg.strategy == "consensus":
-            return self._consensus_execute(in_budget, keys, sample, oracle,
-                                           spec, report, snap)
-        chosen = self._select(in_budget, sample, spec, report,
-                              judge_oracle if judge_oracle is not None else oracle)
-        report.chosen = chosen
-        report.optimizer_cost = oracle.ledger.since(snap).cost(oracle.prices)
-
-        # -- stage 5: full execution ------------------------------------------
-        result = chosen.make().execute(keys, oracle, spec)
-        report.execution_cost = result.cost
-        return result, report
-
-    # --------------------------------------------- beyond-paper: consensus
-    def _consensus_execute(self, pool, keys, sample, oracle, spec,
-                           report, snap):
-        """Execute the top-k affordable candidates (ranked by Borda score on
-        the sample) and Borda-merge their full-dataset outputs."""
-        cfg = self.config
-        # rank pool by sample-level Borda agreement (reuses _select scoring)
-        ranked_pool = list(pool)
-        if len(pool) > 1:
-            ballots = [report.sample_results[c.label].uids()
-                       for c in pool if c.comparison_based] or \
-                      [report.sample_results[c.label].uids() for c in pool]
-            gold = borda_consensus(ballots, [k.uid for k in sample])
-            scores = {c.label: self._rank_similarity(
-                report.sample_results[c.label], gold, spec) for c in pool}
-            report.sample_scores.update(scores)
-            ranked_pool.sort(key=lambda c: -scores[c.label])
-        # greedily take candidates while the budget holds
-        take, est_sum = [], 0.0
-        spent = oracle.ledger.since(snap).cost(oracle.prices)
-        for c in ranked_pool:
-            est = report.est_costs[c.label]
-            if len(take) < cfg.consensus_k and (
-                    cfg.budget is None or spent + est_sum + est <= cfg.budget):
-                take.append(c)
-                est_sum += est
-        if not take:
-            take = [ranked_pool[0]]
-        report.chosen = take[0]
-        report.reason = "consensus:" + "+".join(c.label for c in take)
-        report.optimizer_cost = spent
-
-        results = [c.make().execute(list(keys), oracle, spec) for c in take]
-        report.execution_cost = sum(r.cost for r in results)
-        if len(results) == 1:
-            return results[0], report
-        universe = [k.uid for k in keys]
-        merged_uids = borda_consensus([r.uids() for r in results], universe)
-        by_uid = {k.uid: k for k in keys}
-        k_eff = spec.effective_limit(len(keys))
-        merged = SortResult(
-            order=[by_uid[u] for u in merged_uids[:k_eff]],
-            path="consensus(" + "+".join(r.path for r in results) + ")",
-            n_calls=sum(r.n_calls for r in results),
-            input_tokens=sum(r.input_tokens for r in results),
-            output_tokens=sum(r.output_tokens for r in results),
-            cost=report.execution_cost,
-        )
-        return merged, report
-
     # ------------------------------------------------------------- selection
     def _select(self, pool: list[CandidateSpec], sample: list[Key],
                 spec: SortSpec, report: OptimizerReport,
@@ -424,3 +188,313 @@ class AccessPathOptimizer:
                 best, best_v = c, v
         report.reason = "borda"
         return best
+
+    # ------------------------------------------------------------- main entry
+    def choose_and_execute(self, keys: Sequence[Key], oracle: Oracle,
+                           spec: SortSpec,
+                           judge_oracle: Optional[Oracle] = None,
+                           scheduler=None
+                           ) -> tuple[SortResult, OptimizerReport]:
+        """Run the whole pipeline on a private executor.  This is a thin
+        wrapper over :class:`OptimizerDriver` — the SAME incremental code
+        path ``llm_order_by_many(path="auto")`` drives on its shared
+        executor — so a solo auto query and one riding a many-query tick
+        stream produce byte-identical ledgers by construction."""
+        keys = list(keys)
+        sched = scheduler if scheduler is not None else auto_scheduler([oracle])
+        # the pilot phase drives the SAME live serving loop everything else
+        # rides: deferred rounds resolve in its step gaps, and any
+        # oracle-side generation (judge rationales) co-schedules with them.
+        # Scoped to this call — detached in the finally below, so repeat
+        # optimizations never pump a stale loop.
+        attached = attach_scheduler([oracle, judge_oracle], sched)
+        try:
+            ex = ProbePlanExecutor(scheduler=sched)
+            driver = OptimizerDriver(self, keys, oracle, spec,
+                                     judge_oracle=judge_oracle, executor=ex)
+            ex.run(on_tick=driver.on_tick)
+            return driver.result, driver.report
+        finally:
+            detach_scheduler(attached)
+
+
+class OptimizerDriver:
+    """The optimizer pipeline as an incremental driver over an EXTERNAL
+    :class:`~repro.core.executor.ProbePlanExecutor`.
+
+    Every stage that used to block — waiting for the pilots, then
+    executing the winner synchronously — is instead advanced from
+    ``on_tick``: the membership gate and pilot plans are submitted up
+    front, each tick runs the budget-capped admission policy (the
+    docstring at the top of this module), and once the pilots settle the
+    selection stages run inline and the winner is submitted as one more
+    plan on the same executor.  ``llm_order_by_many`` gives each auto
+    query its own driver on ONE shared executor, so N optimizer queries'
+    pilot rounds (and full executions) merge into the same serving
+    submissions as everything else — per-query admission control is just
+    each driver's own cap arithmetic over its own oracle's ledger."""
+
+    def __init__(self, opt: AccessPathOptimizer, keys: Sequence[Key],
+                 oracle: Oracle, spec: SortSpec,
+                 judge_oracle: Optional[Oracle] = None, executor=None,
+                 tenant: str = "default", name: str = "auto"):
+        cfg = opt.config
+        self.opt = opt
+        self.cfg = cfg
+        self.keys = list(keys)
+        self.oracle = oracle
+        self.spec = spec
+        self.judge_oracle = judge_oracle
+        self.ex = executor
+        self.tenant = tenant
+        self.name = name
+        self.report = OptimizerReport()
+        self.snap = oracle.ledger.snapshot()
+        self.sample = opt._sample(self.keys)
+        self.report.sample_uids = [k.uid for k in self.sample]
+        # stages 1+2: gate + pilot candidates on the shared executor — the
+        # gate's inquiry round and every candidate's sample run advance
+        # together, their ready probes merging into shared serving drains.
+        self.sample_spec = SortSpec(spec.criteria, spec.descending,
+                                    None if spec.limit is None
+                                    else min(spec.limit, len(self.sample)))
+        self.k_s = (None if spec.limit is None
+                    else min(spec.limit, len(self.sample)))
+        self.sample_cap = (None if cfg.budget is None
+                           else cfg.budget * cfg.sampling_fraction)
+        self.backlog = sorted(
+            opt.candidates,
+            key=lambda c: est_sample_calls(c, len(self.sample), self.k_s))
+        self.pilots: list[tuple[CandidateSpec, object]] = []
+        self.state: dict = {"member": False, "rate$": None}
+        self.gate = self.ex.submit_plan(
+            membership_plan(self.sample), Ordering(oracle, spec),
+            name=f"{name}:membership", tenant=tenant)
+        # no budget: every pilot rides the gate's tick; budget: cheapest
+        # rides it, the rest are admitted predictively while under the cap
+        self._admit(len(self.backlog) if self.sample_cap is None else 1)
+        self.phase = "pilots"
+        self.exec_runs: list = []
+        self._consensus_take: list[CandidateSpec] = []
+        self._consensus_queue: list[CandidateSpec] = []
+        self.result: Optional[SortResult] = None
+        self.done = False
+
+    # ------------------------------------------------------------- helpers
+    def _admit(self, n: int) -> None:
+        while self.backlog and n > 0:
+            cand = self.backlog.pop(0)
+            self.pilots.append((cand, self.ex.submit_path(
+                cand.make(), self.sample, self.oracle, self.sample_spec,
+                name=cand.label, tenant=self.tenant)))
+            n -= 1
+
+    def _spent(self) -> float:
+        return self.oracle.ledger.since(self.snap).cost(self.oracle.prices)
+
+    def _sampled_cost(self, run) -> float:
+        return LedgerView(list(run.records)).cost(self.oracle.prices)
+
+    def _predicted(self, cand) -> float:
+        return predict_sample_cost(cand, len(self.sample), self.k_s,
+                                   self.state["rate$"])
+
+    def _submit_exec(self, cand: CandidateSpec) -> None:
+        self.exec_runs.append(self.ex.submit_path(
+            cand.make(), self.keys, self.oracle, self.spec,
+            name=f"{self.name}:exec:{cand.label}", tenant=self.tenant))
+
+    # ---------------------------------------------------------------- tick
+    def on_tick(self, _ex=None) -> None:
+        if self.done:
+            return
+        if self.phase == "pilots":
+            self._pilot_tick()
+            if (self.gate.done and not self.backlog
+                    and all(r.done for _c, r in self.pilots)):
+                self._transition()
+        if self.phase == "execute" and all(r.done for r in self.exec_runs):
+            if self._consensus_queue:     # serial consensus chain
+                self._submit_exec(self._consensus_queue.pop(0))
+            else:
+                self._finish()
+
+    def _pilot_tick(self) -> None:
+        cfg, report, state = self.cfg, self.report, self.state
+        report.max_concurrent_pilots = max(
+            report.max_concurrent_pilots,
+            sum(1 for _c, r in self.pilots if not r.done))
+        if self.gate.done and "rate" not in state:
+            if self.gate.error is not None:
+                # a structurally failing gate propagated before the
+                # executor refactor; keep that contract rather than
+                # reading a silent 0.0 membership rate
+                raise self.gate.error
+            state["rate"] = self.gate.result
+            report.membership_rate = state["rate"]
+            if state["rate"] >= cfg.membership_threshold:
+                state["member"] = True           # Sec. 5.2 short-circuit
+                for _c, run in self.pilots:
+                    run.cancel("membership short-circuit")
+                self.backlog.clear()
+                return
+        if self.sample_cap is None or not self.backlog:
+            return
+        # Budget-capped sampling is spend-observed: the cap check sees
+        # completed pilots' full sampled costs, and once spend crosses
+        # the cap with one successful sample the rest are dropped.
+        spent_now = self._spent()
+        succeeded = any(r.done and r.error is None for _c, r in self.pilots)
+        inflight = [(c, r) for c, r in self.pilots if not r.done]
+        if spent_now >= self.sample_cap and succeeded:
+            for cand in self.backlog:
+                report.dropped.append((cand.label, "sampling-budget"))
+            self.backlog.clear()
+            return
+        # serial floor (exactly the pre-overlap semantics): with
+        # nothing in flight and headroom left, admit the next cheapest
+        # regardless of prediction — prediction may only ADD overlap,
+        # never starve a candidate the serial policy would have sampled
+        if not inflight:
+            self._admit(1)
+            inflight = [self.pilots[-1]]
+        if not cfg.pilot_overlap:
+            return
+        # predictive overlap: calibrate $/est_call on completed pilots,
+        # then co-admit while observed spend + every in-flight
+        # candidate's FULL predicted sample cost fits under the cap —
+        # overshoot is bounded by prediction error, not by whole
+        # in-flight pilots (ROADMAP "budgeted-pilot overlap")
+        state["rate$"] = dollars_per_est_call(
+            [(c, self._sampled_cost(r)) for c, r in self.pilots
+             if r.done and r.error is None], len(self.sample), self.k_s)
+        if state["rate$"] is None:
+            return                          # uncalibrated: stay serial
+        committed = spent_now + sum(self._predicted(c) for c, _r in inflight)
+        while (self.backlog
+               and committed + self._predicted(self.backlog[0])
+               <= self.sample_cap):
+            committed += self._predicted(self.backlog[0])
+            self._admit(1)
+
+    # -------------------------------------------------- stages 3-5 inline
+    def _transition(self) -> None:
+        cfg, report = self.cfg, self.report
+        self.phase = "execute"
+        if self.state["member"]:
+            report.chosen = CandidateSpec("pointwise")
+            report.reason = "membership"
+            report.optimizer_cost = self._spent()
+            self._submit_exec(report.chosen)
+            return
+        alive: list[CandidateSpec] = []
+        for cand, run in self.pilots:
+            if run.error is not None:
+                why = (str(run.error) if isinstance(run.error, PlanCancelled)
+                       else f"invalid-output: {run.error}")
+                report.dropped.append((cand.label, why))
+                continue
+            # the run's per-plan ledger slice IS its sampled cost — identical
+            # records to a solo execute() of the same candidate
+            res = plan_sort_result(run, self.sample_spec, len(self.sample),
+                                   self.oracle.prices)
+            report.sample_results[cand.label] = res
+            est = estimate_full_cost(cand, res.cost, len(self.sample),
+                                     len(self.keys), self.spec.limit)
+            report.est_costs[cand.label] = est
+            alive.append(cand)
+
+        # -- stage 3: budget filter ---------------------------------------
+        spent = self._spent()
+        in_budget = []
+        for cand in alive:
+            est = report.est_costs[cand.label]
+            margin = (cfg.safety_comparison if cand.comparison_based
+                      else cfg.safety_value)
+            if cfg.budget is not None and spent + est * margin > cfg.budget:
+                report.dropped.append(
+                    (cand.label, f"over-budget est=${est:.3f}x{margin:g}"))
+            else:
+                in_budget.append(cand)
+        if not in_budget and alive:
+            # nothing affordable: degrade to the cheapest estimate
+            cheapest = min(alive, key=lambda c: report.est_costs[c.label])
+            in_budget = [cheapest]
+            report.reason = "budget-forced-cheapest"
+        report.in_budget = [c.label for c in in_budget]
+        if not in_budget:
+            raise RuntimeError("no runnable candidate access path")
+
+        # -- stage 4: selection ---------------------------------------------
+        if cfg.strategy == "consensus":
+            self._consensus_transition(in_budget, spent)
+            return
+        chosen = self.opt._select(
+            in_budget, self.sample, self.spec, report,
+            self.judge_oracle if self.judge_oracle is not None
+            else self.oracle)
+        report.chosen = chosen
+        report.optimizer_cost = self._spent()
+        # -- stage 5: full execution rides the shared executor --------------
+        self._submit_exec(chosen)
+
+    def _consensus_transition(self, pool: list, spent: float) -> None:
+        """Beyond-paper consensus: rank the affordable pool by sample-level
+        Borda agreement, then execute the top-k serially (each full run is
+        one plan; the next is submitted when the previous finishes, so the
+        shared ledger's record order matches the old synchronous loop) and
+        Borda-merge their outputs in :meth:`_finish`."""
+        cfg, report = self.cfg, self.report
+        ranked_pool = list(pool)
+        if len(pool) > 1:
+            ballots = [report.sample_results[c.label].uids()
+                       for c in pool if c.comparison_based] or \
+                      [report.sample_results[c.label].uids() for c in pool]
+            gold = borda_consensus(ballots, [k.uid for k in self.sample])
+            scores = {c.label: self.opt._rank_similarity(
+                report.sample_results[c.label], gold, self.spec)
+                for c in pool}
+            report.sample_scores.update(scores)
+            ranked_pool.sort(key=lambda c: -scores[c.label])
+        # greedily take candidates while the budget holds
+        take: list[CandidateSpec] = []
+        est_sum = 0.0
+        for c in ranked_pool:
+            est = report.est_costs[c.label]
+            if len(take) < cfg.consensus_k and (
+                    cfg.budget is None
+                    or spent + est_sum + est <= cfg.budget):
+                take.append(c)
+                est_sum += est
+        if not take:
+            take = [ranked_pool[0]]
+        report.chosen = take[0]
+        report.reason = "consensus:" + "+".join(c.label for c in take)
+        report.optimizer_cost = spent
+        self._consensus_take = take
+        self._consensus_queue = take[1:]
+        self._submit_exec(take[0])
+
+    def _finish(self) -> None:
+        report = self.report
+        results = [plan_sort_result(run, self.spec, len(self.keys),
+                                    self.oracle.prices)
+                   for run in self.exec_runs]
+        report.execution_cost = sum(r.cost for r in results)
+        if len(results) == 1:
+            self.result = results[0]
+        else:                             # consensus Borda merge
+            universe = [k.uid for k in self.keys]
+            merged_uids = borda_consensus([r.uids() for r in results],
+                                          universe)
+            by_uid = {k.uid: k for k in self.keys}
+            k_eff = self.spec.effective_limit(len(self.keys))
+            self.result = SortResult(
+                order=[by_uid[u] for u in merged_uids[:k_eff]],
+                path="consensus(" + "+".join(r.path for r in results) + ")",
+                n_calls=sum(r.n_calls for r in results),
+                input_tokens=sum(r.input_tokens for r in results),
+                output_tokens=sum(r.output_tokens for r in results),
+                cost=report.execution_cost,
+            )
+        self.done = True

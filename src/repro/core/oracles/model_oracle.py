@@ -45,6 +45,11 @@ class ModelOracle(Oracle):
         # synchronous verbs — attach via llm_order_by_many(semantic_memo=)
         self.memo = None
         self.memo_hit_log: list[tuple[int, object]] = []
+        # serving tenant class this oracle's probe rounds and rationale
+        # generations ride under (scheduler.TenantSpec); "default" keeps
+        # every sink call signature-compatible with non-tenant schedulers.
+        # llm_order_by_many scopes this per query (operator.attach_tenants)
+        self.tenant = "default"
 
     # -- billing helpers using real token counts -----------------------------
     def _real_tokens(self, text: str) -> int:
@@ -266,6 +271,9 @@ class ModelOracle(Oracle):
         else:
             raise ValueError(f"unknown deferred round kind {kind!r}")
         if hasattr(sink, "submit_probe_round"):
+            if self.tenant != "default":   # default stays signature-neutral
+                return (kind, sink.submit_probe_round(
+                    prompts, tenant=self.tenant), meta, plan)
             return (kind, sink.submit_probe_round(prompts), meta, plan)
         # legacy sink: per-probe rids read back from sink.probe_results
         return (kind, [sink.submit_probe(p) for p in prompts], meta, plan)
@@ -366,8 +374,11 @@ class ModelOracle(Oracle):
                 for lst in listings]
             if self.scheduler is not None and self.scheduler.paged \
                     and self.scheduler.engine is self.engine:
+                kw = ({} if self.tenant == "default"
+                      else {"tenant": self.tenant})
                 rationales = self.scheduler.generate(
-                    rationale_prompts, max_new=self.judge_rationale_tokens)
+                    rationale_prompts, max_new=self.judge_rationale_tokens,
+                    **kw)
             else:
                 rationales = self.engine.generate(
                     rationale_prompts, max_new=self.judge_rationale_tokens)

@@ -1,8 +1,10 @@
-from .engine import ServeEngine, ServeStats
+from .engine import ServeEngine, ServeStats, SuspendedRow
 from .kv_pool import KVBlockPool, PoolExhausted
 from .locality import plan_window_jobs, prefetch_candidates
-from .scheduler import BatchScheduler, Request, RoundFuture
+from .scheduler import (BatchScheduler, Request, RoundFuture,
+                        TenantBudgetExceeded, TenantSpec, TenantStats)
 
-__all__ = ["ServeEngine", "ServeStats", "KVBlockPool", "PoolExhausted",
-           "BatchScheduler", "Request", "RoundFuture",
+__all__ = ["ServeEngine", "ServeStats", "SuspendedRow", "KVBlockPool",
+           "PoolExhausted", "BatchScheduler", "Request", "RoundFuture",
+           "TenantSpec", "TenantStats", "TenantBudgetExceeded",
            "plan_window_jobs", "prefetch_candidates"]

@@ -143,6 +143,21 @@ class ServeStats:
     # blocks) degrades to unpooled transient memory, never to a stall.
     probe_blocks_leased: int = 0
     probe_lease_shortfalls: int = 0
+    # multi-tenant serving (scheduler.TenantSpec): preemption traffic and
+    # starvation accounting.  ``preempt_suspends``/``preempt_resumes`` count
+    # decode rows suspended to a host stash and re-admitted;
+    # ``preempt_blocks_stashed`` the blocks copied out.  The starvation
+    # counters are SLO alarms, bumped by the scheduler when work of a
+    # priority class (> 0) waits beyond its starvation bound: deferrals of
+    # probe rounds under per-tenant quotas are benign
+    # (``probe_rounds_deferred``); a starved round/admission is one that
+    # the weighted-admission policy should have protected and did not.
+    preempt_suspends: int = 0
+    preempt_resumes: int = 0
+    preempt_blocks_stashed: int = 0
+    probe_rounds_deferred: int = 0
+    starved_rounds: int = 0
+    starved_admissions: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -176,6 +191,23 @@ class _PagedRow:
     cur: int                 # next token to record (already generated)
     t: int = 0               # decode steps taken
     emitted: list = field(default_factory=list)
+
+
+@dataclass
+class SuspendedRow:
+    """A preempted decode row evicted to host memory: everything needed to
+    re-admit it with byte-identical continuation.  The stash holds the
+    row's FULL block run (shared prefix included — the resumed row owns
+    private copies, so its lifetime is decoupled from the prefix LRU); no
+    pool references are held while suspended."""
+    rid: int
+    cls: int
+    limit: int
+    cur: int
+    t: int
+    emitted: list
+    n_blocks: int
+    stash: list              # KVBlockPool.stash_blocks payload
 
 
 class ServeEngine:
@@ -611,7 +643,9 @@ class ServeEngine:
             self._evict_one_prefix()
         if self.pool.free_blocks < need:
             return None
-        return [self.pool.alloc(nb) for _ in range(rows)]
+        # ownership transfers to the probe-submission caller, which releases
+        # every run in its round-scoped finally (_release_lease path)
+        return [self.pool.alloc(nb) for _ in range(rows)]  # lint: disable=kv-pairing
 
     def _evict_one_prefix(self) -> None:
         _, entry = self._prefix_lru.popitem(last=False)
@@ -979,7 +1013,9 @@ class ServeEngine:
                     self.pool.incref(incref_run)  # lint: disable=kv-pairing
                 while (self.pool.free_blocks < nb and self._prefix_lru):
                     self._evict_one_prefix()
-                runs.append(self.pool.alloc(nb))
+                # released by the except-PoolExhausted rollback below; on
+                # success ownership lives in the returned row runs
+                runs.append(self.pool.alloc(nb))  # lint: disable=kv-pairing
         except PoolExhausted:
             for rb in runs:
                 self.pool.decref(rb)
@@ -1086,6 +1122,46 @@ class ServeEngine:
             row.cur = int(nxt[i])
             row.t += 1
         return finished
+
+    # -------------------------------------- preemption: suspend and resume
+    def paged_suspend(self, rid: int) -> SuspendedRow:
+        """Evict an active decode row to a host-side stash, freeing its pool
+        references (shared prefix blocks merely lose this row's ref — the
+        LRU or wave-mates keep them alive).  Ordering makes this rollback-
+        clean: the stash copy happens FIRST, so an exception mid-suspend
+        leaves the row active and the pool untouched."""
+        row = self._paged_rows[rid]
+        stash = self.pool.stash_blocks(row.blocks)
+        s = SuspendedRow(rid=row.rid, cls=row.cls, limit=row.limit,
+                         cur=row.cur, t=row.t, emitted=list(row.emitted),
+                         n_blocks=len(row.blocks), stash=stash)
+        del self._paged_rows[rid]
+        self.pool.decref(row.blocks)
+        self.stats.preempt_suspends += 1
+        self.stats.preempt_blocks_stashed += len(row.blocks)
+        return s
+
+    def paged_resume(self, s: SuspendedRow) -> int:
+        """Re-admit a suspended row under its original rid: allocate a fresh
+        private run, scatter the stash back, and rebuild the row mid-decode
+        (``n_shared`` 0 — the resumed run is wholly private).  Continuation
+        is byte-identical to never suspending: the stash round trip copies
+        stored bits, and ``cur``/``t``/``emitted`` restore the exact decode
+        state.  May raise ``PoolExhausted``; the finally rolls the
+        allocation back, the stash stays intact, and the caller retries a
+        later step."""
+        blocks = self.pool.alloc(s.n_blocks)
+        try:
+            self.pool.unstash_blocks(s.stash, blocks)
+            self._paged_rows[s.rid] = _PagedRow(
+                rid=s.rid, cls=s.cls, limit=s.limit, blocks=blocks,
+                n_shared=0, cur=s.cur, t=s.t, emitted=list(s.emitted))
+            self.stats.preempt_resumes += 1
+            blocks = None             # ownership transferred to the row
+        finally:
+            if blocks is not None:
+                self.pool.decref(blocks)
+        return s.rid
 
 
 def _chunks(seq: list, step: Optional[int]):

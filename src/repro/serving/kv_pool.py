@@ -63,6 +63,10 @@ class KVBlockPool:
         # occupancy from probe traffic
         self.total_leased = 0
         self.lease_shortfalls = 0
+        # preemption traffic (see ServeEngine.paged_suspend/paged_resume):
+        # blocks copied out to host stashes and scattered back
+        self.total_stashed = 0
+        self.total_unstashed = 0
 
     # ---------------------------------------------------------- allocator
     @property
@@ -96,9 +100,17 @@ class KVBlockPool:
         if n > len(self._free):
             self.lease_shortfalls += 1
             return None
-        ids = self.alloc(n)
+        # ownership transfers to the lease holder, who decrefs the run
+        ids = self.alloc(n)  # lint: disable=kv-pairing
         self.total_leased += n
         return ids
+
+    def freeable(self, ids: Sequence[int]) -> int:
+        """How many of ``ids`` would return to the free list on one decref
+        (refcount 1 — not shared with an LRU entry or another row).  The
+        preemption policy uses this to size victim sets honestly: suspending
+        a row whose run is mostly shared prefix frees little."""
+        return sum(1 for i in ids if self._ref[i] == 1)
 
     def incref(self, ids: Sequence[int]) -> None:
         for i in ids:
@@ -113,6 +125,37 @@ class KVBlockPool:
             self._ref[i] -= 1
             if self._ref[i] == 0:
                 self._free.append(int(i))
+
+    # ------------------------------------------------- preemption stashes
+    def stash_blocks(self, ids: Sequence[int]) -> list:
+        """Copy the contents of ``ids`` to a host-side stash (the suspend
+        half of decode-row preemption): per decoder stack, the (n, len(ids),
+        block_size, KV, hd) K/V slabs as numpy arrays.  A stash is a plain
+        value — it holds no pool references, so the caller decides when the
+        source blocks are released."""
+        idx = jnp.asarray(np.asarray(list(ids), np.int32))
+        stash = [(np.asarray(jnp.take(a.k, idx, axis=1)),
+                  np.asarray(jnp.take(a.v, idx, axis=1)))
+                 for a in self.arenas]
+        self.total_stashed += len(ids)
+        return stash
+
+    def unstash_blocks(self, stash: list, ids: Sequence[int]) -> None:
+        """Scatter a stash back into ``ids`` (the resume half): the blocks
+        need not be the ones stashed from — block contents are
+        position-independent, the row's block TABLE carries the ordering —
+        and a gather-out/scatter-back round trip is a copy of the stored
+        bits, so a resumed row decodes bit-identically to one never
+        suspended."""
+        ids = list(ids)
+        assert stash and all(k.shape[1] == len(ids) for k, _ in stash), (
+            "stash block count must match the destination run")
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        for si, (k, v) in enumerate(stash):
+            arena = self.arenas[si]
+            self.arenas[si] = PagedKV(k=arena.k.at[:, idx].set(jnp.asarray(k)),
+                                      v=arena.v.at[:, idx].set(jnp.asarray(v)))
+        self.total_unstashed += len(ids)
 
     # ------------------------------------------------------ device arenas
     def write(self, stack_caches, row_blocks: Sequence[Sequence[int]],

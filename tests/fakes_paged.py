@@ -1,0 +1,130 @@
+"""A paged engine fake for fast scheduler tests: REAL pool, REAL policy.
+
+``FakePagedEngine`` subclasses :class:`~repro.serving.engine.ServeEngine`
+and keeps all the scheduler-facing paged machinery REAL — the
+:class:`~repro.serving.kv_pool.KVBlockPool` (allocation, refcounts,
+stash/unstash), ``paged_suspend``/``paged_resume``, ``paged_room``,
+``_alloc_rows``'s rollback, ``_paged_admit_wave``, even ``generate``'s
+continuous-batching driver — replacing only the model: admission writes a
+per-block fingerprint derived from the prompt into the (real, on-device)
+KV arenas, and each decode step reads the row's fingerprint back out of
+the arenas to emit the next token.
+
+That wiring makes emitted tokens a pure function of (prompt, step) — so
+interleaving-identity and solo-replay assertions are exact — while still
+flowing through the pool's actual device arrays: a preemption bug that
+corrupts, drops, or misorders stashed KV changes the fingerprint and
+therefore the resumed row's tokens, which is precisely what the
+suspend/resume tests assert against.
+"""
+import itertools
+from collections import OrderedDict
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.models.layers import PagedKV
+from repro.serving.engine import ServeStats, ServeEngine, _PagedRow
+from repro.serving.kv_pool import KVBlockPool
+
+
+def tiny_pool_lm():
+    """The minimal cfg surface KVBlockPool reads: two tiny attn stacks."""
+    return SimpleNamespace(cfg=SimpleNamespace(
+        pattern=[("attn", 2)], n_kv_heads=1, hd=2, dtype="float32"))
+
+
+def _prompt_hash(text: str) -> int:
+    h = 0
+    for c in text:
+        h = (h * 31 + ord(c)) % 997
+    return h
+
+
+class FakePagedEngine(ServeEngine):
+    paged_enabled = True
+    prefix_cache_enabled = False
+
+    def __init__(self, num_blocks: int = 33, block_size: int = 4,
+                 max_decode_rows: int = 4, max_new: int = 6,
+                 max_probe_batch: int = 256):
+        # deliberately no ServeEngine.__init__ (no model): only the
+        # attributes the paged/scheduler surface reads are set up
+        self.max_new = max_new
+        self.max_decode_rows = max_decode_rows
+        self.max_probe_batch = max_probe_batch
+        self.stats = ServeStats()
+        self.pool = KVBlockPool(tiny_pool_lm(), num_blocks, block_size)
+        self._prefix_lru = OrderedDict()
+        self._paged_rows = {}
+        self._paged_finished = {}
+        self._paged_ids = itertools.count()
+        self.submitted = []        # probe submissions, for assertions
+        self.prefetched = []       # prefix-fill submissions
+
+    # ------------------------------------------------ model stand-ins
+    def _encode_prompt(self, prompt):
+        prefix, suffix = self._parts(prompt)
+        text = suffix if prefix is None else prefix + suffix
+        return [ord(c) % 50 + 1 for c in text]
+
+    def _pad_class(self, length: int) -> int:
+        return -(-max(length, 1) // 4) * 4
+
+    def submit_probes(self, prompts, max_batch=None):
+        self.submitted.append(list(prompts))
+        out = np.zeros((len(prompts), 4), np.float32)
+        for i, p in enumerate(prompts):
+            key = p if isinstance(p, str) else "".join(p)
+            out[i] = _prompt_hash(key) + np.arange(4)
+        return out
+
+    def prefetch_prefixes(self, prompts):
+        self.prefetched.append(list(prompts))
+        return len(prompts)
+
+    # ------------------------------------------- paged decode stand-ins
+    def _fingerprint(self, blocks) -> int:
+        """Read the row's admission-time fingerprint back OUT of the pool
+        arenas — a suspend/resume cycle that mangles KV changes this."""
+        slab = np.asarray(self.pool.arenas[0].k[0, :, 0, 0, 0])
+        return int(round(float(sum(slab[b] for b in blocks))))
+
+    def paged_admit(self, requests):
+        counts, needs = [], []
+        for prompt, max_new in requests:
+            cls = self._pad_class(len(self._encode_prompt(prompt)))
+            needs.append(cls)
+            counts.append(self.pool.blocks_for(cls + self._row_limit(max_new)))
+        runs = self._alloc_rows(counts)
+        rids = []
+        arena = self.pool.arenas[0]
+        k = arena.k
+        for (prompt, max_new), cls, run in zip(requests, needs, runs):
+            rid = next(self._paged_ids)
+            prefix, suffix = self._parts(prompt)
+            h = _prompt_hash(suffix if prefix is None else prefix + suffix)
+            for j, b in enumerate(run):
+                k = k.at[0, b, 0, 0, 0].set(float((h + 7 * j) % 101))
+            self._paged_rows[rid] = _PagedRow(
+                rid=rid, cls=cls, limit=self._row_limit(max_new),
+                blocks=run, n_shared=0, cur=0, t=0, emitted=[])
+            rids.append(rid)
+        self.pool.arenas[0] = PagedKV(k=k, v=arena.v)
+        self.stats.calls += 1
+        return rids
+
+    def paged_step(self):
+        done: dict[int, str] = {}
+        for rid, row in list(self._paged_rows.items()):
+            tok = (self._fingerprint(row.blocks) + 1 + 3 * row.t) % 23
+            row.emitted.append(tok)
+            row.t += 1
+            self.stats.decode_tokens += 1
+            if tok == 0 or row.t >= row.limit:
+                del self._paged_rows[rid]
+                self.pool.decref(row.blocks)
+                done[rid] = " ".join(str(t) for t in row.emitted)
+        finished, self._paged_finished = self._paged_finished, {}
+        finished.update(done)
+        return finished

@@ -20,7 +20,7 @@ import pytest
 
 from repro.core import (ExactOracle, OrderQuery, PathParams, ProbePlanExecutor,
                         SimulatedOracle, as_keys, available_paths,
-                        llm_order_by_many, make_path)
+                        llm_order_by, llm_order_by_many, make_path)
 from repro.core.executor import InquireEach, plan_sort_result
 from repro.core.oracles.simulated import FACTUAL, REASONING, OracleProfile
 from repro.core.types import SortSpec
@@ -115,10 +115,44 @@ def test_adaptive_batch_size_rides_executor():
     assert _ledger_tuple(o_many) == _ledger_tuple(o_solo)
 
 
-def test_llm_order_by_many_rejects_auto():
-    with pytest.raises(ValueError):
-        llm_order_by_many([OrderQuery(_keys(4), "c", ExactOracle(),
-                                      path="auto")])
+def test_auto_query_rides_many_matches_solo():
+    """path="auto" in llm_order_by_many: the whole optimizer pipeline rides
+    the shared executor, with result, ledger, AND report identical to a
+    solo llm_order_by run."""
+    keys = _keys(24, seed=11)
+    o_solo = SimulatedOracle(REASONING)
+    res_solo, rep_solo = llm_order_by(keys, "c", o_solo, path="auto",
+                                      sample_size=8)
+    o_many = SimulatedOracle(REASONING)
+    q = OrderQuery(keys, "c", o_many, path="auto", sample_size=8)
+    (res,) = llm_order_by_many([q])
+    assert res.uids() == res_solo.uids()
+    assert _ledger_tuple(o_many) == _ledger_tuple(o_solo)
+    assert q.report is not None
+    assert q.report.chosen.label == rep_solo.chosen.label
+    assert q.report.optimizer_cost == rep_solo.optimizer_cost
+    assert q.report.execution_cost == rep_solo.execution_cost
+
+
+def test_auto_query_alongside_static_queries():
+    """An auto query and a static query share one executor; both stay
+    ==-identical to their solo runs (per-query ledgers are exact)."""
+    keys = _keys(24, seed=11)
+    o1_solo = SimulatedOracle(REASONING)
+    res1_solo, _ = llm_order_by(keys, "c", o1_solo, path="auto",
+                                sample_size=8)
+    o2_solo = SimulatedOracle(FACTUAL)
+    res2_solo = make_path("quick", PathParams(batch_size=4)).execute(
+        keys, o2_solo, SortSpec("tone", True, 5))
+    o1, o2 = SimulatedOracle(REASONING), SimulatedOracle(FACTUAL)
+    r1, r2 = llm_order_by_many([
+        OrderQuery(keys, "c", o1, path="auto", sample_size=8),
+        OrderQuery(keys, "tone", o2, descending=True, limit=5, path="quick",
+                   params=PathParams(batch_size=4))])
+    assert r1.uids() == res1_solo.uids()
+    assert r2.uids() == res2_solo.uids()
+    assert _ledger_tuple(o1) == _ledger_tuple(o1_solo)
+    assert _ledger_tuple(o2) == _ledger_tuple(o2_solo)
 
 
 # --------------------------------------------------- executor mechanics

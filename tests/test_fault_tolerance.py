@@ -90,3 +90,123 @@ def test_data_pipeline_restart_determinism():
     np.testing.assert_array_equal(a.batch(17)["tokens"], b.batch(17)["tokens"])
     c = DataPipeline(cfg, n_shards=4, shard_id=3)
     assert not (a.batch(17)["tokens"] == c.batch(17)["tokens"]).all()
+
+
+# --------------------------------------- serving-loop preemption failures
+def _tenancy_pair():
+    """The force-preemption shape: two long bulk rows fill the pool, a
+    priority request must suspend one of them to fit."""
+    from fakes_paged import FakePagedEngine
+    from repro.serving import BatchScheduler, TenantSpec
+
+    eng = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    sched = BatchScheduler(eng)
+    sched.register_tenant(TenantSpec("bulk", priority=0))
+    sched.register_tenant(TenantSpec("live", priority=10))
+    return eng, sched
+
+
+def _solo(prompt, budget):
+    from fakes_paged import FakePagedEngine
+    from repro.serving import BatchScheduler
+
+    eng = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    s = BatchScheduler(eng)
+    rid = s.submit(prompt, budget)
+    return s.run()[rid]
+
+
+def test_step_survives_suspend_failure_mid_preemption():
+    """PoolExhausted out of stash_blocks mid-suspend: the victim stays
+    active and owned, the step's queue bookkeeping stays consistent, and
+    once the fault clears the run drains with solo-identical outputs and
+    exact billing."""
+    from repro.serving.kv_pool import PoolExhausted
+
+    eng, sched = _tenancy_pair()
+    b1 = sched.submit("bulk one", 12, tenant="bulk")
+    b2 = sched.submit("bulk twoooo", 12, tenant="bulk")
+    sched.step()
+    l1 = sched.submit("live priority", 12, tenant="live")
+    real_stash = eng.pool.stash_blocks
+    calls = []
+
+    def flaky(ids):
+        if not calls:
+            calls.append(1)
+            raise PoolExhausted("injected stash failure")
+        return real_stash(ids)
+
+    eng.pool.stash_blocks = flaky
+    before = {rid: list(row.blocks) for rid, row in eng._paged_rows.items()}
+    with pytest.raises(PoolExhausted, match="injected stash failure"):
+        sched.step()
+    # stash-first: the would-be victim is still an active owned row with
+    # its block run untouched
+    assert eng.stats.preempt_suspends == 0
+    assert {rid: list(row.blocks)
+            for rid, row in eng._paged_rows.items()} == before
+    assert eng.pool.blocks_in_use == sum(
+        len(r.blocks) for r in eng._paged_rows.values())
+    # the finally in step() reassigned the queue: no request is both
+    # queued and owning an engine row
+    owned = set(map(id, sched._rid_of_engine.values()))
+    assert all(id(w) not in owned for w in sched.work)
+    outs = sched.run()                     # fault cleared: drain normally
+    assert eng.stats.preempt_suspends == 1
+    assert eng.stats.preempt_resumes == 1
+    for prompt, rid in [("bulk one", b1), ("bulk twoooo", b2),
+                        ("live priority", l1)]:
+        assert outs[rid] == _solo(prompt, 12)
+    assert sched.tenant_stats["bulk"].tokens_served == sum(
+        len(outs[r].split()) for r in (b1, b2))
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_step_survives_resume_failure_mid_drain():
+    """A transient failure scattering a stash back mid-resume: the
+    allocation rolls back (zero stranded pins), the request stays queued
+    as suspended, and the next steps resume and finish it byte-identical
+    with single billing."""
+    eng, sched = _tenancy_pair()
+    b1 = sched.submit("bulk one", 12, tenant="bulk")
+    b2 = sched.submit("bulk twoooo", 12, tenant="bulk")
+    sched.step()
+    l1 = sched.submit("live priority", 12, tenant="live")
+    sched.step()                           # preemption happens here
+    assert eng.stats.preempt_suspends == 1
+    real_unstash = eng.pool.unstash_blocks
+    calls = []
+
+    def flaky(stash, ids):
+        if not calls:
+            calls.append(1)
+            raise RuntimeError("injected unstash failure")
+        return real_unstash(stash, ids)
+
+    eng.pool.unstash_blocks = flaky
+    raised = 0
+    guard = 0
+    while sched.work_remaining:
+        try:
+            sched.step()
+        except RuntimeError as e:
+            assert "injected unstash failure" in str(e)
+            raised += 1
+            # rollback hygiene at the failure point: every pool block is
+            # accounted to an active row — the failed resume pinned nothing
+            assert eng.pool.blocks_in_use == sum(
+                len(r.blocks) for r in eng._paged_rows.values())
+            # the victim is back at the queue head, still suspended
+            assert sched.work and sched.work[0].suspended is not None
+        guard += 1
+        assert guard < 200
+    assert raised == 1                     # fault was one-shot and surfaced
+    assert eng.stats.preempt_resumes == 1
+    outs = {r: sched.completed[r].output for r in (b1, b2, l1)}
+    for prompt, rid in [("bulk one", b1), ("bulk twoooo", b2),
+                        ("live priority", l1)]:
+        assert outs[rid] == _solo(prompt, 12)
+    assert sched.tenant_stats["bulk"].tokens_served == sum(
+        len(outs[r].split()) for r in (b1, b2))
+    assert eng.pool.blocks_in_use == 0

@@ -1,0 +1,201 @@
+"""Seeded fuzz/chaos suite for the unified multi-tenant step loop.
+
+Random interleavings of decode admissions, probe rounds, stand-alone
+probes, prefix fills, priority-induced preemptions, and injected
+mid-step transient failures are driven through a real
+:class:`~repro.serving.scheduler.BatchScheduler` over a REAL
+:class:`~repro.serving.kv_pool.KVBlockPool` (see ``fakes_paged``: only
+the model is faked; admission, preemption, stash/unstash, and rollback
+paths are the production code).  Whatever the interleaving, the end
+state must satisfy:
+
+ * **zero leaked blocks** — the pool returns to empty;
+ * **all futures resolved** — every round future and stand-alone probe
+   delivers, including work reinstated after an injected failure;
+ * **solo-replay identity** — every decode output equals a fresh solo
+   run of the same prompt, and every round's logits equal a direct
+   submission (preemption and deferral are invisible to results);
+ * **exact per-tenant ledgers** — each tenant's ``tokens_served`` equals
+   the solo-replay token count of its decode work plus its probe rows
+   (the no-double-billing convention for preempted rows).
+
+The fast profile is tier-1; the deep profile (more seeds, longer op
+sequences) is ``slow``.  When ``hypothesis`` is installed an additional
+property test searches the interleaving space adaptively.
+"""
+import numpy as np
+import pytest
+
+from fakes_paged import FakePagedEngine
+from repro.serving import BatchScheduler, TenantSpec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ENGINE_KW = dict(num_blocks=25, max_decode_rows=3, max_new=8)
+TENANTS = [TenantSpec("bulk", priority=0, probe_quota=6),
+           TenantSpec("live", priority=10, reserved_rows=1),
+           TenantSpec("mid", priority=3)]
+NAMES = ["default", "bulk", "live", "mid"]
+
+
+def _make():
+    eng = FakePagedEngine(**ENGINE_KW)
+    sched = BatchScheduler(eng, starvation_bound=4)
+    for t in TENANTS:
+        sched.register_tenant(t)
+    return eng, sched
+
+
+def _solo_out(prompt, budget):
+    eng = FakePagedEngine(**ENGINE_KW)
+    sched = BatchScheduler(eng)
+    rid = sched.submit(prompt, budget)
+    return sched.run()[rid]
+
+
+def _fuzz(seed: int, n_ops: int, fail_rate: float = 0.0) -> None:
+    rng = np.random.default_rng(seed)
+    eng, sched = _make()
+    decode = []        # (tenant, prompt, budget, rid)
+    rounds = []        # (future, prompts, tenant)
+    singles = []       # (rid, prompt, tenant)
+    if fail_rate:
+        real_probes = eng.submit_probes
+        real_fills = eng.prefetch_prefixes
+
+        def flaky_probes(prompts, max_batch=None):
+            if rng.random() < fail_rate:
+                raise RuntimeError("transient probe failure")
+            return real_probes(prompts, max_batch=max_batch)
+
+        def flaky_fills(prompts):
+            if rng.random() < fail_rate:
+                raise RuntimeError("transient fill failure")
+            return real_fills(prompts)
+
+        eng.submit_probes = flaky_probes
+        eng.prefetch_prefixes = flaky_fills
+
+    def step():
+        try:
+            sched.step()
+        except RuntimeError as e:          # injected transient failures only
+            assert "transient" in str(e)
+
+    for i in range(n_ops):
+        op = rng.random()
+        tenant = NAMES[int(rng.integers(len(NAMES)))]
+        if op < 0.35:
+            prompt = f"gen {tenant} {seed} {i} " + "x" * int(rng.integers(12))
+            budget = int(rng.integers(1, 9))
+            decode.append((tenant, prompt, budget,
+                           sched.submit(prompt, budget, tenant=tenant)))
+        elif op < 0.55:
+            prompts = [f"probe {seed} {i} {j}"
+                       for j in range(int(rng.integers(1, 7)))]
+            rounds.append((sched.submit_probe_round(prompts, tenant=tenant),
+                           prompts, tenant))
+        elif op < 0.65:
+            prompt = f"single {seed} {i}"
+            singles.append((sched.submit_probe(prompt, tenant=tenant),
+                            prompt, tenant))
+        elif op < 0.72:
+            sched.submit_prefix_fill([(f"pre {i}", f"suf {i}")])
+        else:
+            step()
+    guard = 0
+    while sched.work_remaining:
+        step()
+        guard += 1
+        assert guard < 10_000, "drain did not terminate"
+
+    # ---- invariants ----
+    assert eng.pool.blocks_in_use == 0, "leaked KV blocks"
+    assert eng.stats.preempt_resumes == eng.stats.preempt_suspends
+    assert eng.pool.total_unstashed == eng.pool.total_stashed
+    for fut, _prompts, _t in rounds:
+        assert fut.done, "unresolved round future"
+    for rid, _p, _t in singles:
+        assert rid in sched.probe_results, "undelivered stand-alone probe"
+
+    expect_tokens: dict = {}
+    for tenant, prompt, budget, rid in decode:
+        solo = _solo_out(prompt, budget)
+        assert sched.completed[rid].output == solo, (seed, prompt)
+        expect_tokens[tenant] = (expect_tokens.get(tenant, 0)
+                                 + len(solo.split()))
+    clean = FakePagedEngine(**ENGINE_KW)
+    for fut, prompts, tenant in rounds:
+        expect_tokens[tenant] = expect_tokens.get(tenant, 0) + len(prompts)
+        direct = clean.submit_probes(prompts)
+        for got, want in zip(fut.result(), direct):
+            assert np.array_equal(got, want), (seed, prompts)
+    for rid, prompt, tenant in singles:
+        expect_tokens[tenant] = expect_tokens.get(tenant, 0) + 1
+        assert np.array_equal(sched.probe_results[rid],
+                              clean.submit_probes([prompt])[0])
+    for tenant, n in expect_tokens.items():
+        assert sched.tenant_stats[tenant].tokens_served == n, (seed, tenant)
+
+
+# --------------------------------------------------- tier-1 fast profile
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_interleavings(seed):
+    _fuzz(seed, n_ops=60)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fuzz_with_transient_failures(seed):
+    _fuzz(100 + seed, n_ops=50, fail_rate=0.25)
+
+
+def test_fuzz_under_preemption_pressure():
+    """A tight pool + long bulk rows + priority bursts: preemption fires
+    and all invariants still hold (this seed/shape is chosen to suspend)."""
+    rng = np.random.default_rng(7)
+    eng = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    sched = BatchScheduler(eng, starvation_bound=4)
+    sched.register_tenant(TenantSpec("bulk", priority=0))
+    sched.register_tenant(TenantSpec("live", priority=10))
+    decode = []
+    for i in range(12):
+        prompt = f"bulk {i} " + "y" * int(rng.integers(6))
+        decode.append(("bulk", prompt, 12,
+                       sched.submit(prompt, 12, tenant="bulk")))
+        if i % 3 == 2:
+            sched.step()
+            prompt = f"live burst {i} extra"
+            decode.append(("live", prompt, 12,
+                           sched.submit(prompt, 12, tenant="live")))
+    outs = sched.run()
+    assert eng.stats.preempt_suspends >= 1, "scenario must actually preempt"
+    assert eng.stats.preempt_resumes == eng.stats.preempt_suspends
+    assert eng.pool.blocks_in_use == 0
+    for _tenant, prompt, budget, rid in decode:
+        eng2 = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+        s2 = BatchScheduler(eng2)
+        r2 = s2.submit(prompt, budget)
+        assert outs[rid] == s2.run()[r2], prompt
+
+
+# ------------------------------------------------------ slow deep profile
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(20))
+def test_fuzz_deep(seed):
+    _fuzz(1000 + seed, n_ops=400, fail_rate=0.1)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@pytest.mark.slow
+def test_fuzz_hypothesis():
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), n_ops=st.integers(10, 150),
+           fail=st.sampled_from([0.0, 0.2]))
+    def prop(seed, n_ops, fail):
+        _fuzz(seed, n_ops, fail_rate=fail)
+
+    prop()

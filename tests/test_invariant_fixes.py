@@ -205,3 +205,73 @@ def test_prefetch_prefixes_leaves_only_lru_pins(lm_params):
     assert eng.pool.blocks_in_use == _lru_blocks(eng) > 0
     eng.clear_prefix_cache()
     assert eng.pool.blocks_in_use == 0
+
+
+# ------------------------------------------------ preemption edge rollback
+def _mid_decode_row(eng):
+    """Admit one row and advance it two steps without finishing it."""
+    [rid] = eng.paged_admit([("preempt rollback probe", 12)])
+    for _ in range(2):
+        assert not eng.paged_step()
+    return rid
+
+
+def test_paged_suspend_is_stash_first():
+    """An exception inside stash_blocks must leave the row ACTIVE: no pool
+    mutation, no stats bump, no half-suspended state (the stash copy runs
+    before any bookkeeping, so suspend failure is free to retry)."""
+    from fakes_paged import FakePagedEngine
+    from repro.serving.kv_pool import PoolExhausted
+
+    eng = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    rid = _mid_decode_row(eng)
+    in_use = eng.pool.blocks_in_use
+    refs = eng.pool._ref.copy()
+
+    def broken(ids):
+        raise PoolExhausted("injected stash failure")
+
+    eng.pool.stash_blocks = broken
+    with pytest.raises(PoolExhausted, match="injected stash failure"):
+        eng.paged_suspend(rid)
+    assert rid in eng._paged_rows           # row still active and owned
+    assert eng.pool.blocks_in_use == in_use
+    assert (eng.pool._ref == refs).all()
+    assert eng.stats.preempt_suspends == 0
+    assert eng.stats.preempt_blocks_stashed == 0
+
+
+def test_paged_resume_rolls_back_alloc_on_unstash_failure():
+    """A failure scattering the stash back must decref the fresh run (no
+    stranded pins), keep the stash intact, and leave resume retryable —
+    and the retried row must finish token-identical to never suspending."""
+    from fakes_paged import FakePagedEngine
+
+    solo = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    [srid] = solo.paged_admit([("preempt rollback probe", 12)])
+    want = None
+    while want is None:
+        want = solo.paged_step().get(srid)
+
+    eng = FakePagedEngine(num_blocks=11, max_decode_rows=3, max_new=12)
+    rid = _mid_decode_row(eng)
+    s = eng.paged_suspend(rid)
+    assert eng.pool.blocks_in_use == 0      # fully evicted to the host stash
+    real_unstash = eng.pool.unstash_blocks
+
+    def broken(stash, ids):
+        raise RuntimeError("injected unstash failure")
+
+    eng.pool.unstash_blocks = broken
+    with pytest.raises(RuntimeError, match="injected unstash failure"):
+        eng.paged_resume(s)
+    assert eng.pool.blocks_in_use == 0      # alloc rolled back, nothing pinned
+    assert rid not in eng._paged_rows
+    assert eng.stats.preempt_resumes == 0
+    eng.pool.unstash_blocks = real_unstash
+    assert eng.paged_resume(s) == rid       # stash survived: retry succeeds
+    got = None
+    while got is None:
+        got = eng.paged_step().get(rid)
+    assert got == want                      # byte-identical continuation
+    assert eng.pool.blocks_in_use == 0

@@ -111,6 +111,43 @@ def test_write_gather_roundtrip(pool):
         assert got.k.shape == (n, 1, s, cfg.n_kv_heads, cfg.hd)
 
 
+def test_stash_unstash_roundtrip_is_bit_identical(pool):
+    """The preemption round trip (suspend: gather blocks to a host stash;
+    resume: scatter into a DIFFERENT run) is a copy of the stored bits —
+    the property that makes a resumed decode row byte-identical."""
+    lm = LM(get_reduced("llama3-8b"))
+    cfg = lm.cfg
+    rng = np.random.default_rng(1)
+    src = pool.alloc(3)
+    dst = pool.alloc(3)                      # disjoint ids on purpose
+    assert not set(src) & set(dst)
+    n = cfg.pattern[0][1]
+    vals = jnp.asarray(rng.standard_normal(
+        (n, 3, pool.block_size, cfg.n_kv_heads, cfg.hd)), jnp.bfloat16)
+    a = pool.arenas[0]
+    idx = jnp.asarray(np.asarray(src, np.int32))
+    pool.arenas[0] = type(a)(k=a.k.at[:, idx].set(vals),
+                             v=a.v.at[:, idx].set(-vals))
+    stash = pool.stash_blocks(src)
+    pool.decref(src)                         # source may die while stashed
+    pool.unstash_blocks(stash, dst)
+    didx = jnp.asarray(np.asarray(dst, np.int32))
+    got = pool.arenas[0]
+    assert (np.asarray(got.k[:, didx]) == np.asarray(vals)).all()
+    assert (np.asarray(got.v[:, didx]) == np.asarray(-vals)).all()
+    assert pool.total_stashed == pool.total_unstashed == 3
+    with pytest.raises(AssertionError):      # size mismatch is refused
+        pool.unstash_blocks(stash, dst[:2])
+
+
+def test_freeable_counts_only_unshared(pool):
+    run = pool.alloc(4)
+    pool.incref(run[:2])                     # two blocks shared with an LRU
+    assert pool.freeable(run) == 2
+    pool.decref(run[:2])
+    assert pool.freeable(run) == 4
+
+
 def test_write_rejects_unaligned_start(pool):
     lm = LM(get_reduced("llama3-8b"))
     cfg = lm.cfg
