@@ -18,7 +18,7 @@ from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
                roofline, table1_calls, table2_cost_est, table3_samples,
                table4_submissions, table5_prefix_cache, table6_paged_decode,
                table7_executor, table8_cosched, table9_locality,
-               table10_tenancy)
+               table10_tenancy, table11_cascade)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -36,6 +36,7 @@ SUITES = {
     "table8": table8_cosched.main,        # unified-loop co-scheduling latency
     "table9": table9_locality.main,       # locality scheduling + memo
     "table10": table10_tenancy.main,      # priority classes + preemption
+    "table11": table11_cascade.main,      # model-cascade probe execution
 }
 
 

@@ -1,0 +1,196 @@
+"""Table 11 (repo-specific): model-cascade probe execution.
+
+Sweeps the escalation threshold of the cascade oracle
+(core/oracles/cascade.py) on a comparison-heavy quicksort workload and
+reports, per threshold, the LARGE-model probe tokens spent and the
+ranking quality (kendall tau vs latent ground truth) — the draft-first
+rounds answer confident probes on the cheap tier and escalate only
+low-margin rows.
+
+Acceptance (ISSUE 9):
+
+ * some threshold must save >= 40% of the large-model probe tokens while
+   keeping tau within ``TAU_TOL`` of large-only execution;
+ * ``threshold=inf`` (escalate-all) must be byte-identical in BOTH
+   output and ledger records to a plain large-model oracle;
+ * ``threshold=0`` must bill zero large-tier probe tokens.
+
+Default run is the calibrated simulated backend (fast, deterministic);
+``--real`` additionally drives two REAL reduced engines from
+``configs.registry.ladder()`` through the same contract (identity +
+savings; quality is meaningless on random-init weights).
+
+    PYTHONPATH=src python -m benchmarks.table11_cascade \
+        [--json OUT] [--real] [N ...]
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (CASCADE_70B, REASONING, SimulatedCascadeOracle,
+                        SimulatedOracle, as_keys, llm_order_by)
+from repro.core.metrics import kendall_tau
+
+CRITERIA = "relevance"
+PATH = "quick"
+SEEDS = (0, 1, 2)
+THRESHOLDS = (0.0, 0.75, 1.5, 2.5, math.inf)
+SAVINGS_FLOOR = 0.40     # >= 40% fewer large-model probe tokens ...
+TAU_TOL = 0.05           # ... within this tau tolerance of large-only
+
+
+def _keys(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return as_keys([f"doc {'x' * (i % 7)} {i:03d}" for i in range(n)],
+                   list(rng.standard_normal(n)))
+
+
+def _tier_tokens(records, tier: str) -> int:
+    if tier == "large":
+        # inf-passthrough bills untiered records — large-model quality
+        return sum(r.input_tokens + r.output_tokens
+                   for r in records if r.tier != "draft")
+    return sum(r.input_tokens + r.output_tokens
+               for r in records if r.tier == tier)
+
+
+# ---------------------------------------------------- simulated sweep
+def run_simulated(n: int) -> list[dict]:
+    rows = []
+    for t in THRESHOLDS:
+        taus, large_toks, draft_toks, costs = [], [], [], []
+        t0 = time.perf_counter()
+        for seed in SEEDS:
+            keys = _keys(n, seed)
+            o = SimulatedCascadeOracle(threshold=t, prices=CASCADE_70B)
+            res, _ = llm_order_by(keys, CRITERIA, o, path=PATH,
+                                  descending=True)
+            taus.append(kendall_tau(res.order, descending=True))
+            large_toks.append(_tier_tokens(o.ledger.records, "large"))
+            draft_toks.append(_tier_tokens(o.ledger.records, "draft"))
+            costs.append(res.cost)
+        rows.append(dict(
+            backend="simulated", n=n, threshold=t,
+            tau=round(float(np.mean(taus)), 4),
+            large_probe_tokens=round(float(np.mean(large_toks)), 1),
+            draft_probe_tokens=round(float(np.mean(draft_toks)), 1),
+            cost=round(float(np.mean(costs)), 6),
+            seconds=round(time.perf_counter() - t0, 3),
+        ))
+    ref = rows[-1]                                   # threshold=inf
+    assert ref["threshold"] == math.inf
+    for r in rows:
+        r["large_tokens_saved"] = round(
+            1.0 - r["large_probe_tokens"] / max(ref["large_probe_tokens"], 1),
+            4)
+        r["tau_gap"] = round(ref["tau"] - r["tau"], 4)
+
+    # -- identity anchors -------------------------------------------------
+    keys = _keys(n, SEEDS[0])
+    casc = SimulatedCascadeOracle(threshold=math.inf, prices=CASCADE_70B)
+    plain = SimulatedOracle(REASONING, prices=CASCADE_70B)
+    rc, _ = llm_order_by(keys, CRITERIA, casc, path=PATH, descending=True)
+    rp, _ = llm_order_by(keys, CRITERIA, plain, path=PATH, descending=True)
+    assert [k.uid for k in rc.order] == [k.uid for k in rp.order], (
+        "escalate-all order diverged from large-only")
+    assert casc.ledger.records == plain.ledger.records, (
+        "escalate-all ledger diverged from large-only")
+    assert rows[0]["threshold"] == 0.0
+    assert rows[0]["large_probe_tokens"] == 0, (
+        "threshold=0 billed large-model probe tokens")
+
+    # -- headline: savings at quality -------------------------------------
+    good = [r for r in rows
+            if r["large_tokens_saved"] >= SAVINGS_FLOOR
+            and r["tau_gap"] <= TAU_TOL]
+    assert good, (
+        f"no threshold saved >= {SAVINGS_FLOOR:.0%} large-model probe "
+        f"tokens within tau tolerance {TAU_TOL}: "
+        + "; ".join(f"t={r['threshold']:g} saved={r['large_tokens_saved']:.0%}"
+                    f" gap={r['tau_gap']:.3f}" for r in rows[:-1]))
+    for r in rows:
+        r["meets_acceptance"] = r in good
+    return rows
+
+
+# ------------------------------------------------- real reduced engines
+def run_real(n: int) -> list[dict]:
+    import jax
+    from repro.configs import get_reduced
+    from repro.configs.registry import ladder
+    from repro.core.oracles.cascade import CascadeOracle
+    from repro.core.oracles.model_oracle import ModelOracle
+    from repro.models import LM
+    from repro.serving import ServeEngine
+
+    def build(arch, seed):
+        lm = LM(get_reduced(arch))
+        return ServeEngine(lm, lm.init(jax.random.PRNGKey(seed)),
+                           max_new_tokens=8)
+
+    rungs = ladder()
+    draft, large = build(rungs[0], 0), build(rungs[1], 1)
+    keys = _keys(n, 0)
+
+    # escalate-all identity vs single-model execution
+    casc = CascadeOracle(large, draft_engine=draft, threshold=math.inf,
+                         prices=CASCADE_70B)
+    plain = ModelOracle(large, prices=CASCADE_70B)
+    rc, _ = llm_order_by(keys, CRITERIA, casc, path=PATH, descending=True)
+    rp, _ = llm_order_by(keys, CRITERIA, plain, path=PATH, descending=True)
+    assert [k.uid for k in rc.order] == [k.uid for k in rp.order], (
+        "real escalate-all order diverged from large-only")
+    assert casc.ledger.records == plain.ledger.records, (
+        "real escalate-all ledger diverged from large-only")
+    inf_large = _tier_tokens(casc.ledger.records, "large")
+
+    # calibrated mid-rung: half the calibration probes would escalate
+    mid = CascadeOracle(large, draft_engine=draft, prices=CASCADE_70B)
+    t = mid.calibrate_threshold(keys, CRITERIA, quantile=0.5)
+    t0 = time.perf_counter()
+    res, _ = llm_order_by(keys, CRITERIA, mid, path=PATH, descending=True)
+    secs = time.perf_counter() - t0
+    assert sorted(k.uid for k in res.order) == sorted(k.uid for k in keys)
+    mid_large = _tier_tokens(mid.ledger.records, "large")
+    assert mid_large < inf_large, (
+        "calibrated cascade did not reduce large-model probe tokens")
+    return [
+        dict(backend="real", n=n, threshold=math.inf, draft_probe_tokens=0,
+             large_probe_tokens=inf_large, identity=True),
+        dict(backend="real", n=n, threshold=round(t, 4),
+             draft_probe_tokens=_tier_tokens(mid.ledger.records, "draft"),
+             large_probe_tokens=mid_large,
+             large_tokens_saved=round(1.0 - mid_large / max(inf_large, 1), 4),
+             seconds=round(secs, 3)),
+    ]
+
+
+def main() -> None:
+    from benchmarks.common import parse_json_flag
+    argv, json_path = parse_json_flag(sys.argv[1:])
+    real = "--real" in argv
+    argv = [a for a in argv if a != "--real"]
+    sizes = [int(a) for a in argv if a.isdigit()] or [48]
+    rows = []
+    for n in sizes:
+        rows.extend(run_simulated(n))
+        if real:
+            rows.extend(run_real(max(n // 6, 8)))
+    cols = ("backend", "n", "threshold", "tau", "tau_gap",
+            "draft_probe_tokens", "large_probe_tokens", "large_tokens_saved",
+            "cost")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,22 @@ Two sub-invariants:
    ``finally`` block.  ``begin`` bills and enqueues the round immediately;
    abandoning the token leaves billed-but-unserved probes in the scheduler
    (the executor.tick bug fixed in this PR).
+
+Cascade extensions (core/oracles/cascade.py): the draft→large escalation
+machinery moves billing decisions into a mid-pump callback, so two more
+billing sites are confined to the oracle layer:
+
+3. ``*.charge(..., tier=...)`` — tier-tagged CallRecord construction —
+   is flagged outside ``core/oracles/`` regardless of the receiver's
+   name.  A tier tag from serving or an access path would let a
+   non-oracle layer decide which price sheet a record books against.
+
+4. ``*.submit_cascade_round(...)`` is flagged outside ``core/oracles/``:
+   its ``escalate`` callback bills the large wave, so a caller above the
+   oracle layer would be a billing site in disguise.  (Deferred cascade
+   rounds still flow through ``begin/finish_probe_round``, so invariant 2
+   covers their pairing — escalation waves resolve inside the same
+   token's finish, which must sit in a ``finally``.)
 """
 from __future__ import annotations
 
@@ -30,9 +46,10 @@ BILLING_CTORS = frozenset({"CallRecord", "TokenLedger"})
 
 class LedgerDisciplineRule(Rule):
     id = "ledger-discipline"
-    summary = ("ledger.charge()/CallRecord()/TokenLedger() only inside "
-               "core/oracles/; begin_probe_round paired with a "
-               "finish_probe_round in a finally block")
+    summary = ("ledger.charge()/CallRecord()/TokenLedger()/charge(tier=...)/"
+               "submit_cascade_round() only inside core/oracles/; "
+               "begin_probe_round paired with a finish_probe_round in a "
+               "finally block")
 
     def applies(self, relpath: str) -> bool:
         return in_src(relpath)
@@ -46,6 +63,7 @@ class LedgerDisciplineRule(Rule):
     def _check_billing_sites(self, mod: ModuleSource) -> Iterable[Finding]:
         for call in calls_in(mod.tree):
             name = dotted_name(call.func)
+            attr = callee_attr(call)
             if name:
                 parts = name.split(".")
                 if parts[-1] == "charge" and "ledger" in parts[:-1]:
@@ -54,11 +72,24 @@ class LedgerDisciplineRule(Rule):
                         "direct ledger.charge() outside core/oracles/ — "
                         "bill through an Oracle verb so memo reconciliation "
                         "sees the spend")
-            ctor = callee_attr(call)
-            if ctor in BILLING_CTORS and isinstance(call.func, ast.Name):
+            if (attr == "charge" and isinstance(call.func, ast.Attribute)
+                    and any(kw.arg == "tier" for kw in call.keywords)):
                 yield self.finding(
                     mod, call,
-                    f"{ctor}() constructed outside core/oracles/ — billing "
+                    "tier-tagged charge(tier=...) outside core/oracles/ — "
+                    "which price sheet a record books against is an "
+                    "oracle-layer decision")
+            if attr == "submit_cascade_round" and isinstance(call.func,
+                                                             ast.Attribute):
+                yield self.finding(
+                    mod, call,
+                    "submit_cascade_round() outside core/oracles/ — its "
+                    "escalate callback bills the large wave, making the "
+                    "caller a billing site")
+            if attr in BILLING_CTORS and isinstance(call.func, ast.Name):
+                yield self.finding(
+                    mod, call,
+                    f"{attr}() constructed outside core/oracles/ — billing "
                     f"records and ledgers are owned by the oracle layer")
 
     def _check_round_pairing(self, mod: ModuleSource) -> Iterable[Finding]:

@@ -31,3 +31,14 @@ def get_reduced(arch: str) -> ModelConfig:
 
 def list_archs() -> list[str]:
     return list(ARCH_IDS)
+
+
+# Model-cascade rung order (core/oracles/cascade.py): draft-first probe
+# execution runs wave 1 on an early rung's engine and escalates low-margin
+# rows to a later rung.  Ordered smallest to largest.
+_LADDER = ("stablelm-1.6b", "llama3-8b", "mixtral-8x22b")
+
+
+def ladder() -> list[str]:
+    """Arch ids of the draft→large cascade ladder, smallest first."""
+    return list(_LADDER)

@@ -9,10 +9,12 @@ from .executor import (ComparePairs, InquireEach, PlanCancelled,
 from .optimizer.optimizer import (AccessPathOptimizer, OptimizerConfig,
                                   OptimizerReport)
 from .optimizer.cost_model import CandidateSpec, default_candidates
-from .oracles.base import (GPT41, LLAMA70B, LLAMA405B, Oracle, PriceSheet,
-                           TokenLedger)
+from .oracles.base import (CASCADE_70B, GPT41, LLAMA70B, LLAMA405B, Oracle,
+                           PriceSheet, TieredPrices, TokenLedger)
 from .oracles.simulated import (FACTUAL, REASONING, SENTIMENT, ExactOracle,
                                 FlakyOracle, OracleProfile, SimulatedOracle)
+from .oracles.cascade import (CascadeOracle, DRAFT_1p6B,
+                              SimulatedCascadeOracle)
 from .oracles.cache import CachingOracle
 from . import datasets, metrics
 
@@ -25,7 +27,9 @@ __all__ = [
     "SerialProbe", "drive_plan",
     "AccessPathOptimizer", "OptimizerConfig", "OptimizerReport",
     "CandidateSpec", "default_candidates", "Oracle", "PriceSheet",
-    "TokenLedger", "GPT41", "LLAMA70B", "LLAMA405B", "FACTUAL", "REASONING",
-    "SENTIMENT", "ExactOracle", "FlakyOracle", "OracleProfile",
-    "SimulatedOracle", "CachingOracle", "datasets", "metrics",
+    "TieredPrices", "TokenLedger", "GPT41", "LLAMA70B", "LLAMA405B",
+    "CASCADE_70B", "FACTUAL", "REASONING", "SENTIMENT", "ExactOracle",
+    "FlakyOracle", "OracleProfile", "SimulatedOracle", "CascadeOracle",
+    "SimulatedCascadeOracle", "DRAFT_1p6B", "CachingOracle", "datasets",
+    "metrics",
 ]

@@ -379,6 +379,10 @@ class ProbePlanExecutor:
                     run, ps, token = pending.pop(0)
                     raw = run.ordering.oracle.finish_probe_round(
                         token, self.scheduler)
+                    # cascade rounds bill their escalation wave mid-pump;
+                    # the token carries those records for exact per-plan
+                    # attribution (drafts landed at begin time above)
+                    run.records.extend(getattr(token, "extra_records", ()))
                     ready.append((run, _fold_raw(run.ordering, ps, raw)))
             finally:
                 for run, _ps, token in pending:
@@ -387,6 +391,7 @@ class ProbePlanExecutor:
                             token, self.scheduler)
                     except Exception:
                         pass  # best-effort drain on the error path
+                    run.records.extend(getattr(token, "extra_records", ()))
         for run, value in ready:
             run._advance(value)
         if self.prefetch:
@@ -480,15 +485,20 @@ def auto_scheduler(oracles: Sequence):
     (plans still interleave tick-by-tick, rounds resolve synchronously
     per plan)."""
     engines = {}
+    drafts = {}
     for o in oracles:
         if (hasattr(o, "begin_probe_round")
                 and getattr(o, "engine", None) is not None):
             engines[id(o.engine)] = o.engine
-    if len(engines) != 1:
+            d = getattr(o, "draft_engine", None)
+            if d is not None:
+                drafts[id(d)] = d
+    if len(engines) != 1 or len(drafts) > 1:
         return None
     from ..serving.scheduler import BatchScheduler
     (engine,) = engines.values()
-    return BatchScheduler(engine)
+    return BatchScheduler(engine,
+                          draft_engine=next(iter(drafts.values()), None))
 
 
 # ----------------------------------------------------------------- results

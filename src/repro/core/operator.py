@@ -40,14 +40,21 @@ def llm_order_by(keys: Sequence[Key], criteria: str, oracle: Oracle, *,
                  sample_size: int = 20,
                  judge_oracle: Optional[Oracle] = None,
                  candidates: Optional[list[CandidateSpec]] = None,
+                 ladder_thresholds: Optional[Sequence[float]] = None,
                  ) -> tuple[SortResult, Optional[OptimizerReport]]:
-    """Execute LLM ORDER BY; returns (result, optimizer_report_or_None)."""
+    """Execute LLM ORDER BY; returns (result, optimizer_report_or_None).
+
+    ``ladder_thresholds``: cascade escalation thresholds for a
+    :class:`~repro.core.oracles.cascade.CascadeOracle`-style backend —
+    ``path="auto"`` then also explores draft-first cascade variants of
+    every candidate path (ignored for oracles without ``at_threshold``)."""
     spec = SortSpec(criteria=criteria, descending=descending, limit=limit)
     if path != "auto":
         ap = make_path(path, params or PathParams())
         return ap.execute(keys, oracle, spec), None
     opt = AccessPathOptimizer(
-        OptimizerConfig(sample_size=sample_size, budget=budget, strategy=strategy),
+        OptimizerConfig(sample_size=sample_size, budget=budget, strategy=strategy,
+                        ladder_thresholds=ladder_thresholds),
         candidates=candidates,
     )
     result, report = opt.choose_and_execute(keys, oracle, spec, judge_oracle=judge_oracle)
@@ -85,6 +92,7 @@ class OrderQuery:
     sample_size: int = 20
     judge_oracle: Optional[Oracle] = None
     candidates: Optional[list[CandidateSpec]] = None
+    ladder_thresholds: Optional[Sequence[float]] = None
     tenant: str = "default"
     report: Optional[OptimizerReport] = None
 
@@ -164,7 +172,8 @@ def llm_order_by_many(queries: Sequence[OrderQuery], *,
             if q.path == "auto":
                 opt = AccessPathOptimizer(
                     OptimizerConfig(sample_size=q.sample_size,
-                                    budget=q.budget, strategy=q.strategy),
+                                    budget=q.budget, strategy=q.strategy,
+                                    ladder_thresholds=q.ladder_thresholds),
                     candidates=q.candidates)
                 runs.append((q, spec, OptimizerDriver(
                     opt, list(q.keys), q.oracle, spec,

@@ -16,22 +16,40 @@ from ..access_paths.base import PathParams, _REGISTRY
 
 @dataclass(frozen=True)
 class CandidateSpec:
-    """One entry of the optimizer's candidate pool."""
+    """One entry of the optimizer's candidate pool.
+
+    ``rung``/``threshold`` are the model-cascade ladder dimension: a
+    candidate with ``threshold`` set is executed on
+    ``oracle.at_threshold(threshold)`` (draft-first rounds, escalating
+    low-margin probes), so the optimizer explores (path, rung, threshold)
+    tuples under one budget.  ``threshold=None`` is the plain large-model
+    candidate.  ``rung`` groups candidates that share a $/est_call rate —
+    cascade rungs are cheaper per call than large-only, so the pilot
+    phase calibrates each rung separately."""
 
     path: str                      # registry name ("pointwise", "ext_merge", ...)
     params: PathParams = PathParams()
     label: str = ""
+    rung: str = ""                 # rate-calibration group ("" = large-only)
+    threshold: Optional[float] = None  # cascade escalation threshold
 
     def __post_init__(self):
+        if self.threshold is not None and not self.rung:
+            object.__setattr__(self, "rung", f"t{self.threshold:g}")
         if not self.label:
             object.__setattr__(self, "label", self.default_label())
 
     def default_label(self) -> str:
         if self.path == "quick":
-            return "quick" if self.params.votes <= 1 else f"quick_{self.params.votes}"
-        if self.path.startswith("ext_") and self.path != "ext_pointwise":
-            return f"{self.path}_{self.params.batch_size}"
-        return self.path
+            base = ("quick" if self.params.votes <= 1
+                    else f"quick_{self.params.votes}")
+        elif self.path.startswith("ext_") and self.path != "ext_pointwise":
+            base = f"{self.path}_{self.params.batch_size}"
+        else:
+            base = self.path
+        if self.threshold is not None:
+            base += f"@t{self.threshold:g}"
+        return base
 
     @property
     def comparison_based(self) -> bool:
@@ -54,6 +72,21 @@ def default_candidates(min_batch: int = 4) -> list[CandidateSpec]:
         CandidateSpec("ext_bubble", PathParams(batch_size=min_batch)),
         CandidateSpec("ext_merge", PathParams(batch_size=min_batch)),
     ]
+
+
+def ladder_candidates(pool: "list[CandidateSpec]",
+                      thresholds: "list[float]") -> "list[CandidateSpec]":
+    """Expand a candidate pool along the cascade ladder: the original
+    large-only candidates plus, for every escalation threshold, a cascade
+    variant of each path.  Call complexity (Table 1) is threshold-invariant
+    — a cascade round issues the same logical calls, only cheaper ones —
+    so ``est_calls`` stays path-driven and the per-rung $/est_call rate
+    carries the whole cost difference."""
+    out = list(pool)
+    for t in thresholds:
+        out.extend(CandidateSpec(c.path, c.params, threshold=float(t))
+                   for c in pool)
+    return out
 
 
 def estimate_full_cost(spec: CandidateSpec, sampled_cost: float,

@@ -56,7 +56,8 @@ from ..oracles.base import LedgerView, Oracle
 from .borda import borda_consensus
 from .cost_model import (CandidateSpec, default_candidates,
                          dollars_per_est_call, est_sample_calls,
-                         estimate_full_cost, predict_sample_cost)
+                         estimate_full_cost, ladder_candidates,
+                         predict_sample_cost)
 from .judge import judge_select
 from .membership import membership_plan
 
@@ -92,6 +93,13 @@ class OptimizerConfig:
     # under the sampling cap.  False restores strictly serial sampling
     # (admit one, wait for its full observed cost).
     pilot_overlap: bool = True
+    # Model-cascade ladder (core/oracles/cascade.py): when the oracle
+    # supports ``at_threshold`` and thresholds are given, the candidate
+    # pool is expanded with a cascade variant of every path per threshold
+    # — the optimizer then picks a (path, rung, threshold) tuple under
+    # the same budget, with $/est_call calibrated per rung.  Ignored for
+    # oracles without a cascade ladder.
+    ladder_thresholds: Optional[Sequence[float]] = None
     seed: int = 0
 
 
@@ -262,11 +270,16 @@ class OptimizerDriver:
                     else min(spec.limit, len(self.sample)))
         self.sample_cap = (None if cfg.budget is None
                            else cfg.budget * cfg.sampling_fraction)
+        pool = opt.candidates
+        if cfg.ladder_thresholds and hasattr(oracle, "at_threshold"):
+            pool = ladder_candidates(pool, list(cfg.ladder_thresholds))
         self.backlog = sorted(
-            opt.candidates,
+            pool,
             key=lambda c: est_sample_calls(c, len(self.sample), self.k_s))
         self.pilots: list[tuple[CandidateSpec, object]] = []
-        self.state: dict = {"member": False, "rate$": None}
+        # rate$ is the global $/est_call calibration; rung$ holds per-rung
+        # rates (cascade rungs run cheaper per call than large-only)
+        self.state: dict = {"member": False, "rate$": None, "rung$": {}}
         self.gate = self.ex.submit_plan(
             membership_plan(self.sample), Ordering(oracle, spec),
             name=f"{name}:membership", tenant=tenant)
@@ -281,12 +294,20 @@ class OptimizerDriver:
         self.done = False
 
     # ------------------------------------------------------------- helpers
+    def _oracle_for(self, cand: CandidateSpec) -> Oracle:
+        """The oracle a candidate's plans run on: a cascade rung view for
+        ladder candidates (shared ledger/engines, so _spent() still sees
+        every dollar), the base oracle otherwise."""
+        if cand.threshold is None:
+            return self.oracle
+        return self.oracle.at_threshold(cand.threshold)
+
     def _admit(self, n: int) -> None:
         while self.backlog and n > 0:
             cand = self.backlog.pop(0)
             self.pilots.append((cand, self.ex.submit_path(
-                cand.make(), self.sample, self.oracle, self.sample_spec,
-                name=cand.label, tenant=self.tenant)))
+                cand.make(), self.sample, self._oracle_for(cand),
+                self.sample_spec, name=cand.label, tenant=self.tenant)))
             n -= 1
 
     def _spent(self) -> float:
@@ -296,12 +317,15 @@ class OptimizerDriver:
         return LedgerView(list(run.records)).cost(self.oracle.prices)
 
     def _predicted(self, cand) -> float:
-        return predict_sample_cost(cand, len(self.sample), self.k_s,
-                                   self.state["rate$"])
+        # per-rung rate when that rung has a completed pilot, else the
+        # global rate — a cascade rung's first pilot is predicted off the
+        # pooled rate (conservative: large-only rates overestimate it)
+        rate = self.state["rung$"].get(cand.rung, self.state["rate$"])
+        return predict_sample_cost(cand, len(self.sample), self.k_s, rate)
 
     def _submit_exec(self, cand: CandidateSpec) -> None:
         self.exec_runs.append(self.ex.submit_path(
-            cand.make(), self.keys, self.oracle, self.spec,
+            cand.make(), self.keys, self._oracle_for(cand), self.spec,
             name=f"{self.name}:exec:{cand.label}", tenant=self.tenant))
 
     # ---------------------------------------------------------------- tick
@@ -365,9 +389,16 @@ class OptimizerDriver:
         # candidate's FULL predicted sample cost fits under the cap —
         # overshoot is bounded by prediction error, not by whole
         # in-flight pilots (ROADMAP "budgeted-pilot overlap")
+        completed = [(c, self._sampled_cost(r)) for c, r in self.pilots
+                     if r.done and r.error is None]
         state["rate$"] = dollars_per_est_call(
-            [(c, self._sampled_cost(r)) for c, r in self.pilots
-             if r.done and r.error is None], len(self.sample), self.k_s)
+            completed, len(self.sample), self.k_s)
+        rungs = {c.rung for c, _cost in completed}
+        state["rung$"] = {
+            rung: dollars_per_est_call(
+                [(c, cost) for c, cost in completed if c.rung == rung],
+                len(self.sample), self.k_s)
+            for rung in rungs}
         if state["rate$"] is None:
             return                          # uncalibrated: stay serial
         committed = spent_now + sum(self._predicted(c) for c, _r in inflight)

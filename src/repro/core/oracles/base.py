@@ -55,6 +55,38 @@ class PriceSheet:
 LLAMA70B = PriceSheet(0.90, 0.90, "llama3.1-70b")
 LLAMA405B = PriceSheet(8.00, 8.00, "llama3.1-405b")
 GPT41 = PriceSheet(2.00, 8.00, "gpt-4.1")
+STABLELM2 = PriceSheet(0.07, 0.07, "stablelm2-1.6b")
+
+
+@dataclass(frozen=True)
+class TieredPrices:
+    """Per-tier price book for model-cascade execution: records tagged with a
+    ``CallRecord.tier`` are priced by that tier's sheet, untiered records
+    (``tier == ""``) by ``default``.  A LedgerView prices tier-aware books
+    record-by-record, so one shared ledger yields exact per-tier dollars."""
+
+    sheets: tuple[tuple[str, PriceSheet], ...] = ()
+    default: PriceSheet = LLAMA70B
+
+    @property
+    def name(self) -> str:
+        return self.default.name
+
+    def sheet(self, tier: str) -> PriceSheet:
+        for t, s in self.sheets:
+            if t == tier:
+                return s
+        return self.default
+
+    def record_cost(self, r: "CallRecord") -> float:
+        return self.sheet(r.tier).cost(r.input_tokens, r.output_tokens)
+
+    def cost(self, input_tokens: int, output_tokens: int) -> float:
+        """Aggregate fallback (prices untiered token totals at ``default``)."""
+        return self.default.cost(input_tokens, output_tokens)
+
+
+CASCADE_70B = TieredPrices((("draft", STABLELM2), ("large", LLAMA70B)), LLAMA70B)
 
 
 @dataclass(frozen=True)
@@ -64,6 +96,7 @@ class CallRecord:
     input_tokens: int
     output_tokens: int
     tag: str = ""
+    tier: str = ""       # "" (single-model) | "draft" | "large" (cascade)
 
 
 @dataclass
@@ -83,10 +116,16 @@ class LedgerView:
         return sum(r.output_tokens for r in self.records)
 
     def cost(self, prices: PriceSheet) -> float:
+        record_cost = getattr(prices, "record_cost", None)
+        if record_cost is not None:  # tier-aware book: price record-by-record
+            return sum(record_cost(r) for r in self.records)
         return prices.cost(self.input_tokens, self.output_tokens)
 
     def by_kind(self, kind: str) -> "LedgerView":
         return LedgerView([r for r in self.records if r.kind == kind])
+
+    def by_tier(self, tier: str) -> "LedgerView":
+        return LedgerView([r for r in self.records if r.tier == tier])
 
 
 class TokenLedger(LedgerView):
@@ -96,8 +135,9 @@ class TokenLedger(LedgerView):
         super().__init__(records=[])
 
     def charge(self, kind: str, input_tokens: int, output_tokens: int,
-               n_keys: int = 1, tag: str = "") -> None:
-        self.records.append(CallRecord(kind, n_keys, int(input_tokens), int(output_tokens), tag))
+               n_keys: int = 1, tag: str = "", tier: str = "") -> None:
+        self.records.append(CallRecord(kind, n_keys, int(input_tokens),
+                                       int(output_tokens), tag, tier))
 
     def snapshot(self) -> int:
         return len(self.records)
@@ -136,6 +176,9 @@ class Oracle(abc.ABC):
         self.ledger = TokenLedger()
         self.prices = prices
         self.costs = costs or PromptCosts()
+        # Tier stamped on every record this oracle bills ("" = single-model).
+        # Cascade oracles flip this per wave; see core/oracles/cascade.py.
+        self.bill_tier = ""
 
     # ---- verbs -----------------------------------------------------------
     @abc.abstractmethod
@@ -246,26 +289,37 @@ class Oracle(abc.ABC):
         return out
 
     # ---- billing helpers -------------------------------------------------
-    def _charge_score(self, keys: Sequence[Key], tag: str = "") -> None:
+    # ``tier=None`` bills at the oracle's ambient ``bill_tier``; cascade
+    # oracles pass an explicit tier per wave.
+    def _charge_score(self, keys: Sequence[Key], tag: str = "",
+                      tier: Optional[str] = None) -> None:
         c = self.costs
         inp = c.score_prefix + sum(k.tokens() for k in keys)
         out = c.score_out_per_key * len(keys)
-        self.ledger.charge("score", inp, out, n_keys=len(keys), tag=tag)
+        self.ledger.charge("score", inp, out, n_keys=len(keys), tag=tag,
+                           tier=self.bill_tier if tier is None else tier)
 
-    def _charge_compare(self, a: Key, b: Key, tag: str = "") -> None:
+    def _charge_compare(self, a: Key, b: Key, tag: str = "",
+                        tier: Optional[str] = None) -> None:
         c = self.costs
         self.ledger.charge("compare", c.compare_prefix + a.tokens() + b.tokens(),
-                           c.compare_out, n_keys=2, tag=tag)
+                           c.compare_out, n_keys=2, tag=tag,
+                           tier=self.bill_tier if tier is None else tier)
 
-    def _charge_rank(self, keys: Sequence[Key], tag: str = "") -> None:
+    def _charge_rank(self, keys: Sequence[Key], tag: str = "",
+                     tier: Optional[str] = None) -> None:
         c = self.costs
         inp = c.rank_prefix + sum(k.tokens() for k in keys)
         out = c.rank_out_per_key * len(keys)
-        self.ledger.charge("rank", inp, out, n_keys=len(keys), tag=tag)
+        self.ledger.charge("rank", inp, out, n_keys=len(keys), tag=tag,
+                           tier=self.bill_tier if tier is None else tier)
 
-    def _charge_inquire(self, key: Key, tag: str = "") -> None:
+    def _charge_inquire(self, key: Key, tag: str = "",
+                        tier: Optional[str] = None) -> None:
         c = self.costs
-        self.ledger.charge("inquire", c.inquire_prefix + key.tokens(), c.inquire_out, tag=tag)
+        self.ledger.charge("inquire", c.inquire_prefix + key.tokens(),
+                           c.inquire_out, tag=tag,
+                           tier=self.bill_tier if tier is None else tier)
 
     def _charge_judge(self, keys: Sequence[Key], candidates: Sequence[Sequence[Key]],
                       tag: str = "") -> int:
@@ -273,7 +327,8 @@ class Oracle(abc.ABC):
         c = self.costs
         inp = (c.judge_prefix + sum(k.tokens() for k in keys)
                + sum(3 * len(cand) for cand in candidates))  # id lists
-        self.ledger.charge("judge", inp, c.judge_out, n_keys=len(keys), tag=tag)
+        self.ledger.charge("judge", inp, c.judge_out, n_keys=len(keys), tag=tag,
+                           tier=self.bill_tier)
         return inp
 
     # ---- reporting -------------------------------------------------------

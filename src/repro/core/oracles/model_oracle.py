@@ -58,13 +58,14 @@ class ModelOracle(Oracle):
     def score_batch(self, keys: Sequence[Key], criteria: str) -> list[float]:
         inp = self.costs.score_prefix + sum(self._real_tokens(k.text) for k in keys)
         self.ledger.charge("score", inp, self.costs.score_out_per_key * len(keys),
-                           n_keys=len(keys))
+                           n_keys=len(keys), tier=self.bill_tier)
         return self.engine.score([k.text for k in keys], criteria)
 
     def compare(self, a: Key, b: Key, criteria: str) -> int:
         inp = (self.costs.compare_prefix + self._real_tokens(a.text)
                + self._real_tokens(b.text))
-        self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2)
+        self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2,
+                           tier=self.bill_tier)
         return self.engine.compare(a.text, b.text, criteria)
 
     def compare_batch(self, pairs, criteria: str) -> list[int]:
@@ -76,14 +77,15 @@ class ModelOracle(Oracle):
         for a, b in pairs:
             inp = (self.costs.compare_prefix + self._real_tokens(a.text)
                    + self._real_tokens(b.text))
-            self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2)
+            self.ledger.charge("compare", inp, self.costs.compare_out, n_keys=2,
+                               tier=self.bill_tier)
         return self.engine.compare_many(
             [(a.text, b.text) for a, b in pairs], criteria)
 
     def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
         inp = self.costs.rank_prefix + sum(self._real_tokens(k.text) for k in keys)
         self.ledger.charge("rank", inp, self.costs.rank_out_per_key * len(keys),
-                           n_keys=len(keys))
+                           n_keys=len(keys), tier=self.bill_tier)
         perm = self.engine.rank_window([k.text for k in keys], criteria)
         return [keys[i] for i in perm]
 
@@ -115,7 +117,8 @@ class ModelOracle(Oracle):
             self.ledger.charge(
                 "rank",
                 self.costs.rank_prefix + sum(self._real_tokens(k.text) for k in b),
-                self.costs.rank_out_per_key * len(b), n_keys=len(b))
+                self.costs.rank_out_per_key * len(b), n_keys=len(b),
+                tier=self.bill_tier)
         return self._split_rounds(self.engine.score(flat, criteria),
                                   batches, rank=True)
 
@@ -126,7 +129,8 @@ class ModelOracle(Oracle):
         for k in keys:
             self.ledger.charge("score",
                                self.costs.score_prefix + self._real_tokens(k.text),
-                               self.costs.score_out_per_key, n_keys=1)
+                               self.costs.score_out_per_key, n_keys=1,
+                               tier=self.bill_tier)
         return self.engine.score([k.text for k in keys], criteria)
 
     def score_batches(self, batches, criteria: str) -> list[list[float]]:
@@ -137,7 +141,7 @@ class ModelOracle(Oracle):
         for b in batches:
             inp = self.costs.score_prefix + sum(self._real_tokens(k.text) for k in b)
             self.ledger.charge("score", inp, self.costs.score_out_per_key * len(b),
-                               n_keys=len(b))
+                               n_keys=len(b), tier=self.bill_tier)
         return self._split_rounds(self.engine.score(flat, criteria),
                                   batches, rank=False)
 
@@ -179,25 +183,27 @@ class ModelOracle(Oracle):
             return self.engine.score_parts(item.text, criteria)
         return self._inquire_prompt(item, criteria)
 
-    def _charge_probe(self, kind: str, item) -> None:
+    def _charge_probe(self, kind: str, item, tier: Optional[str] = None) -> None:
         """Bill ONE per-item probe — identical record to the synchronous
-        batch verbs."""
+        batch verbs.  ``tier=None`` bills at the ambient ``bill_tier``;
+        the cascade oracle passes explicit "draft"/"large" per wave."""
+        tier = self.bill_tier if tier is None else tier
         if kind == "compare":
             a, b = item
             inp = (self.costs.compare_prefix + self._real_tokens(a.text)
                    + self._real_tokens(b.text))
             self.ledger.charge("compare", inp, self.costs.compare_out,
-                               n_keys=2)
+                               n_keys=2, tier=tier)
         elif kind == "score_each":
             self.ledger.charge(
                 "score",
                 self.costs.score_prefix + self._real_tokens(item.text),
-                self.costs.score_out_per_key, n_keys=1)
+                self.costs.score_out_per_key, n_keys=1, tier=tier)
         else:
             self.ledger.charge(
                 "inquire",
                 self.costs.inquire_prefix + self._real_tokens(item.text),
-                self.costs.inquire_out)
+                self.costs.inquire_out, tier=tier)
 
     def preview_round_prompts(self, kind: str, payload, criteria: str) -> list:
         """The prompts the NEXT ``begin_probe_round(kind, payload, ...)``
@@ -265,7 +271,7 @@ class ModelOracle(Oracle):
             for b in payload:
                 inp = prefix + sum(self._real_tokens(k.text) for k in b)
                 self.ledger.charge(bill_kind, inp, per_key * len(b),
-                                   n_keys=len(b))
+                                   n_keys=len(b), tier=self.bill_tier)
                 prompts.extend(eng.score_parts(k.text, criteria) for k in b)
             meta = [list(b) for b in payload]
         else:
@@ -340,7 +346,7 @@ class ModelOracle(Oracle):
     def inquire(self, key: Key, criteria: str) -> bool:
         self.ledger.charge("inquire",
                            self.costs.inquire_prefix + self._real_tokens(key.text),
-                           self.costs.inquire_out)
+                           self.costs.inquire_out, tier=self.bill_tier)
         return self.engine.yes_no(self._inquire_prompt(key, criteria))
 
     def inquire_batch(self, keys: Sequence[Key], criteria: str) -> list[bool]:
@@ -350,7 +356,7 @@ class ModelOracle(Oracle):
         for k in keys:
             self.ledger.charge("inquire",
                                self.costs.inquire_prefix + self._real_tokens(k.text),
-                               self.costs.inquire_out)
+                               self.costs.inquire_out, tier=self.bill_tier)
         return self.engine.yes_no_many(
             [self._inquire_prompt(k, criteria) for k in keys])
 
@@ -385,7 +391,8 @@ class ModelOracle(Oracle):
             for r in rationales:
                 self.ledger.charge("judge", 0,
                                    self._real_tokens(r) if r else 1,
-                                   n_keys=0, tag="rationale")
+                                   n_keys=0, tag="rationale",
+                                   tier=self.bill_tier)
         # score each candidate ranking as a whole via a quality probe prompt
         prompts = []
         for lst, rat in zip(listings, rationales):

@@ -95,20 +95,16 @@ class SimulatedOracle(Oracle):
         s = self.profile.score_squash
         return (1 - s) * z + s * math.tanh(z)
 
-    # -- verbs ---------------------------------------------------------------
-    def score_batch(self, keys: Sequence[Key], criteria: str) -> list[float]:
-        self._charge_score(keys)
-        m = len(keys)
-        self._maybe_invalid("score", keys, criteria, m)
-        sigma = self._point_sigma(m)
-        out = []
-        for k in keys:
-            rng = self._rng("score", k.uid, criteria, m)
-            out.append(self._squash(k.latent) + sigma * rng.standard_normal())
-        return out
+    # -- unbilled response values -------------------------------------------
+    # Each verb = one _charge_* + one _*_value.  The value methods carry the
+    # whole noise model and draw from the same rng streams, so a different
+    # biller (the cascade oracle's escalation wave) reproduces this oracle's
+    # answers byte-for-byte without double-billing.
+    def _score_value(self, k: Key, criteria: str, m: int) -> float:
+        rng = self._rng("score", k.uid, criteria, m)
+        return self._squash(k.latent) + self._point_sigma(m) * rng.standard_normal()
 
-    def compare(self, a: Key, b: Key, criteria: str) -> int:
-        self._charge_compare(a, b)
+    def _compare_value(self, a: Key, b: Key, criteria: str) -> int:
         # antisymmetric by canonical pair ordering
         lo, hi = (a, b) if a.uid <= b.uid else (b, a)
         rng = self._rng("compare", lo.uid, hi.uid, criteria)
@@ -118,11 +114,9 @@ class SimulatedOracle(Oracle):
             return 1 if a is hi or a.uid == hi.uid else -1
         return 1 if a.uid == lo.uid else -1
 
-    def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
-        self._charge_rank(keys)
-        m = len(keys)
-        self._maybe_invalid("rank", keys, criteria, m)
+    def _rank_values(self, keys: Sequence[Key], criteria: str) -> list[float]:
         p = self.profile
+        m = len(keys)
         sigma = p.listwise_noise * (1.0 + p.batch_degradation * math.log2(max(m, 1)))
         uids = tuple(k.uid for k in keys)
         noisy = []
@@ -131,13 +125,34 @@ class SimulatedOracle(Oracle):
             val = k.latent + sigma * rng.standard_normal()
             val += p.listwise_primacy * (i / max(m - 1, 1))  # primacy bias
             noisy.append(val)
-        order = np.argsort(np.asarray(noisy), kind="stable")
+        return noisy
+
+    def _inquire_value(self, key: Key, criteria: str) -> bool:
+        rng = self._rng("inquire", key.uid, criteria)
+        return bool(rng.random() < self.profile.membership_rate)
+
+    # -- verbs ---------------------------------------------------------------
+    def score_batch(self, keys: Sequence[Key], criteria: str) -> list[float]:
+        self._charge_score(keys)
+        m = len(keys)
+        self._maybe_invalid("score", keys, criteria, m)
+        return [self._score_value(k, criteria, m) for k in keys]
+
+    def compare(self, a: Key, b: Key, criteria: str) -> int:
+        self._charge_compare(a, b)
+        return self._compare_value(a, b, criteria)
+
+    def rank_batch(self, keys: Sequence[Key], criteria: str) -> list[Key]:
+        self._charge_rank(keys)
+        m = len(keys)
+        self._maybe_invalid("rank", keys, criteria, m)
+        order = np.argsort(np.asarray(self._rank_values(keys, criteria)),
+                           kind="stable")
         return [keys[i] for i in order]  # ascending criteria (worst -> best)
 
     def inquire(self, key: Key, criteria: str) -> bool:
         self._charge_inquire(key)
-        rng = self._rng("inquire", key.uid, criteria)
-        return bool(rng.random() < self.profile.membership_rate)
+        return self._inquire_value(key, criteria)
 
     def judge(self, keys: Sequence[Key], criteria: str,
               candidates: Sequence[Sequence[Key]]) -> int:

@@ -170,11 +170,30 @@ class RoundFuture:
         return self._vals
 
 
+class CascadeFuture(RoundFuture):
+    """Round future resolving in TWO waves inside one step gap: wave 1
+    answers every slot on the draft engine, then ``escalate`` (an
+    oracle-layer callback: it owns the margin rule AND the large-tier
+    billing) picks the low-confidence slots, which re-run on the large
+    engine before the future completes.  Clients see an ordinary
+    :class:`RoundFuture` — same ``done``/``result()``, same executor
+    fairness (a cascade round still resolves within one pump)."""
+
+    __slots__ = ("escalate", "escalated")
+
+    def __init__(self, n: int, escalate: Callable):
+        super().__init__(n)
+        self.escalate = escalate
+        self.escalated: set = set()
+
+
 @dataclass
 class ProbeRequest:
     """Probe work: one single-token read-out prompt.  Stand-alone probes
     (``future is None``) deliver into ``scheduler.probe_results``; round
-    members deliver into their :class:`RoundFuture` slot."""
+    members deliver into their :class:`RoundFuture` slot.  ``tier`` routes
+    the probe's engine lane: "large" (the default lane) or "draft" (wave 1
+    of a cascade round, served by ``draft_engine``)."""
     rid: int
     prompt: object           # str or (shared_prefix, per_key_suffix) pair
     logits: Optional[np.ndarray] = None
@@ -182,6 +201,7 @@ class ProbeRequest:
     slot: int = 0
     tenant: str = "default"
     wait_steps: int = 0                  # step gaps this probe was deferred
+    tier: str = "large"
 
 
 @dataclass
@@ -208,8 +228,14 @@ class BatchScheduler:
     def __init__(self, engine: ServeEngine, max_batch: int = 16,
                  paged: Optional[bool] = None,
                  probe_batch: Optional[int] = None,
-                 starvation_bound: int = 8):
+                 starvation_bound: int = 8,
+                 draft_engine: Optional[ServeEngine] = None):
         self.engine = engine
+        # optional second engine lane for model-cascade probe rounds
+        # (submit_cascade_round): wave-1 draft probes run here, sharing the
+        # work queue but NOT the large engine's KV pool — each lane owns
+        # its engine's pool/prefix cache outright
+        self.draft_engine = draft_engine
         self.max_batch = max_batch
         # multi-tenant policy: specs by name; unregistered tenants (and
         # everything, when none are registered) run as the default class —
@@ -235,6 +261,8 @@ class BatchScheduler:
         self.completed: dict[int, Request] = {}
         self.probe_results: dict[int, np.ndarray] = {}
         self.probes_deduped = 0    # duplicate prompts served by fan-out
+        self.probes_drafted = 0    # cascade wave-1 rows served by the draft
+        self.probes_escalated = 0  # cascade rows re-run on the large engine
         self.fills_serviced = 0    # PrefixFill work items serviced
         self.regions_prefetched = 0   # prefix regions ensured resident
         self.steps = 0             # unified steps taken (decode or probe-only)
@@ -325,6 +353,27 @@ class BatchScheduler:
         for i, p in enumerate(prompts):
             self.work.append(ProbeRequest(next(_ids), p, future=fut, slot=i,
                                           tenant=tenant))
+        return fut
+
+    def submit_cascade_round(self, prompts, escalate: Callable,
+                             tenant: str = "default") -> CascadeFuture:
+        """Enqueue one cascade round: every prompt enters the DRAFT lane;
+        after wave 1 resolves, ``escalate(draft_logits: {slot: logits})``
+        returns the slots to re-run on the large engine — both waves are
+        serviced in the SAME step gap, so fairness bounds match a plain
+        round.  Admission control charges the draft wave upfront;
+        escalated rows bill ``tokens_served`` as they are served (their
+        count is not knowable at submit time).  Escalations also bypass
+        per-tenant probe quotas: they belong to a unit the gap already
+        admitted."""
+        assert self.draft_engine is not None, (
+            "cascade rounds need a draft engine lane "
+            "(BatchScheduler(engine, draft_engine=...))")
+        self._check_budget(tenant, len(prompts))
+        fut = CascadeFuture(len(prompts), escalate)
+        for i, p in enumerate(prompts):
+            self.work.append(ProbeRequest(next(_ids), p, future=fut, slot=i,
+                                          tenant=tenant, tier="draft"))
         return fut
 
     def submit_prefix_fill(self, prompts) -> int:
@@ -748,7 +797,23 @@ class BatchScheduler:
         ``probes_deduped``.  Ledger billing is untouched — billing is a
         function of the logical prompt and happens at the oracle layer,
         so serving-side dedup follows the prefix-cache convention: fewer
-        forward-pass rows, identical accounting."""
+        forward-pass rows, identical accounting.
+
+        Cascade rounds run their draft wave FIRST (on the draft-engine
+        lane); their escalations join this gap's large-lane submission, so
+        both waves complete before the gap closes."""
+        draft = [w for w in pending if w.tier == "draft"]
+        if draft:
+            pending = [w for w in pending if w.tier != "draft"]
+            try:
+                pending = pending + self._run_draft_wave(draft)
+            except BaseException:
+                # the draft wave re-queued its own items; large-lane items
+                # of this drain were never touched, so they wait alongside
+                self.work[0:0] = pending
+                raise
+            if not pending:
+                return {}
         slot_of: dict[tuple, int] = {}
         uniq: list = []
         slots: list[int] = []
@@ -780,13 +845,72 @@ class BatchScheduler:
             key = id(r.future) if r.future is not None else id(r)
             if key not in rounds_seen:
                 rounds_seen.add(key)
-                ts.rounds_serviced += 1
+                # cascade rounds were counted as serviced at draft time
+                if not isinstance(r.future, CascadeFuture):
+                    ts.rounds_serviced += 1
             r.logits = logits[s]
             if r.future is not None:
                 r.future._set(r.slot, r.logits)
             else:
                 out[r.rid] = r.logits
         return out
+
+    def _run_draft_wave(self, items: list) -> list:
+        """Wave 1 of this gap's cascade rounds: one merged (deduped)
+        submission on the draft engine, then each round's ``escalate``
+        callback splits its slots — non-escalated slots resolve with their
+        draft logits, escalated slots return as fresh large-lane
+        :class:`ProbeRequest`\\ s (same prompt, same future) for the caller
+        to service in the SAME gap.  Only the engine submission is
+        retryable (re-queue + raise); a raising ``escalate`` is an
+        oracle-layer bug, not a transient."""
+        eng = self.draft_engine
+        slot_of: dict[tuple, int] = {}
+        uniq: list = []
+        slots: list[int] = []
+        for r in items:
+            key = _probe_key(r.prompt)
+            if key not in slot_of:
+                slot_of[key] = len(uniq)
+                uniq.append(r.prompt)
+            slots.append(slot_of[key])
+        try:
+            logits = eng.submit_probes(
+                uniq, max_batch=(self.probe_batch
+                                 if self.probe_batch is not None
+                                 else eng.max_probe_batch))
+        except BaseException:
+            self.work[0:0] = items
+            raise
+        self.probes_deduped += len(items) - len(uniq)
+        self.probes_drafted += len(items)
+        groups: dict[int, list] = {}
+        futs: dict[int, CascadeFuture] = {}
+        for r, s in zip(items, slots):
+            assert isinstance(r.future, CascadeFuture), \
+                "draft-tier probes exist only inside cascade rounds"
+            r.logits = logits[s]
+            ts = self._tstats(r.tenant)
+            ts.probe_rows += 1
+            ts.tokens_served += 1
+            if id(r.future) not in groups:
+                ts.rounds_serviced += 1
+            groups.setdefault(id(r.future), []).append(r)
+            futs[id(r.future)] = r.future
+        escalated: list = []
+        for fid, members in groups.items():
+            fut = futs[fid]
+            esc = set(fut.escalate({w.slot: w.logits for w in members}))
+            fut.escalated |= esc
+            for w in members:
+                if w.slot in esc:
+                    escalated.append(ProbeRequest(next(_ids), w.prompt,
+                                                  future=fut, slot=w.slot,
+                                                  tenant=w.tenant))
+                else:
+                    fut._set(w.slot, w.logits)
+        self.probes_escalated += len(escalated)
+        return escalated
 
     def _service_fills(self) -> None:
         fills = [w for w in self.work if isinstance(w, PrefixFill)]

@@ -144,6 +144,62 @@ def test_round_with_no_finish_at_all_flags():
                for f in found)
 
 
+# -------------------------------------- ledger-discipline: cascade sites
+BAD_TIER_CHARGE = """
+    def serve(self):
+        self.book.charge("compare", 10, tier="draft")
+"""
+
+GOOD_UNTIERED_CHARGE = """
+    def serve(self):
+        self.battery.charge(level=10)
+"""
+
+BAD_CASCADE_SUBMIT = """
+    def tick(self):
+        fut = self.sched.submit_cascade_round(prompts, escalate)
+"""
+
+GOOD_CASCADE_ROUND = """
+    def tick(self):
+        token = self.oracle.begin_probe_round("compare", [], "c", sched)
+        try:
+            pump()
+        finally:
+            raw = self.oracle.finish_probe_round(token, sched)
+"""
+
+
+def test_tier_tagged_charge_outside_oracles_flags():
+    # tier= on ANY .charge() receiver is a billing decision, even when the
+    # receiver is not named "ledger"
+    found = lint(BAD_TIER_CHARGE, "src/repro/serving/fixture.py")
+    assert any(f.rule == "ledger-discipline" and "tier" in f.message
+               for f in found)
+    # an unrelated charge() with no tier keyword stays silent
+    assert "ledger-discipline" not in rules_hit(
+        GOOD_UNTIERED_CHARGE, "src/repro/serving/fixture.py")
+
+
+def test_tier_tagged_charge_inside_oracles_allowed():
+    assert "ledger-discipline" not in rules_hit(
+        BAD_TIER_CHARGE, "src/repro/core/oracles/fixture.py")
+
+
+def test_submit_cascade_round_outside_oracles_flags():
+    found = lint(BAD_CASCADE_SUBMIT, "src/repro/core/executor_fixture.py")
+    assert any(f.rule == "ledger-discipline"
+               and "submit_cascade_round" in f.message for f in found)
+    assert "ledger-discipline" not in rules_hit(
+        BAD_CASCADE_SUBMIT, "src/repro/core/oracles/fixture.py")
+
+
+def test_cascade_round_pairing_covered_by_finally_invariant():
+    # deferred cascade rounds ride begin/finish_probe_round, so the
+    # existing pairing invariant covers their escalation wave too
+    assert "ledger-discipline" not in rules_hit(GOOD_CASCADE_ROUND)
+
+
 # ------------------------------------------------------------- jit-purity
 BAD_JIT_DECORATOR = """
     import time

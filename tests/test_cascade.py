@@ -1,0 +1,373 @@
+"""Model-cascade probe execution (core/oracles/cascade.py).
+
+Contracts under test (DESIGN.md "Model-cascade oracle"):
+
+ * **identity anchor** — ``threshold=inf`` is byte-identical in BOTH
+   output and ledger records to single-model large execution, across all
+   five access paths; ``threshold=0`` never escalates, so zero
+   large-tier probe records are billed;
+ * **tiered billing** — draft and escalated calls land as distinct
+   ``CallRecord`` tiers, priced per tier by :class:`TieredPrices`, with
+   exact per-query attribution (interleaved == solo);
+ * **two-lane scheduling** — ``submit_cascade_round`` runs wave 1 on the
+   draft engine and escalated rows on the large engine inside the SAME
+   round future; transient engine failures re-queue, escalation-callback
+   bugs propagate;
+ * **optimizer ladder** — ``path="auto"`` with ``ladder_thresholds``
+   explores (path, rung, threshold) candidates under one budget and is a
+   no-op for oracles without a cascade ladder.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, ladder
+from repro.core import (CASCADE_70B, LLAMA70B, REASONING, OrderQuery,
+                        SimulatedCascadeOracle, SimulatedOracle, TieredPrices,
+                        as_keys, llm_order_by, llm_order_by_many)
+from repro.core.oracles.base import STABLELM2, LedgerView
+from repro.core.oracles.cascade import probe_margin
+from repro.core.optimizer.cost_model import (CandidateSpec, default_candidates,
+                                             ladder_candidates)
+from repro.serving.scheduler import BatchScheduler, CascadeFuture
+
+ALL_PATHS = ("pointwise", "ext_pointwise", "quick", "ext_bubble", "ext_merge")
+
+
+def mk(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return as_keys([f"item {i} " + "w" * (i % 5) for i in range(n)],
+                   rng.standard_normal(n))
+
+
+# ------------------------------------------------------------ probe_margin
+def test_probe_margin_reads_the_right_token_gaps():
+    from repro.serving.engine import (TOK_A, TOK_B, TOK_HI, TOK_LO, TOK_NO,
+                                      TOK_YES)
+    l = np.zeros(128, np.float32)
+    l[TOK_A], l[TOK_B] = 3.0, -1.0
+    l[TOK_YES], l[TOK_NO] = 0.5, 2.0
+    l[TOK_HI], l[TOK_LO] = 4.0, 1.0
+    assert probe_margin("compare", l) == pytest.approx(4.0)
+    assert probe_margin("inquire", l) == pytest.approx(1.5)
+    for kind in ("score_each", "score_batches", "rank_windows"):
+        assert probe_margin(kind, l) == pytest.approx(3.0)
+
+
+# ------------------------------------------------------------ TieredPrices
+def test_tiered_prices_books_each_record_against_its_tier():
+    o = SimulatedCascadeOracle(threshold=1.0, prices=CASCADE_70B)
+    keys = mk(12, seed=3)
+    o.compare_batch([(keys[i], keys[i + 1]) for i in range(10)], "c")
+    view = LedgerView(list(o.ledger.records))
+    drafts, larges = view.by_tier("draft"), view.by_tier("large")
+    assert drafts.records and larges.records
+    expect = (STABLELM2.cost(drafts.input_tokens, drafts.output_tokens)
+              + LLAMA70B.cost(larges.input_tokens, larges.output_tokens))
+    assert view.cost(CASCADE_70B) == pytest.approx(expect)
+
+
+def test_tiered_prices_unknown_tier_falls_back_to_default():
+    tp = TieredPrices((("draft", STABLELM2),), LLAMA70B)
+    assert tp.sheet("draft") is STABLELM2
+    assert tp.sheet("") is LLAMA70B
+    assert tp.sheet("unknown") is LLAMA70B
+    # plain sheets keep the aggregate formula bit-for-bit
+    assert tp.cost(1000, 10) == LLAMA70B.cost(1000, 10)
+
+
+# ------------------------------------------------- identity anchor (inf/0)
+@pytest.mark.parametrize("path", ALL_PATHS)
+def test_escalate_all_is_byte_identical_to_large_only(path):
+    keys = mk()
+    casc = SimulatedCascadeOracle(threshold=math.inf, prices=CASCADE_70B)
+    plain = SimulatedOracle(REASONING, prices=CASCADE_70B)
+    rc, _ = llm_order_by(keys, "value", casc, path=path)
+    rp, _ = llm_order_by(keys, "value", plain, path=path)
+    assert [k.uid for k in rc.order] == [k.uid for k in rp.order]
+    assert casc.ledger.records == plain.ledger.records
+    assert rc.cost == rp.cost
+
+
+def test_threshold_zero_bills_no_large_probe_calls():
+    keys = mk(20, seed=1)
+    for path in ("pointwise", "quick"):
+        o = SimulatedCascadeOracle(threshold=0.0, prices=CASCADE_70B)
+        res, _ = llm_order_by(keys, "value", o, path=path)
+        assert sorted(k.uid for k in res.order) == sorted(k.uid for k in keys)
+        assert all(r.tier == "draft" for r in o.ledger.records)
+
+
+def test_escalations_monotone_in_threshold():
+    keys = mk(16, seed=2)
+    pairs = [(keys[i], keys[i + 1]) for i in range(15)]
+
+    def non_draft_records(threshold):
+        # records billed at large quality: tier="large" escalations in
+        # cascade mode, untiered records in inf-passthrough (the identity
+        # anchor bills exactly like single-model execution)
+        o = SimulatedCascadeOracle(threshold=threshold, prices=CASCADE_70B)
+        o.compare_batch(pairs, "c")
+        o.score_batch(keys, "c")
+        return sum(1 for r in o.ledger.records if r.tier != "draft")
+
+    counts = [non_draft_records(t) for t in (0.0, 0.5, 2.0, math.inf)]
+    assert counts[0] == 0
+    assert counts == sorted(counts)
+    assert counts[-1] > 0
+
+
+def test_at_threshold_view_shares_the_ledger():
+    o = SimulatedCascadeOracle(threshold=math.inf, prices=CASCADE_70B)
+    rung = o.at_threshold(0.75)
+    assert rung.ledger is o.ledger
+    assert rung.threshold == 0.75 and o.threshold == math.inf
+    keys = mk(6, seed=4)
+    rung.compare(keys[0], keys[1], "c")
+    assert o.ledger.records                 # rung spend lands in one book
+
+
+# ----------------------------------------------- per-query attribution
+def test_interleaved_cascade_queries_match_solo_ledgers():
+    keys = mk(18, seed=5)
+    crits = ("positivity", "relevance")
+
+    def solo(crit):
+        o = SimulatedCascadeOracle(threshold=1.0, prices=CASCADE_70B)
+        res, _ = llm_order_by(keys, crit, o, path="quick")
+        return res, list(o.ledger.records)
+
+    solos = [solo(c) for c in crits]
+    oracles = [SimulatedCascadeOracle(threshold=1.0, prices=CASCADE_70B)
+               for _ in crits]
+    many = llm_order_by_many([
+        OrderQuery(keys=keys, criteria=c, oracle=o, path="quick")
+        for c, o in zip(crits, oracles)])
+    for (sres, srecs), mres, o in zip(solos, many, oracles):
+        assert [k.uid for k in mres.order] == [k.uid for k in sres.order]
+        assert list(o.ledger.records) == srecs
+        assert mres.cost == sres.cost
+
+
+# ------------------------------------------------------- optimizer ladder
+def test_ladder_candidates_expand_pool_with_threshold_variants():
+    pool = default_candidates()
+    out = ladder_candidates(pool, [0.5, 2.0])
+    assert len(out) == 3 * len(pool)
+    labels = {c.label for c in out}
+    assert "quick@t0.5" in labels and "ext_merge_4@t2" in labels
+    t = next(c for c in out if c.label == "quick@t0.5")
+    assert t.threshold == 0.5 and t.rung == "t0.5"
+    assert CandidateSpec("quick", threshold=2.0).comparison_based
+
+
+def test_auto_path_explores_the_ladder_under_one_budget():
+    keys = mk(30, seed=6)
+    o = SimulatedCascadeOracle(prices=CASCADE_70B)   # passthrough base
+    res, rep = llm_order_by(keys, "value", o, path="auto", sample_size=10,
+                            budget=0.05, ladder_thresholds=[0.5, 2.0])
+    assert sorted(k.uid for k in res.order) == sorted(k.uid for k in keys)
+    sampled = set(rep.est_costs)
+    assert any("@t0.5" in l for l in sampled)
+    assert any("@t" not in l for l in sampled)
+    # cascade variants of a path must estimate cheaper than large-only:
+    # drafts answer at the draft sheet and only low-margin rows re-bill
+    for label in sampled:
+        if "@t0.5" in label and label.split("@")[0] in sampled:
+            assert rep.est_costs[label] < rep.est_costs[label.split("@")[0]]
+    # the winner actually executed: total cost includes its full run
+    assert rep.total_cost > rep.optimizer_cost >= 0
+
+
+def test_ladder_ignored_without_cascade_oracle():
+    keys = mk(20, seed=7)
+    o = SimulatedOracle(REASONING)
+    _res, rep = llm_order_by(keys, "value", o, path="auto", sample_size=8,
+                             ladder_thresholds=[0.5])
+    assert all("@t" not in l for l in rep.est_costs)
+
+
+def test_ladder_rides_llm_order_by_many():
+    keys = mk(24, seed=8)
+    o = SimulatedCascadeOracle(prices=CASCADE_70B)
+    q = OrderQuery(keys=keys, criteria="value", oracle=o, path="auto",
+                   sample_size=8, budget=0.05, ladder_thresholds=[0.5])
+    (res,) = llm_order_by_many([q])
+    assert sorted(k.uid for k in res.order) == sorted(k.uid for k in keys)
+    assert any("@t0.5" in l for l in q.report.est_costs)
+
+
+# --------------------------------------------- scheduler: two engine lanes
+class _TierEngine:
+    """Fake engine tagging every logits row with its lane level."""
+
+    paged_enabled = False
+    max_probe_batch = 256
+
+    def __init__(self, level):
+        self.level = float(level)
+        self.submitted = []
+        self.fail_next = 0
+
+    def submit_probes(self, prompts, max_batch=None):
+        if self.fail_next:
+            self.fail_next -= 1
+            raise RuntimeError("transient engine failure")
+        self.submitted.append(list(prompts))
+        out = np.zeros((len(prompts), 4), np.float32)
+        for i, p in enumerate(prompts):
+            out[i, 0] = self.level
+            out[i, 1] = float(len(p))
+        return out
+
+
+def _two_lane():
+    draft, large = _TierEngine(1), _TierEngine(2)
+    return BatchScheduler(large, draft_engine=draft), draft, large
+
+
+def test_cascade_round_splits_waves_across_lanes():
+    sched, draft, large = _two_lane()
+    fut = sched.submit_cascade_round(
+        ["a", "bb", "ccc", "dddd"],
+        lambda logits: {s for s, l in logits.items() if l[1] % 2 == 0})
+    assert isinstance(fut, CascadeFuture) and not fut.done
+    sched.pump()
+    assert fut.done and fut.escalated == {1, 3}
+    rows = fut.result()
+    assert [r[0] for r in rows] == [1.0, 2.0, 1.0, 2.0]  # draft/large mix
+    assert draft.submitted == [["a", "bb", "ccc", "dddd"]]
+    assert large.submitted == [["bb", "dddd"]]           # escalations only
+    assert sched.probes_drafted == 4 and sched.probes_escalated == 2
+
+
+def test_escalations_join_the_same_gap_as_plain_rounds():
+    sched, draft, large = _two_lane()
+    casc = sched.submit_cascade_round(
+        ["aa", "bbb"], lambda logits: set(logits))     # escalate-all
+    plain = sched.submit_probe_round(["zzzz"])
+    sched.pump()
+    assert casc.done and plain.done
+    # ONE merged large-lane submission served the plain round AND wave 2
+    assert len(large.submitted) == 1
+    assert set(large.submitted[0]) == {"aa", "bbb", "zzzz"}
+    assert [r[0] for r in casc.result()] == [2.0, 2.0]
+
+
+def test_draft_wave_failure_requeues_and_retries():
+    sched, draft, large = _two_lane()
+    fut = sched.submit_cascade_round(["a", "bb"], lambda logits: set())
+    draft.fail_next = 1
+    with pytest.raises(RuntimeError, match="transient"):
+        sched.pump()
+    assert len(sched.probe_queue) == 2      # both rows back in the queue
+    sched.pump()                            # retry succeeds
+    assert fut.done and [r[0] for r in fut.result()] == [1.0, 1.0]
+
+
+def test_raising_escalate_callback_propagates():
+    sched, _draft, _large = _two_lane()
+
+    def bad(_logits):
+        raise ValueError("oracle-layer bug")
+
+    sched.submit_cascade_round(["a"], bad)
+    with pytest.raises(ValueError, match="oracle-layer bug"):
+        sched.pump()
+
+
+def test_cascade_round_requires_a_draft_lane():
+    sched = BatchScheduler(_TierEngine(2))
+    with pytest.raises(AssertionError):
+        sched.submit_cascade_round(["a"], lambda logits: set())
+
+
+# ------------------------------------------------------- configs ladder
+def test_registry_ladder_rungs_are_known_archs_smallest_first():
+    rungs = ladder()
+    assert len(rungs) >= 2
+    assert all(r in ARCH_IDS for r in rungs)
+    assert rungs[0] == "stablelm-1.6b"
+
+
+def test_registry_ladder_rungs_all_instantiate_reduced_configs():
+    from repro.configs import get_reduced
+    for arch in ladder():
+        cfg = get_reduced(arch)
+        assert cfg.n_layers >= 1 and cfg.vocab_size >= 256
+
+
+# ------------------------------------------- slow: real two-engine cascade
+@pytest.fixture(scope="module")
+def tier_engines():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+
+    def build(arch, seed):
+        lm = LM(get_reduced(arch))
+        return ServeEngine(lm, lm.init(jax.random.PRNGKey(seed)),
+                           max_new_tokens=8)
+
+    rungs = ladder()
+    return build(rungs[0], 0), build(rungs[1], 1)   # (draft, large)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("path", ("pointwise", "quick"))
+def test_real_escalate_all_identity(tier_engines, path):
+    from repro.core.oracles.cascade import CascadeOracle
+    from repro.core.oracles.model_oracle import ModelOracle
+    draft, large = tier_engines
+    keys = mk(6, seed=9)
+    casc = CascadeOracle(large, draft_engine=draft, threshold=math.inf,
+                         prices=CASCADE_70B)
+    plain = ModelOracle(large, prices=CASCADE_70B)
+    rc, _ = llm_order_by(keys, "value", casc, path=path)
+    rp, _ = llm_order_by(keys, "value", plain, path=path)
+    assert [k.uid for k in rc.order] == [k.uid for k in rp.order]
+    assert casc.ledger.records == plain.ledger.records
+    assert rc.cost == rp.cost
+
+
+@pytest.mark.slow
+def test_real_calibrated_cascade_bills_both_tiers(tier_engines):
+    from repro.core.oracles.cascade import CascadeOracle
+    draft, large = tier_engines
+    keys = mk(8, seed=10)
+    casc = CascadeOracle(large, draft_engine=draft, prices=CASCADE_70B)
+    t = casc.calibrate_threshold(keys, "value", quantile=0.9)
+    assert casc.threshold == t and casc._cascading
+    res, _ = llm_order_by(keys, "value", casc, path="quick")
+    assert sorted(k.uid for k in res.order) == sorted(k.uid for k in keys)
+    view = LedgerView(list(casc.ledger.records))
+    assert view.by_tier("draft").records
+    assert view.by_tier("large").records    # 0.9-quantile: most escalate
+    assert len(view.by_tier("large").records) <= \
+        len(view.by_tier("draft").records)
+
+
+@pytest.mark.slow
+def test_real_deferred_cascade_matches_sync(tier_engines):
+    """The deferred two-wave round (begin → submit_cascade_round →
+    escalate callback → finish) produces the SAME answers and the SAME
+    ledger record sequence as the synchronous verbs."""
+    from repro.core.oracles.cascade import CascadeOracle
+    draft, large = tier_engines
+    keys = mk(8, seed=11)
+    probe = CascadeOracle(large, draft_engine=draft, prices=CASCADE_70B)
+    t = probe.calibrate_threshold(keys, "value", quantile=0.5)
+
+    sync = CascadeOracle(large, draft_engine=draft, threshold=t,
+                         prices=CASCADE_70B)
+    rs, _ = llm_order_by(keys, "value", sync, path="quick")
+
+    deferred = CascadeOracle(large, draft_engine=draft, threshold=t,
+                             prices=CASCADE_70B)
+    (rd,) = llm_order_by_many([OrderQuery(keys=keys, criteria="value",
+                                          oracle=deferred, path="quick")])
+    assert [k.uid for k in rd.order] == [k.uid for k in rs.order]
+    assert list(deferred.ledger.records) == list(sync.ledger.records)
+    assert rd.cost == rs.cost
