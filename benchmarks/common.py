@@ -52,6 +52,34 @@ def run_optimizer(task: RankingTask, strategy: str = "borda",
                   res.n_calls, dt, label=strategy), rep
 
 
+class decode_timing:
+    """Context manager timing a serving-engine drive: wall-clock seconds,
+    decode tokens emitted inside the block, and decode tokens/s — the ONE
+    throughput read-out shared by table8 (co-scheduling) and table12
+    (sharded serving), so their artifacts cannot drift apart.
+
+        with decode_timing(engine) as dt:
+            ... drive the engine ...
+        dt.seconds / dt.decode_tokens / dt.tokens_per_s
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def __enter__(self) -> "decode_timing":
+        self._tok0 = self.engine.stats.decode_tokens
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        dt = time.perf_counter() - self._t0
+        self.seconds = round(dt, 3)
+        self.decode_tokens = self.engine.stats.decode_tokens - self._tok0
+        self.tokens_per_s = (round(self.decode_tokens / dt, 1) if dt > 0
+                             else 0.0)
+        return False
+
+
 def emit(rows: list[tuple]) -> None:
     for r in rows:
         print(",".join(str(x) for x in r))

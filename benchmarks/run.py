@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table/figure (tables 1-3 and
-the figures reproduce the paper; tables 4-10 track this repo's serving
+the figures reproduce the paper; tables 4-12 track this repo's serving
 stack: round batching, prefix-KV cache, paged decode, the probe-plan
-executor, unified-loop co-scheduling, locality scheduling, and
-multi-tenant priority/preemption).  Prints CSV.
+executor, unified-loop co-scheduling, locality scheduling, multi-tenant
+priority/preemption, model cascades, and sharded serving).  Prints CSV.
+Note: importing table12 forces an 8-device CPU backend (XLA_FLAGS) so the
+mesh suites are runnable; single-device suites are unaffected.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1 fig3
@@ -18,7 +20,7 @@ from . import (fig1_scaling, fig2_no_universal, fig3_optimizer, fig5_budget,
                roofline, table1_calls, table2_cost_est, table3_samples,
                table4_submissions, table5_prefix_cache, table6_paged_decode,
                table7_executor, table8_cosched, table9_locality,
-               table10_tenancy, table11_cascade)
+               table10_tenancy, table11_cascade, table12_sharding)
 
 SUITES = {
     "table1": table1_calls.main,       # LLM-call complexity
@@ -37,6 +39,7 @@ SUITES = {
     "table9": table9_locality.main,       # locality scheduling + memo
     "table10": table10_tenancy.main,      # priority classes + preemption
     "table11": table11_cascade.main,      # model-cascade probe execution
+    "table12": table12_sharding.main,     # sharded serving (forced 8-dev mesh)
 }
 
 

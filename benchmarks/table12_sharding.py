@@ -1,0 +1,248 @@
+"""Table 12 (repo-specific): sharded serving — mesh-parallel paged decode +
+data-parallel probe rounds, with identity back to the single-device engine.
+
+A forced 8-device CPU backend (``--xla_force_host_platform_device_count=8``,
+set below before jax initializes) stands in for a real pod, so mesh scaling
+is testable in CI without a TPU.  For each mesh shape in {1x1, 4x2, 8x1}
+(data x model) the SAME mixed workload as table 8 — a judge-rationale
+generate stream co-scheduled with an LLM ORDER BY query through one
+``BatchScheduler`` step loop — runs on a ``ServeEngine(mesh=...)`` and is
+compared against the unsharded engine:
+
+ * **model == 1 shapes (1x1, 8x1)** assert FULL identity: generate outputs
+   token-identical (``==``), the query's order and per-query ledger
+   byte-identical, and probe logits bitwise equal.  Data-parallel row
+   slicing never reduces across devices — each shard computes a contiguous
+   row slice and the host-side gather reassembles — so the same row-count
+   independence behind the repo-wide batched==sequential contract makes
+   sharded execution exact.
+ * **model > 1 (4x2)** asserts probe logits within the documented
+   tensor-parallel tolerance (``TP_PSUM_RTOL/ATOL``: the row-parallel
+   wo/w_down contractions become psums whose reduction order differs from
+   the single-device dot — ~1 bf16 ulp through the residual stream).
+   Greedy decode can flip a near-tie token under that drift, so
+   generate/order/ledger agreement is REPORTED per run, not asserted —
+   the same contract stance as the Pallas kernel's allclose switch.
+
+The PERF claim is the data-parallel probe slicing: on the 8x1 mesh the same
+probe round is timed with row slicing on (each shard runs 1/8 of the rows)
+vs off (``dp_probe_slices=False`` — every shard recomputes ALL rows), and
+the sliced-over-replicated wall-clock ratio is asserted under a
+conservative floor.  This comparison is hardware-independent — both sides
+run on the same 8-device mesh, the sliced program simply does 1/8 the
+per-device work — unlike sharded-vs-1-device wall-clock, which on a
+single-core CPU host cannot speed up and is REPORTED only (same caveat as
+table 8's scheduling-latency-not-seconds framing).  Decode tokens/s per
+shape comes from ``benchmarks.common.decode_timing``, shared with table 8.
+
+    PYTHONPATH=src python -m benchmarks.table12_sharding [--json OUT]
+"""
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import PathParams, ProbePlanExecutor, as_keys, make_path
+from repro.core.executor import plan_sort_result
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.core.types import SortSpec
+
+from .common import decode_timing, emit, parse_json_flag
+
+MAX_NEW = 16
+N_GEN = 8                  # generate requests in the mixed workload
+N_KEYS = 16                # ORDER BY keys
+SHAPES = [(1, 1), (4, 2), (8, 1)]     # (data, model)
+# sliced probe rounds must beat replicated rounds on the same mesh by at
+# least this factor; the arithmetic bound is shards x less per-device work
+# (0.125 at 8 shards), measured ~0.5 with dispatch overhead — 0.7 leaves
+# conservative headroom while still proving the split is real
+SLICED_RATIO_FLOOR = 0.7
+PROBE_REPEATS = 5
+
+
+def _build(mesh=None, dp: bool = True):
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    cfg = get_reduced("llama3-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return ServeEngine(lm, params, max_new_tokens=MAX_NEW,
+                       max_decode_rows=8, mesh=mesh, dp_probe_slices=dp)
+
+
+def _workload():
+    rng = np.random.default_rng(0)
+    prompts, limits = [], []
+    for i in range(N_GEN):
+        body = "criteria compliance of candidate ranking " + "x" * int(
+            rng.integers(0, 40))
+        prompts.append(f"Judge {i}: {body}\nVerdict:")
+        limits.append(MAX_NEW if i % 4 == 3 else int(rng.integers(2, 5)))
+    keys = as_keys([f"doc {'q' * (i % 5)} {i:03d}" for i in range(N_KEYS)],
+                   list(rng.standard_normal(N_KEYS)))
+    return prompts, limits, keys, SortSpec("relevance", True, 8)
+
+
+def _ledger(oracle):
+    return (oracle.ledger.n_calls, oracle.ledger.input_tokens,
+            oracle.ledger.output_tokens, list(oracle.ledger.records))
+
+
+def _run_mixed(eng) -> dict:
+    """Table 8's unified co-scheduled workload, small: generates and an
+    ORDER BY query drive ONE live step loop."""
+    from repro.serving import BatchScheduler
+    prompts, limits, keys, spec = _workload()
+    sched = BatchScheduler(eng, max_batch=8)
+    oracle = ModelOracle(eng, scheduler=sched)
+    rids = [sched.submit(p, l) for p, l in zip(prompts, limits)]
+    ex = ProbePlanExecutor(scheduler=sched)
+    run = ex.submit_path(make_path("quick", PathParams(batch_size=4)),
+                         keys, oracle, spec, name="orderby")
+    with decode_timing(eng) as dt:
+        while sched.work_remaining or not run.done:
+            if not run.done:
+                ex.tick()
+            else:
+                sched.step()
+    res = plan_sort_result(run, spec, len(keys), oracle.prices)
+    return dict(outputs=[sched.completed[r].output for r in rids],
+                order=[k.text for k in res.order], ledger=_ledger(oracle),
+                timing=dt)
+
+
+def _probe_prompts():
+    return [(f"Criteria: relevance\nItem:", f" candidate passage {i:03d}\n"
+             f"Rating:") for i in range(32)]
+
+
+def _probe_round_s(eng) -> float:
+    """Median wall-clock of one warmed 32-row probe-round submission."""
+    prompts = _probe_prompts()
+    eng.submit_probes(prompts)                      # compile + warm
+    samples = []
+    for _ in range(PROBE_REPEATS):
+        t0 = time.perf_counter()
+        eng.submit_probes(prompts)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def run() -> tuple[list[dict], dict]:
+    import jax
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving.engine import TP_PSUM_ATOL, TP_PSUM_RTOL
+
+    base = _build()
+    ref = _run_mixed(base)
+    ref_probe = base.submit_probes(_probe_prompts())
+    base_round_s = _probe_round_s(base)
+    base.clear_prefix_cache()      # LRU-pinned runs are occupancy, not leaks
+    assert base.pool.blocks_in_use == 0, "baseline leaked pool blocks"
+
+    have = jax.device_count()
+    rows: list[dict] = []
+    for data, model in SHAPES:
+        if data * model > have:
+            rows.append(dict(mesh=f"{data}x{model}", skipped=True,
+                             note=f"needs {data * model} devices, "
+                                  f"{have} visible (backend initialized "
+                                  f"before the force flag?)"))
+            continue
+        eng = _build(mesh=make_local_mesh(data, model))
+        got = _run_mixed(eng)
+        probe = eng.submit_probes(_probe_prompts())
+        round_s = _probe_round_s(eng)
+        eng.clear_prefix_cache()
+        assert eng.pool.blocks_in_use == 0, \
+            f"{data}x{model} leaked pool blocks"
+
+        gen_ok = got["outputs"] == ref["outputs"]
+        order_ok = got["order"] == ref["order"]
+        ledger_ok = got["ledger"] == ref["ledger"]
+        probe_bitwise = bool(np.array_equal(ref_probe, probe))
+        argmax_agree = float(
+            (ref_probe.argmax(-1) == probe.argmax(-1)).mean())
+        if model == 1:
+            # pure data parallelism: nothing reduces across devices, so
+            # the sharded engine is BITWISE the single-device engine
+            assert gen_ok and order_ok and ledger_ok and probe_bitwise, (
+                f"{data}x{model}: expected full bitwise identity "
+                f"(gen={gen_ok} order={order_ok} ledger={ledger_ok} "
+                f"probe={probe_bitwise})")
+        else:
+            np.testing.assert_allclose(probe, ref_probe,
+                                       rtol=TP_PSUM_RTOL,
+                                       atol=TP_PSUM_ATOL)
+        rows.append(dict(
+            mesh=f"{data}x{model}", decode_tokens=got["timing"].decode_tokens,
+            decode_tokens_per_s=got["timing"].tokens_per_s,
+            wall_s=got["timing"].seconds,
+            probe_round_ms=round(round_s * 1e3, 1),
+            dp_sharded=eng.stats.dp_sharded_submissions,
+            dp_replicated=eng.stats.dp_replicated_submissions,
+            gen_identical=gen_ok, order_identical=order_ok,
+            ledger_identical=ledger_ok, probe_bitwise=probe_bitwise,
+            probe_argmax_agreement=argmax_agree))
+
+    # THE perf assertion: sliced vs replicated probe rounds, same 8x1 mesh
+    ratio_row: dict = {}
+    if have >= 8:
+        mesh = make_local_mesh(8, 1)
+        sliced_s = _probe_round_s(_build(mesh=mesh, dp=True))
+        repl_s = _probe_round_s(_build(mesh=mesh, dp=False))
+        ratio = sliced_s / repl_s
+        assert ratio <= SLICED_RATIO_FLOOR, (
+            f"data-parallel probe slicing must cut per-round wall-clock: "
+            f"sliced {sliced_s * 1e3:.1f}ms / replicated "
+            f"{repl_s * 1e3:.1f}ms = {ratio:.2f} > {SLICED_RATIO_FLOOR}")
+        ratio_row = dict(sliced_ms=round(sliced_s * 1e3, 1),
+                         replicated_ms=round(repl_s * 1e3, 1),
+                         ratio=round(ratio, 3),
+                         floor=SLICED_RATIO_FLOOR)
+    meta = dict(devices=have, baseline_probe_round_ms=round(
+        base_round_s * 1e3, 1), baseline_decode_tokens_per_s=ref[
+        "timing"].tokens_per_s, sliced_vs_replicated=ratio_row)
+    return rows, meta
+
+
+def main(argv=None) -> None:
+    argv, json_out = parse_json_flag(
+        argv if argv is not None else sys.argv[1:])
+    rows, meta = run()
+    emit([("mesh", "decode_tok_per_s", "probe_round_ms", "dp_sharded",
+           "gen_id", "order_id", "ledger_id", "probe_bitwise")])
+    for r in rows:
+        if r.get("skipped"):
+            emit([(r["mesh"], "SKIPPED", r["note"], "", "", "", "", "")])
+            continue
+        emit([(r["mesh"], r["decode_tokens_per_s"], r["probe_round_ms"],
+               r["dp_sharded"], r["gen_identical"], r["order_identical"],
+               r["ledger_identical"], r["probe_bitwise"])])
+    if meta["sliced_vs_replicated"]:
+        sv = meta["sliced_vs_replicated"]
+        print(f"sliced {sv['sliced_ms']}ms vs replicated "
+              f"{sv['replicated_ms']}ms -> ratio {sv['ratio']} "
+              f"(floor {sv['floor']})")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(dict(rows=rows, meta=meta), f, indent=2, default=str)
+        print(f"wrote {json_out}")
+
+
+if __name__ == "__main__":
+    main()

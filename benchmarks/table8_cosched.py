@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import json
 import sys
-import time
 
 import numpy as np
 
@@ -45,6 +44,8 @@ from repro.core import PathParams, ProbePlanExecutor, as_keys, make_path
 from repro.core.executor import plan_sort_result
 from repro.core.oracles.model_oracle import ModelOracle
 from repro.core.types import SortSpec
+
+from .common import decode_timing
 
 MAX_NEW = 24
 SUBMIT_AT = 3          # drain step at which the ORDER BY query arrives
@@ -96,25 +97,22 @@ def run_unified(eng, prompts, limits, keys, spec) -> dict:
     ap = make_path("quick", PathParams(batch_size=4))
     run = None
     latencies: list[int] = []
-    tok0 = eng.stats.decode_tokens
-    t0 = time.perf_counter()
-    while sched.work_remaining or run is None or not run.done:
-        if run is None and sched.steps >= SUBMIT_AT:
-            run = ex.submit_path(ap, keys, oracle, spec, name="orderby")
-        if run is not None and not run.done:
-            s0 = sched.steps
-            ex.tick()        # begins the plan's round, pumps ONE step
-            latencies.append(sched.steps - s0)
-        else:
-            sched.step()
-    dt = time.perf_counter() - t0
+    with decode_timing(eng) as dt:
+        while sched.work_remaining or run is None or not run.done:
+            if run is None and sched.steps >= SUBMIT_AT:
+                run = ex.submit_path(ap, keys, oracle, spec, name="orderby")
+            if run is not None and not run.done:
+                s0 = sched.steps
+                ex.tick()        # begins the plan's round, pumps ONE step
+                latencies.append(sched.steps - s0)
+            else:
+                sched.step()
     res = plan_sort_result(run, spec, len(keys), oracle.prices)
     outs = [sched.completed[r].output for r in rids]
     return dict(outputs=outs, result=res, oracle=oracle,
                 latencies=latencies, total_steps=sched.steps,
-                seconds=round(dt, 3),
-                decode_tokens=eng.stats.decode_tokens - tok0,
-                tokens_per_s=round((eng.stats.decode_tokens - tok0) / dt, 1))
+                seconds=dt.seconds, decode_tokens=dt.decode_tokens,
+                tokens_per_s=dt.tokens_per_s)
 
 
 def run_alternating(eng, prompts, limits, keys, spec) -> dict:
@@ -125,27 +123,24 @@ def run_alternating(eng, prompts, limits, keys, spec) -> dict:
     sched = BatchScheduler(eng, max_batch=8)
     oracle = ModelOracle(eng)
     rids = [sched.submit(p, l) for p, l in zip(prompts, limits)]
-    tok0 = eng.stats.decode_tokens
-    t0 = time.perf_counter()
-    drained = sched.run()
-    drain_steps = sched.steps
-    ex = ProbePlanExecutor(scheduler=sched)
-    run = ex.submit_path(make_path("quick", PathParams(batch_size=4)),
-                         keys, oracle, spec, name="orderby")
-    ticks = 0
-    while not run.done:
-        ex.tick()
-        ticks += 1
-    dt = time.perf_counter() - t0
+    with decode_timing(eng) as dt:
+        drained = sched.run()
+        drain_steps = sched.steps
+        ex = ProbePlanExecutor(scheduler=sched)
+        run = ex.submit_path(make_path("quick", PathParams(batch_size=4)),
+                             keys, oracle, spec, name="orderby")
+        ticks = 0
+        while not run.done:
+            ex.tick()
+            ticks += 1
     res = plan_sort_result(run, spec, len(keys), oracle.prices)
     # the first round's completion latency in decode steps: the remaining
     # drain it had to wait out, plus its own service step
     first_latency = (drain_steps - SUBMIT_AT) + 1
     return dict(outputs=[drained[r] for r in rids], result=res,
                 oracle=oracle, first_latency=first_latency,
-                drain_steps=drain_steps, ticks=ticks, seconds=round(dt, 3),
-                decode_tokens=eng.stats.decode_tokens - tok0,
-                tokens_per_s=round((eng.stats.decode_tokens - tok0) / dt, 1))
+                drain_steps=drain_steps, ticks=ticks, seconds=dt.seconds,
+                decode_tokens=dt.decode_tokens, tokens_per_s=dt.tokens_per_s)
 
 
 def run(sizes: list[int]) -> list[dict]:

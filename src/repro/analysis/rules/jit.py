@@ -12,9 +12,25 @@ mistake never reaches a device.
 Resolution is same-module and syntactic: decorator forms ``@jax.jit``,
 ``@partial(jax.jit, ...)`` (including aliased ``@_partial(_shard_map, ...)``
 as in models/moe.py), and call forms ``jit(f)`` / ``pl.pallas_call(k, ...)``
-where ``f`` is a local ``def``/``lambda`` or ``partial`` thereof.  Callees
-we cannot resolve (bound methods like ``lm.prefill``) are skipped — a
-documented limitation, not a pass.
+where ``f`` is a local ``def``/``lambda``, a ``partial`` thereof, or a name
+ASSIGNED from such a ``partial`` — which covers the serving engine's
+mesh-jitted closures (``jax.jit(_decode_paged_sharded, ...)``: a local def
+wrapping the model call in a ``shard_context``).  Callees we cannot resolve
+(bound methods like ``lm.prefill``) are skipped — a documented limitation,
+not a pass.
+
+Donation pairing: every wrapper call with a ``donate_argnums`` keyword the
+rule can resolve to literal indices (literal tuple/int, or a name assigned
+one — the engine's ``donate = (1,)``) is checked against what it donates.
+A resolvable local def must donate a parameter whose NAME reads as a
+reusable device buffer (arena/cache/state — the serving arenas and the
+train loop's optimizer state); donating ``params`` or a token batch
+invalidates the caller's copy mid-flight.  Method references are checked by
+name: ``decode_step_paged``/``decode_step`` may donate exactly their
+arena/cache argument (argnum 1), while ``prefill``/``prefill_cont`` must
+never donate — prefix-cache entries alias their output caches.  Computed
+donate expressions (ternaries, ``**kw``) are skipped like unresolvable
+callees.
 """
 from __future__ import annotations
 
@@ -28,6 +44,16 @@ WRAPPERS = frozenset({"jit", "pallas_call", "shard_map"})
 BANNED_BARE = frozenset({"print", "input", "breakpoint"})
 DATETIME_NOW = frozenset({"now", "utcnow", "today"})
 
+# donation pairing: method-name contracts for the serving/dryrun jits.  The
+# VALUE is the set of argnums that hold the donatable arena/cache pytree.
+DONATABLE_METHODS = {"decode_step_paged": frozenset({1}),
+                     "decode_step": frozenset({1})}
+# prefill outputs are aliased by prefix-cache entries (engine LRU holds
+# direct references): donating their inputs/outputs is always a bug
+NON_DONATABLE_METHODS = frozenset({"prefill", "prefill_cont"})
+# a donated local-def parameter must read as a reusable device buffer
+DONATABLE_PARAM_HINTS = ("arena", "cache", "state")
+
 
 class JitPurityRule(Rule):
     id = "jit-purity"
@@ -37,6 +63,7 @@ class JitPurityRule(Rule):
 
     def check(self, mod: ModuleSource) -> Iterable[Finding]:
         defs = _local_defs(mod.tree)
+        consts = _const_assigns(mod.tree)
         seen = set()
         targets = []
 
@@ -49,12 +76,53 @@ class JitPurityRule(Rule):
                 fn = _resolve(node.args[0], defs)
                 if fn is not None:
                     targets.append(fn)
+                yield from self._check_donation(mod, node, defs, consts)
 
         for fn in targets:
             if id(fn) in seen:
                 continue
             seen.add(id(fn))
             yield from self._check_body(mod, fn)
+
+    def _check_donation(self, mod: ModuleSource, call: ast.Call,
+                        defs: dict, consts: dict) -> Iterable[Finding]:
+        kw = next((k for k in call.keywords
+                   if k.arg == "donate_argnums"), None)
+        if kw is None:
+            return
+        idxs = _const_tuple(kw.value, consts)
+        if idxs is None:       # ternary / computed — skipped, not a pass
+            return
+        fn = _resolve(call.args[0], defs)
+        if fn is not None:
+            params = [a.arg for a in fn.args.args]
+            label = getattr(fn, "name", "<lambda>")
+            for i in idxs:
+                pname = params[i] if 0 <= i < len(params) else None
+                if pname is None or not any(
+                        h in pname.lower() for h in DONATABLE_PARAM_HINTS):
+                    yield self.finding(
+                        mod, call,
+                        f"donate_argnums={tuple(idxs)} on '{label}' donates "
+                        f"parameter {pname!r}, which does not look like a "
+                        f"reusable arena/cache/state buffer — donation "
+                        f"invalidates the caller's copy")
+            return
+        mname = _method_name(call.args[0])
+        if mname is None:
+            return
+        if mname in NON_DONATABLE_METHODS and idxs:
+            yield self.finding(
+                mod, call,
+                f"donating into '{mname}' — prefill caches are aliased by "
+                f"prefix-cache entries and must never be donated")
+        elif mname in DONATABLE_METHODS:
+            bad = set(idxs) - DONATABLE_METHODS[mname]
+            if bad:
+                yield self.finding(
+                    mod, call,
+                    f"'{mname}' may only donate its arena argument (argnums "
+                    f"{sorted(DONATABLE_METHODS[mname])}), got {tuple(idxs)}")
 
     def _check_body(self, mod: ModuleSource, fn) -> Iterable[Finding]:
         label = getattr(fn, "name", "<lambda>")
@@ -105,6 +173,7 @@ def _is_wrapper_decorator(dec: ast.expr) -> bool:
 
 def _local_defs(tree: ast.AST) -> dict:
     defs = {}
+    pending = []          # names assigned from partial(...): resolve after
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             defs[node.name] = node
@@ -112,6 +181,17 @@ def _local_defs(tree: ast.AST) -> dict:
             for t in node.targets:
                 if isinstance(t, ast.Name):
                     defs[t.id] = node.value
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = dotted_name(node.value.func)
+            if name and last_segment(name).lstrip("_") == "partial":
+                pending.append(node)
+    # second pass: f2 = partial(f, ...) resolves through defs collected above
+    for node in pending:
+        fn = _resolve(node.value, defs)
+        if fn is not None:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    defs.setdefault(t.id, fn)
     return defs
 
 
@@ -124,6 +204,49 @@ def _resolve(expr: ast.expr, defs: dict):
         name = dotted_name(expr.func)
         if name and last_segment(name).lstrip("_") == "partial" and expr.args:
             return _resolve(expr.args[0], defs)
+    return None
+
+
+def _method_name(expr: ast.expr) -> Optional[str]:
+    """Last segment of the callee a jit call wraps: ``lm.decode_step`` ->
+    ``decode_step``, peeling one ``partial(...)`` layer if present."""
+    if isinstance(expr, ast.Call):
+        name = dotted_name(expr.func)
+        if name and last_segment(name).lstrip("_") == "partial" and expr.args:
+            return _method_name(expr.args[0])
+        return None
+    name = dotted_name(expr)
+    return last_segment(name) if name else None
+
+
+def _const_assigns(tree: ast.AST) -> dict:
+    assigns = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigns[node.targets[0].id] = node.value
+    return assigns
+
+
+def _const_tuple(expr, consts: dict, depth: int = 0):
+    """Resolve a donate_argnums expression to a tuple of ints, or None when
+    it is computed (ternary, attribute, call) — those sites are skipped."""
+    if expr is None or depth > 3:
+        return None
+    if isinstance(expr, ast.Constant):
+        v = expr.value
+        return (v,) if isinstance(v, int) and not isinstance(v, bool) else None
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        out = []
+        for e in expr.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int) \
+                    and not isinstance(e.value, bool):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    if isinstance(expr, ast.Name):
+        return _const_tuple(consts.get(expr.id), consts, depth + 1)
     return None
 
 

@@ -50,6 +50,30 @@ def constrain(x):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def pin_rows(x, axis: int = 0):
+    """Under a :func:`shard_context`, constrain ``x``'s row dim to the
+    context's data axes — the serving engine's data-parallel row split —
+    when the dim divides them (trace-time shapes, so the check is static);
+    identity otherwise and outside any context.  An engine that wants rows
+    replicated (``dp_probe_slices=False``) enters the context with empty
+    ``dp_axes`` and this never fires."""
+    ctx = _SHARD_CTX.get()
+    if ctx is None:
+        return x
+    mesh, daxes, _ = ctx
+    if not daxes:
+        return x
+    total = 1
+    for a in daxes:
+        total *= mesh.shape[a]
+    if total <= 1 or x.shape[axis] % total != 0:
+        return x
+    entries: list = [None] * x.ndim
+    entries[axis] = daxes
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*entries)))
+
+
 def sequence_parallel_spec(batch_axes=("data",), seq_axis: str = "model") -> P:
     """Residual stream (B, S, D): batch over data axes, seq over model."""
     return P(batch_axes, seq_axis, None)

@@ -210,6 +210,42 @@ def cache_specs(cache_shape, mesh: Mesh, plan: ShardingPlan = ShardingPlan()):
     return jax.tree.map(spec_for, cache_shape)
 
 
+def arena_specs(arenas, mesh: Mesh, plan: ShardingPlan = ShardingPlan()):
+    """Serve-time paged-arena layout (ServeEngine(mesh=...)): PagedKV leaves
+    are (n_layers, num_blocks, block_size, KV, hd).  Feature layout only:
+    kv-heads over ``model`` when divisible (head_dim as the fallback for odd
+    kv counts), and every OTHER dim — crucially the block dim — replicated,
+    so the pool's free-list allocator, refcounts, and stash/unstash stay
+    host-side and mesh-oblivious: a block id means the same arena slice on
+    every device.  The ``seq`` cache_layout is a per-step-gather trade that
+    only pays off for long dense caches; arenas always use feature layout."""
+
+    def spec_for(leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if nd != 5:
+            return P()
+        entries: list = [None] * nd
+        entries[3] = _fit(shape[3], MODEL, mesh)
+        if entries[3] is None:
+            entries[4] = _fit(shape[4], MODEL, mesh)
+        return P(*entries)
+
+    return jax.tree.map(spec_for, arenas)
+
+
+def rows_spec(n_rows: int, ndim: int, mesh: Mesh, axis: int = 0) -> P:
+    """Probe/decode submission batches on a serving mesh: shard the row dim
+    (``axis``; 0 for token batches, 1 for stacked caches) over the data axes
+    — THE data-parallel row split.  Each data shard executes a contiguous
+    row slice of the padded submission; rows that do not divide (tiny
+    submissions below the shard count) stay replicated rather than letting
+    GSPMD pad unevenly."""
+    entries: list = [None] * ndim
+    entries[axis] = _fit(n_rows, data_axes(mesh), mesh) if n_rows > 0 else None
+    return P(*entries)
+
+
 def named(mesh: Mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -20,6 +20,25 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh(spec: str):
+    """Build a ("data", "model") mesh from a ``DxM`` flag string (e.g.
+    ``8x1``, ``4x2``) — the serving launcher's ``--mesh``.  The product
+    must not exceed the visible device count (force extra CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    parts = spec.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"--mesh expects DxM (e.g. 8x1), got {spec!r}")
+    data, model = (int(p) for p in parts)
+    have = jax.device_count()
+    if data * model > have:
+        raise ValueError(
+            f"mesh {data}x{model} needs {data * model} devices, "
+            f"{have} visible (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before jax initializes)")
+    return make_local_mesh(data, model)
+
+
 # TPU v5e hardware constants (per chip) — the roofline denominators.
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

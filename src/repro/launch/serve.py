@@ -2,16 +2,25 @@
 semantic ORDER BY queries against it.
 
 ``python -m repro.launch.serve --arch stablelm-1.6b --query "positivity" ...``
+
+Sharded serving: ``--mesh DxM`` (e.g. ``--mesh 8x1``) lowers the engine onto
+a ("data", "model") mesh — probe rounds split into per-data-shard row
+slices, decode runs tensor-parallel over the model axis — and ``--fsdp``
+additionally shards the weights over the data axes.  On CPU, force devices
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
 from repro.configs import get_config, get_reduced, list_archs
 from repro.core import as_keys, llm_order_by
 from repro.core.oracles.model_oracle import ModelOracle
+from repro.distributed.sharding import ShardingPlan
+from repro.launch.mesh import parse_mesh
 from repro.models import LM
 from repro.serving import ServeEngine
 
@@ -27,12 +36,20 @@ def main() -> None:
     ap.add_argument("--limit", type=int, default=5)
     ap.add_argument("--budget", type=float, default=None)
     ap.add_argument("--items", nargs="*", default=None)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a data x model mesh (e.g. 8x1, 4x2)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="also shard weights over the data axes")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(lm, params, max_new_tokens=16)
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    if args.fsdp and mesh is None:
+        raise SystemExit("--fsdp requires --mesh")
+    engine = ServeEngine(lm, params, max_new_tokens=16, mesh=mesh,
+                         plan=ShardingPlan(fsdp=args.fsdp) if mesh else None)
     oracle = ModelOracle(engine)
 
     items = args.items or [
@@ -46,6 +63,7 @@ def main() -> None:
         "would recommend with reservations",
     ]
     keys = as_keys(items)
+    t0 = time.perf_counter()
     result, report = llm_order_by(
         keys, args.query, oracle, path=args.path, descending=True,
         limit=args.limit, budget=args.budget, strategy=args.strategy,
@@ -55,9 +73,14 @@ def main() -> None:
     if report is not None:
         print(f"optimizer: chose={report.chosen.label} reason={report.reason} "
               f"membership={report.membership_rate:.2f}")
+    dt = time.perf_counter() - t0
     for i, k in enumerate(result.order):
         print(f"  {i+1}. {k.text}")
+    tps = engine.stats.decode_tokens / dt if dt > 0 else 0.0
+    mesh_note = f" mesh={args.mesh}" if args.mesh else ""
     print(f"engine stats: {engine.stats}")
+    print(f"throughput:{mesh_note} decode_tokens={engine.stats.decode_tokens} "
+          f"wall={dt:.3f}s decode_tokens_per_s={tps:.1f}")
 
 
 if __name__ == "__main__":

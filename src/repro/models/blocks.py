@@ -181,7 +181,13 @@ def _attn_decode_paged(p, x, cfg, angles, cache: PagedKV, ctx):
         out, cache = paged_decode_attention_dense(
             qkv, cache, ctx["paged_tables"], ctx["paged_positions"],
             ctx["paged_block_size"])
-    return out.reshape(*x.shape[:2], -1) @ p["wo"], cache
+    # mesh serving (engine shard_context): the gather-through-block-tables
+    # leaves the attention output's row sharding ambiguous to GSPMD — the
+    # table gather mixes the row-split tables with the block-replicated
+    # arena — so re-pin the rows before the output projection
+    from ..distributed.context import pin_rows
+    a = pin_rows(out.reshape(*x.shape[:2], -1) @ p["wo"])
+    return a, cache
 
 
 def _paged_decode_kernel(qkv, paged: PagedKV, ctx):

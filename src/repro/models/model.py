@@ -25,6 +25,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from ..distributed.context import constrain, pin_rows
 from .blocks import apply_stack, init_block_cache, init_stack
 from .config import ModelConfig
 from .layers import dtype_of, f32, rms_norm, rope_angles
@@ -106,7 +107,11 @@ class LM:
                 position=None, reserve: int = 0):
         """Returns (hidden (B,S,D), new_caches_or_None)."""
         cfg = self.cfg
-        x = self._embed_in(params, batch)
+        # the embedding lookup's output sharding is ambiguous under a mesh
+        # (vocab-parallel table vs row-split tokens): pin it to the serving
+        # context's row split so GSPMD starts every stack from the batch
+        # split, then apply any launcher-imposed activation spec
+        x = constrain(pin_rows(self._embed_in(params, batch)))
         b, s, _ = x.shape
         ctx: dict[str, Any] = {"reserve": reserve}
         if mode == "decode":
@@ -243,7 +248,8 @@ class LM:
         cfg = self.cfg
         assert cfg.input_mode == "tokens" and not cfg.mrope_sections, (
             "paged decode supports token-input, non-M-RoPE archs only")
-        x = jnp.take(params["embed"], tokens, axis=0) * cfg.embed_scale
+        x = pin_rows(jnp.take(params["embed"], tokens, axis=0)
+                     * cfg.embed_scale)
         b = tokens.shape[0]
         ctx: dict[str, Any] = {
             "angles": self._angles(positions[:, None], 1, b),

@@ -7,9 +7,14 @@ submissions).  Submission shapes are bucketed to powers of two to bound XLA
 compiles under variable round sizes (see DESIGN.md).
 
 Prompts are byte-tokenized, left-padded per batch, and executed with two
-jit-compiled programs (prefill, decode_step) shared across calls; on the
-production mesh the same functions are lowered with sharded params/caches by
-launch/serve.py.  Read-outs follow standard logit-probe practice:
+jit-compiled programs (prefill, decode_step) shared across calls.  Passing
+``mesh=`` lowers those SAME programs under a ("data", "model") device mesh:
+params/arenas are committed to NamedShardings, probe submissions are
+row-sliced over the data axes (``dp_probe_slices``), decode runs
+tensor-parallel over the model axis, and logits gather host-side — with
+identity to the single-device engine (bitwise when the model axis is 1; see
+DESIGN.md "Sharded serving").  Read-outs follow standard logit-probe
+practice:
 
  * score(text)      -> logit('9') - logit('0') after a "Rating:" prompt,
  * compare(a, b)    -> logit('A') vs logit('B') after a comparison prompt,
@@ -62,8 +67,12 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from ..data.tokenizer import EOS, PAD, ByteTokenizer
+from ..distributed.context import shard_context
+from ..distributed.sharding import (ShardingPlan, data_axes, named,
+                                    param_specs, rows_spec)
 from ..models.model import LM
 from .kv_pool import KVBlockPool, PoolExhausted
 from .locality import plan_window_jobs
@@ -84,6 +93,17 @@ TOK_YES, TOK_NO = ord("Y"), ord("N")
 # operational contract the tolerance test checks alongside.
 PAGED_KERNEL_RTOL = 5e-2
 PAGED_KERNEL_ATOL = 1.2e-1
+
+# Tensor-parallel serving (mesh with model axis > 1): the row-parallel
+# contractions (wo, w_down) become psums whose reduction order differs from
+# the single-device dot, so probe logits drift by ~1 bf16 ulp through the
+# residual stream (measured worst-case 0.03125 absolute on the reduced
+# configs — same mechanism and headroom as the Pallas kernel bound above).
+# Greedy argmax agreement holds, so decode outputs stay token-identical
+# (``==``); data-parallel-only meshes (model == 1) never reduce across
+# devices and keep full bitwise identity.
+TP_PSUM_RTOL = 5e-2
+TP_PSUM_ATOL = 1.2e-1
 
 # a probe prompt: plain string, or a (shared_prefix, per_key_suffix) pair —
 # core.oracles.base.PromptParts is such a pair (the full prompt is the
@@ -158,6 +178,13 @@ class ServeStats:
     probe_rounds_deferred: int = 0
     starved_rounds: int = 0
     starved_admissions: int = 0
+    # data-parallel probe slicing (mesh serving): prefill submissions whose
+    # padded row count divided the data axes and therefore executed as
+    # per-data-shard row slices, vs submissions that stayed replicated
+    # (tiny rounds below the shard count, or the dp_probe_slices=False
+    # ablation benchmarks/table12_sharding.py measures against)
+    dp_sharded_submissions: int = 0
+    dp_replicated_submissions: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -215,9 +242,33 @@ class ServeEngine:
                  bucket_shapes: bool = True, max_probe_batch: int = 256,
                  prefix_cache_size: int = 64, pool_blocks: int = 768,
                  block_size: int = 16, max_decode_rows: int = 32,
-                 paged_kernel: object = False, locality: bool = True):
+                 paged_kernel: object = False, locality: bool = True,
+                 mesh=None, plan: Optional[ShardingPlan] = None,
+                 dp_probe_slices: bool = True):
         self.lm = lm
         self.params = params
+        # Sharded serving (``mesh=...``): params lowered through the
+        # name-based rules of distributed/sharding.py (tensor-parallel over
+        # `model`, optionally fsdp over the data axes), the paged arena as a
+        # NamedSharding'd array (feature layout, block dim replicated), and
+        # every prefill/decode program jitted under the mesh.  Probe rounds
+        # become data-parallel through ``_put_rows``: each merged submission
+        # is committed row-sliced over the data axes, every shard executes
+        # its contiguous slice, and the host-side logits read-back gathers —
+        # ``dp_probe_slices=False`` keeps the mesh but replicates rows (the
+        # ablation table12 measures the slicing win against).
+        self.mesh = mesh
+        self.plan = plan
+        self._daxes: tuple = ()
+        self.data_shards = 1
+        self.dp_probe_slices = dp_probe_slices
+        if mesh is not None:
+            self.plan = plan = plan if plan is not None else ShardingPlan()
+            self._daxes = data_axes(mesh)
+            self.data_shards = int(np.prod(
+                [mesh.shape[a] for a in self._daxes], dtype=np.int64)) or 1
+            self.params = jax.device_put(
+                params, named(mesh, param_specs(params, mesh, plan)))
         self.tok = ByteTokenizer()
         assert lm.cfg.vocab_size >= self.tok.vocab_size, (
             f"model vocab {lm.cfg.vocab_size} < tokenizer vocab "
@@ -256,18 +307,49 @@ class ServeEngine:
         self.max_decode_rows = max_decode_rows
         self.paged_enabled = pool_blocks > 0 and self._supports_prefix_cache()
         self.pool: Optional[KVBlockPool] = (
-            KVBlockPool(lm, pool_blocks, block_size)
+            KVBlockPool(lm, pool_blocks, block_size, mesh=mesh, plan=self.plan)
             if self.paged_enabled else None)
         self._paged_rows: dict[int, _PagedRow] = {}
         self._paged_finished: dict[int, str] = {}
         self._paged_ids = itertools.count()
         self.stats = ServeStats()
-        self._prefill = jax.jit(partial(lm.prefill, reserve=max_new_tokens))
-        self._decode = jax.jit(lm.decode_step)
-        # prefix regions need exact-length caches (reserve=0) so the suffix
-        # lands at the right absolute positions
-        self._prefill_exact = jax.jit(partial(lm.prefill, reserve=0))
-        self._prefill_cont = jax.jit(lm.prefill_cont)
+        if mesh is None:
+            self._prefill = jax.jit(partial(lm.prefill,
+                                            reserve=max_new_tokens))
+            self._decode = jax.jit(lm.decode_step)
+            # prefix regions need exact-length caches (reserve=0) so the
+            # suffix lands at the right absolute positions
+            self._prefill_exact = jax.jit(partial(lm.prefill, reserve=0))
+            self._prefill_cont = jax.jit(lm.prefill_cont)
+        else:
+            # mesh-jitted closures: shard_context is read at TRACE time, so
+            # it must wrap the traced body (not the jax.jit construction) —
+            # every pin_rows/shard-aware layer inside the model then sees
+            # the serving mesh's data/model axes.  The replicated-rows
+            # ablation hands the context EMPTY data axes so model-side row
+            # pinning never fires.
+            daxes = self._daxes if dp_probe_slices else ()
+
+            def _prefill_sharded(params, batch):
+                with shard_context(mesh, daxes):
+                    return lm.prefill(params, batch, reserve=max_new_tokens)
+
+            def _prefill_exact_sharded(params, batch):
+                with shard_context(mesh, daxes):
+                    return lm.prefill(params, batch, reserve=0)
+
+            def _prefill_cont_sharded(params, caches, batch):
+                with shard_context(mesh, daxes):
+                    return lm.prefill_cont(params, caches, batch)
+
+            def _decode_sharded(params, caches, tokens, position):
+                with shard_context(mesh, daxes):
+                    return lm.decode_step(params, caches, tokens, position)
+
+            self._prefill = jax.jit(_prefill_sharded)
+            self._decode = jax.jit(_decode_sharded)
+            self._prefill_exact = jax.jit(_prefill_exact_sharded)
+            self._prefill_cont = jax.jit(_prefill_cont_sharded)
         # Deployment-time Pallas switch for the decode step's attention:
         #   False   — dense gather+attend (the default; keeps the `==`
         #             bit-identity contract vs solo lockstep),
@@ -277,6 +359,15 @@ class ServeEngine:
         #   "check" — run BOTH each step, assert allclose, return the dense
         #             result (deployment validation mode).
         self.paged_kernel = paged_kernel
+        if paged_kernel and mesh is not None:
+            # the Pallas flash-decode kernel is a per-device program: under
+            # a mesh it would need an explicit shard_map lowering (head-dim
+            # blocking per model shard), which does not exist yet — fail
+            # loudly rather than silently running the kernel un-sharded
+            raise ValueError(
+                "paged_kernel is not supported on a sharded engine "
+                "(mesh=...): the flash-decode kernel has no shard_map "
+                "lowering; use the dense paged path")
         if paged_kernel and not self.paged_enabled:
             # an inert validation/deployment switch is worse than an error:
             # the operator would believe the kernel was validated when it
@@ -292,9 +383,29 @@ class ServeEngine:
             # including CPU (XLA:CPU honors the aliasing; the previous
             # CPU carve-out paid a full arena copy per decode step)
             donate = (1,)
-            self._decode_paged = jax.jit(
-                partial(lm.decode_step_paged, block_size=block_size),
-                donate_argnums=donate)
+            if mesh is None:
+                self._decode_paged = jax.jit(
+                    partial(lm.decode_step_paged, block_size=block_size),
+                    donate_argnums=donate)
+            else:
+                arena_shardings = self.pool.arena_shardings
+                daxes = self._daxes if dp_probe_slices else ()
+
+                def _decode_paged_sharded(params, arenas, tokens, positions,
+                                          tables):
+                    with shard_context(mesh, daxes):
+                        logits, out = lm.decode_step_paged(
+                            params, arenas, tokens, positions, tables,
+                            block_size=block_size)
+                    # donation requires the output arena sharding to match
+                    # the (donated) input arena: pin it to the canonical
+                    # layout so the backend can alias in place
+                    out = jax.lax.with_sharding_constraint(
+                        out, arena_shardings)
+                    return logits, out
+
+                self._decode_paged = jax.jit(_decode_paged_sharded,
+                                             donate_argnums=donate)
             if paged_kernel:
                 # "check" must NOT donate the arena into the kernel call —
                 # the dense source-of-truth call consumes it right after
@@ -338,18 +449,41 @@ class ServeEngine:
             arr[r, maxlen - len(i):] = i          # left-pad: last pos = live
         return arr
 
+    def _put_rows(self, arr, axis: int = 0, count: bool = False):
+        """Data-parallel row split (mesh serving): commit a padded
+        submission's row dim to contiguous per-data-shard slices, so each
+        shard executes only its rows and the host-side ``np.asarray``
+        logits read-back is the gather.  Identity argument: a row's logits
+        depend only on its own (padded) sequence — the same row-count
+        independence the batched==sequential ``==`` contract relies on
+        repo-wide — so slicing the row dim never changes bits.  Row counts
+        are already bucketed to powers of two, so any submission at or
+        above the shard count divides exactly; smaller ones (and the
+        ``dp_probe_slices=False`` ablation) stay replicated."""
+        arr = jnp.asarray(arr)
+        if self.mesh is None:
+            return arr
+        spec = rows_spec(arr.shape[axis], arr.ndim, self.mesh, axis=axis)
+        sharded = self.dp_probe_slices and spec[axis] is not None
+        if count:
+            if sharded:
+                self.stats.dp_sharded_submissions += 1
+            else:
+                self.stats.dp_replicated_submissions += 1
+        if not sharded:
+            spec = rows_spec(0, arr.ndim, self.mesh, axis=axis)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
     def _make_batch(self, tokens: np.ndarray) -> dict:
         cfg = self.lm.cfg
-        batch: dict = {"tokens": jnp.asarray(tokens)}
+        toks = self._put_rows(tokens, count=True)
+        batch: dict = {"tokens": toks}
         if cfg.input_mode == "embeds":
             # VLM stub frontend: embed text bytes through the text table
-            batch = {"embeds": jnp.take(self.params["embed"],
-                                        jnp.asarray(tokens), axis=0),
-                     "tokens": jnp.asarray(tokens)}
-            batch = {"embeds": batch["embeds"]}
+            batch = {"embeds": jnp.take(self.params["embed"], toks, axis=0)}
         elif cfg.input_mode == "encdec":
-            emb = jnp.take(self.params["embed"], jnp.asarray(tokens), axis=0)
-            batch = {"enc_embeds": emb, "tokens": jnp.asarray(tokens)}
+            emb = jnp.take(self.params["embed"], toks, axis=0)
+            batch = {"enc_embeds": emb, "tokens": toks}
         return batch
 
     # --------------------------------------------------------------- probes
@@ -699,8 +833,13 @@ class ServeEngine:
 
         assembled = jax.tree.map(cat, *uniq)
         idx = jnp.asarray(eidx)
+        # mesh serving: the per-row cache gather is committed to the same
+        # row split as the token batch (_put_rows axis=1 — caches carry the
+        # row dim second), so a sliced submission's shards hold only their
+        # rows' prefix KV; shared pos leaves (ndim 2) stay replicated
         assembled = jax.tree.map(
-            lambda l: l if l.ndim == 2 else jnp.take(l, idx, axis=1),
+            lambda l: l if l.ndim == 2 else self._put_rows(
+                jnp.take(l, idx, axis=1), axis=1),
             assembled)
         logits, _ = self._prefill_cont(self.params, assembled,
                                        self._make_batch(arr))
@@ -1098,8 +1237,11 @@ class ServeEngine:
             tables[i, :len(row.blocks)] = row.blocks
             toks[i, 0] = row.cur
             pos[i] = row.cls + row.t
-        args = (self.params, self.pool.arenas, jnp.asarray(toks),
-                jnp.asarray(pos), jnp.asarray(tables))
+        # mesh serving: decode rows ride the same data-parallel row split as
+        # probe submissions (arena stays feature-sharded/block-replicated,
+        # so every shard scatters its rows' new KV into the shared layout)
+        args = (self.params, self.pool.arenas, self._put_rows(toks),
+                self._put_rows(pos), self._put_rows(tables))
         if self.paged_kernel == "check":
             # validation mode: kernel first (arena NOT donated), dense as
             # the source of truth; per-step logits must agree to the

@@ -39,7 +39,8 @@ class PoolExhausted(RuntimeError):
 
 
 class KVBlockPool:
-    def __init__(self, lm, num_blocks: int, block_size: int = 16):
+    def __init__(self, lm, num_blocks: int, block_size: int = 16,
+                 mesh=None, plan=None):
         cfg = lm.cfg
         assert num_blocks >= 2, "need at least one real block beyond dummy 0"
         assert all(kind == "attn" for kind, _ in cfg.pattern), (
@@ -52,6 +53,20 @@ class KVBlockPool:
             PagedKV(k=jnp.zeros((n, num_blocks, block_size, kv, hd), dt),
                     v=jnp.zeros((n, num_blocks, block_size, kv, hd), dt))
             for kind, n in cfg.pattern]
+        # Serving mesh (ServeEngine(mesh=...)): arenas become NamedSharding'd
+        # arrays in the FEATURE layout — kv-heads over `model`, block dim
+        # replicated — so everything below this line (free list, refcounts,
+        # stashes) is mesh-oblivious: a block id addresses the same arena
+        # slice on every device.  ``_pin`` re-commits eager scatter/gather
+        # results to the canonical layout (a no-op when already there).
+        self.arena_shardings = None
+        if mesh is not None:
+            import jax
+            from ..distributed.sharding import (ShardingPlan, arena_specs,
+                                                named)
+            self.arena_shardings = named(
+                mesh, arena_specs(self.arenas, mesh, plan or ShardingPlan()))
+            self.arenas = jax.device_put(self.arenas, self.arena_shardings)
         # LIFO free list, block 0 (dummy) excluded for good
         self._free = list(range(num_blocks - 1, 0, -1))
         self._ref = np.zeros(num_blocks, np.int64)
@@ -67,6 +82,17 @@ class KVBlockPool:
         # blocks copied out to host stashes and scattered back
         self.total_stashed = 0
         self.total_unstashed = 0
+
+    def _pin(self, si: int, arena):
+        """Re-commit an eagerly-updated arena to the canonical sharding.
+        Eager scatter (`.at[ids].set`) lets XLA pick the result layout; a
+        device_put to the known NamedSharding is a no-op when it already
+        matches and a reshard otherwise, so the donated decode step always
+        sees identically-laid-out input."""
+        if self.arena_shardings is None:
+            return arena
+        import jax
+        return jax.device_put(arena, self.arena_shardings[si])
 
     # ---------------------------------------------------------- allocator
     @property
@@ -153,8 +179,9 @@ class KVBlockPool:
         idx = jnp.asarray(np.asarray(ids, np.int32))
         for si, (k, v) in enumerate(stash):
             arena = self.arenas[si]
-            self.arenas[si] = PagedKV(k=arena.k.at[:, idx].set(jnp.asarray(k)),
-                                      v=arena.v.at[:, idx].set(jnp.asarray(v)))
+            self.arenas[si] = self._pin(si, PagedKV(
+                k=arena.k.at[:, idx].set(jnp.asarray(k)),
+                v=arena.v.at[:, idx].set(jnp.asarray(v))))
         self.total_unstashed += len(ids)
 
     # ------------------------------------------------------ device arenas
@@ -193,9 +220,9 @@ class KVBlockPool:
                 return leaf.reshape(n, rows * nb, bs, *leaf.shape[3:])
 
             arena = self.arenas[si]
-            self.arenas[si] = PagedKV(
+            self.arenas[si] = self._pin(si, PagedKV(
                 k=arena.k.at[:, ids].set(to_blocks(k)),
-                v=arena.v.at[:, ids].set(to_blocks(v)))
+                v=arena.v.at[:, ids].set(to_blocks(v))))
 
     def gather_stacked(self, block_ids: Sequence[int], length: int):
         """Materialize a block run as the dense per-stack cache pytree the

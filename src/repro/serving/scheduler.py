@@ -250,7 +250,10 @@ class BatchScheduler:
         # probe drains chunk by the ENGINE's probe memory ceiling
         # (max_probe_batch), not by max_batch: probes are single-token
         # prefills, so the decode-batch cap has no bearing on them.  Pass
-        # ``probe_batch`` to override.
+        # ``probe_batch`` to override.  On a sharded engine the chunk size
+        # is additionally rounded up to a multiple of the engine's
+        # data-shard count (:meth:`_probe_chunk`) so every chunk of a
+        # sliced drain fills all shards' row slices.
         self.probe_batch = probe_batch
         # paged=None: continuous loop whenever the engine supports it;
         # False pins the lockstep batch path (the benchmark baseline)
@@ -784,6 +787,24 @@ class BatchScheduler:
         self.work = [w for w in self.work if id(w) not in taken]
         self.probe_results.update(self._service_probe_items(take))
 
+    def _probe_chunk(self, eng) -> Optional[int]:
+        """Probe-submission chunk size for ``eng``'s lane: the configured
+        ``probe_batch`` (or the engine's memory ceiling), rounded UP to a
+        multiple of the engine's data-shard count.  A merged drain on a
+        sharded engine executes each chunk as per-data-shard row slices
+        (engine ``_put_rows``); a chunk below the shard count would stay
+        replicated — every shard recomputing all rows — so the gap
+        servicer never hands the engine a deliberately misaligned chunk.
+        Chunking only splits round MEMBERSHIP, never row content, so the
+        alignment cannot change any row's bits (same-class rows pad
+        identically in either chunk)."""
+        mb = (self.probe_batch if self.probe_batch is not None
+              else eng.max_probe_batch)
+        shards = getattr(eng, "data_shards", 1)
+        if mb is None or shards <= 1:
+            return mb
+        return -(-mb // shards) * shards
+
     def _service_probe_items(self, pending: list) -> dict[int, np.ndarray]:
         """Run one merged probe submission over ``pending`` (already
         removed from the queue).
@@ -825,9 +846,7 @@ class BatchScheduler:
             slots.append(slot_of[key])
         try:
             logits = self.engine.submit_probes(
-                uniq, max_batch=(self.probe_batch
-                                 if self.probe_batch is not None
-                                 else self.engine.max_probe_batch))
+                uniq, max_batch=self._probe_chunk(self.engine))
         except BaseException:
             # transient engine failure: the items must stay resolvable, so
             # they return to the queue head and the next pump retries (the
@@ -875,10 +894,8 @@ class BatchScheduler:
                 uniq.append(r.prompt)
             slots.append(slot_of[key])
         try:
-            logits = eng.submit_probes(
-                uniq, max_batch=(self.probe_batch
-                                 if self.probe_batch is not None
-                                 else eng.max_probe_batch))
+            logits = eng.submit_probes(uniq,
+                                       max_batch=self._probe_chunk(eng))
         except BaseException:
             self.work[0:0] = items
             raise

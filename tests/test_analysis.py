@@ -275,6 +275,87 @@ def test_jit_purity_applies_outside_src_too():
     assert "jit-purity" in rules_hit(BAD_JIT_DECORATOR, "tests/fixture.py")
 
 
+# jit-purity: mesh-jitted closure coverage — a name assigned from
+# partial(...) of a local def resolves, so its body is still checked
+BAD_JIT_PARTIAL_ASSIGNED = """
+    import time
+    from functools import partial
+
+    def _decode_sharded(params, arenas):
+        t0 = time.time()
+        return arenas
+
+    _step = partial(_decode_sharded)
+    f = jax.jit(_step, donate_argnums=(1,))
+"""
+
+GOOD_JIT_MESH_CLOSURE = """
+    def _decode_paged_sharded(params, arenas, tokens):
+        with shard_context(mesh, daxes):
+            logits, out = lm.decode_step_paged(params, arenas, tokens)
+        out = jax.lax.with_sharding_constraint(out, arena_shardings)
+        return logits, out
+
+    f = jax.jit(_decode_paged_sharded, donate_argnums=(1,))
+"""
+
+
+def test_jit_purity_partial_assigned_closure_resolves():
+    assert "jit-purity" in rules_hit(BAD_JIT_PARTIAL_ASSIGNED)
+
+
+def test_jit_purity_mesh_closure_good():
+    assert "jit-purity" not in rules_hit(GOOD_JIT_MESH_CLOSURE)
+
+
+# jit-purity: donate_argnums pairing — the donated slot must hold the
+# arena/cache/state buffer, never params or a token batch
+BAD_DONATE_PARAMS = """
+    def step(params, batch):
+        return params
+
+    f = jax.jit(step, donate_argnums=(0,))
+"""
+
+BAD_DONATE_PREFILL = """
+    f = jax.jit(lm.prefill, donate_argnums=(1,))
+"""
+
+BAD_DONATE_WRONG_INDEX = """
+    f = jax.jit(lm.decode_step_paged, donate_argnums=(0,))
+"""
+
+GOOD_DONATE_STATE = """
+    def step(state, batch):
+        return state
+
+    f = jax.jit(step, donate_argnums=(0,))
+"""
+
+GOOD_DONATE_NAME_CONST = """
+    donate = (1,)
+    f = jax.jit(lm.decode_step_paged, donate_argnums=donate)
+"""
+
+GOOD_DONATE_TERNARY_SKIPPED = """
+    donate = (1,)
+    f = jax.jit(lm.decode_step_paged,
+                donate_argnums=(() if check else donate))
+"""
+
+
+def test_jit_donate_pairing_bad_variants_flag():
+    for bad in (BAD_DONATE_PARAMS, BAD_DONATE_PREFILL,
+                BAD_DONATE_WRONG_INDEX):
+        assert "jit-purity" in rules_hit(bad), bad
+
+
+def test_jit_donate_pairing_good_passes():
+    for good in (GOOD_DONATE_STATE, GOOD_DONATE_NAME_CONST,
+                 GOOD_DONATE_TERNARY_SKIPPED):
+        assert "jit-purity" not in rules_hit(good), good
+
+
 # ------------------------------------------------- region-key-unification
 BAD_REGION = """
     def route(self, pids, sids, cls):

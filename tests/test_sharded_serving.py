@@ -1,0 +1,260 @@
+"""Sharded serving identity suite (ISSUE 10).
+
+``ServeEngine(mesh=...)`` must be INVISIBLE to results: on a data-parallel
+mesh (model axis 1) nothing reduces across devices — each shard computes a
+contiguous row slice and the host-side gather reassembles — so generate
+outputs, probe logits, query orders, and ledgers are bitwise/byte identical
+to the single-device engine.  On a tensor-parallel mesh (model axis > 1)
+the row-parallel psums reorder reductions, so probe logits are held to the
+documented ``TP_PSUM_RTOL/ATOL`` tolerance instead (the contract stance
+documented in benchmarks/table12_sharding.py).
+
+The 8-device suites need ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+in the environment BEFORE jax initializes (CI runs a tier-1 matrix leg with
+it); under the default single-device run they skip.  The 1x1-mesh identity
+tests, shard-aligned probe chunking, and the sharded-pool fuzz loop (the
+REAL KVBlockPool with NamedSharding'd arenas under test_fuzz_loop's driver)
+run everywhere.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from fakes_paged import FakePagedEngine, tiny_pool_lm
+from repro.core import OrderQuery, as_keys, llm_order_by, llm_order_by_many
+from repro.core.oracles.model_oracle import ModelOracle
+from repro.serving import BatchScheduler
+from repro.serving.kv_pool import KVBlockPool
+
+DEV = jax.device_count()
+needs8 = pytest.mark.skipif(
+    DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+ALL_PATHS = ("pointwise", "ext_pointwise", "quick", "ext_bubble", "ext_merge")
+PROBES = [(f"Criteria: relevance\nItem:", f" candidate passage {i:03d}\n"
+           f"Rating:") for i in range(16)]
+GEN = [(f"Judge {i}: rationale " + "r" * (3 * i), 2 + 2 * i)
+       for i in range(4)]
+
+
+def _keys(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return as_keys([f"doc {'q' * (i % 5)} {i:03d}" for i in range(n)],
+                   list(rng.standard_normal(n)))
+
+
+def _ledger(o):
+    return (o.ledger.n_calls, o.ledger.input_tokens, o.ledger.output_tokens,
+            list(o.ledger.records))
+
+
+def _build(mesh=None, arch="llama3-8b", seed=0, dp=True):
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serving import ServeEngine
+    lm = LM(get_reduced(arch))
+    return ServeEngine(lm, lm.init(jax.random.PRNGKey(seed)),
+                       max_new_tokens=8, mesh=mesh, dp_probe_slices=dp)
+
+
+@pytest.fixture(scope="module")
+def base():
+    return _build()
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    if DEV < 8:
+        pytest.skip("needs 8 devices")
+    from repro.launch.mesh import make_local_mesh
+    return _build(mesh=make_local_mesh(8, 1))
+
+
+# ------------------------------------------------- tier-1: 1x1 mesh identity
+def test_mesh_1x1_bitwise_identity(base):
+    """The degenerate 1x1 mesh exercises the full sharded code path
+    (NamedSharding'd params/arenas, shard_context closures, _put_rows)
+    and must be bitwise the unsharded engine."""
+    from repro.launch.mesh import make_local_mesh
+    eng = _build(mesh=make_local_mesh(1, 1))
+    assert np.array_equal(base.submit_probes(PROBES),
+                          eng.submit_probes(PROBES))
+    prompts = [p for p, _ in GEN]
+    limits = [l for _, l in GEN]
+    assert (eng.generate_lockstep(prompts, max_new_per=limits)
+            == base.generate_lockstep(prompts, max_new_per=limits))
+
+
+def test_mesh_1x1_query_and_ledger_identity(base):
+    from repro.launch.mesh import make_local_mesh
+    eng = _build(mesh=make_local_mesh(1, 1))
+    keys = _keys()
+    ob, os_ = ModelOracle(base), ModelOracle(eng)
+    rb, _ = llm_order_by(keys, "relevance", ob, path="quick")
+    rs, _ = llm_order_by(keys, "relevance", os_, path="quick")
+    assert rs.uids() == rb.uids()
+    assert _ledger(os_) == _ledger(ob)
+
+
+def test_dp_ablation_counts_submissions():
+    """dp_probe_slices=False replicates every submission row on every
+    shard — the stats counters expose which mode each round took."""
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(1, 1)
+    sliced = _build(mesh=mesh, dp=True)
+    sliced.submit_probes(PROBES)
+    assert sliced.stats.dp_sharded_submissions > 0
+    assert sliced.stats.dp_replicated_submissions == 0
+    repl = _build(mesh=mesh, dp=False)
+    repl.submit_probes(PROBES)
+    assert repl.stats.dp_replicated_submissions > 0
+    assert repl.stats.dp_sharded_submissions == 0
+    assert np.array_equal(sliced.submit_probes(PROBES),
+                          repl.submit_probes(PROBES))
+
+
+# ---------------------------------------- tier-1: shard-aligned probe chunks
+def test_probe_chunk_rounds_up_to_shard_multiple():
+    eng = FakePagedEngine()
+    sched = BatchScheduler(eng, probe_batch=6)
+    assert sched._probe_chunk(eng) == 6          # unsharded: passthrough
+    eng.data_shards = 4
+    assert sched._probe_chunk(eng) == 8          # ceil(6/4)*4
+    sched.probe_batch = None
+    eng.max_probe_batch = 10
+    assert sched._probe_chunk(eng) == 12         # engine ceiling, aligned
+    eng.max_probe_batch = None
+    assert sched._probe_chunk(eng) is None       # no ceiling: no rounding
+
+
+def test_rows_spec_replicates_when_rows_do_not_divide():
+    from repro.distributed.sharding import rows_spec
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(1, 1)
+    assert rows_spec(8, 2, mesh)[0] is not None      # divisible: sharded
+    assert rows_spec(0, 2, mesh)[0] is None          # empty: replicated
+    assert rows_spec(8, 3, mesh, axis=1)[1] is not None
+    assert rows_spec(8, 3, mesh, axis=1)[0] is None
+
+
+# -------------------------------------- sharded-pool fuzz (fakes_paged.py)
+class ShardedFakeEngine(FakePagedEngine):
+    """fakes_paged's engine with the REAL pool laid out on a mesh: the
+    allocator, refcounts, stash/unstash, and preemption paths now move
+    NamedSharding'd device arrays, and the fingerprint round-trip catches
+    any re-layout that mangles block contents."""
+    mesh_shape = (1, 1)
+
+    def __init__(self, num_blocks: int = 33, block_size: int = 4, **kw):
+        super().__init__(num_blocks=num_blocks, block_size=block_size, **kw)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(*type(self).mesh_shape)
+        self.pool = KVBlockPool(tiny_pool_lm(), num_blocks, block_size,
+                                mesh=mesh)
+        self.data_shards = mesh.shape["data"]
+
+
+def _fuzz_sharded(shape, seed, n_ops, monkeypatch, fail_rate=0.0):
+    import test_fuzz_loop as fl
+    cls = type("_Fake", (ShardedFakeEngine,), {"mesh_shape": shape})
+    monkeypatch.setattr(fl, "FakePagedEngine", cls)
+    fl._fuzz(seed, n_ops, fail_rate=fail_rate)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_fuzz_sharded_pool_1x1(seed, monkeypatch):
+    _fuzz_sharded((1, 1), seed, n_ops=40, monkeypatch=monkeypatch)
+
+
+@needs8
+@pytest.mark.parametrize("seed", range(3))
+def test_fuzz_sharded_pool_8x1(seed, monkeypatch):
+    _fuzz_sharded((8, 1), 200 + seed, n_ops=50, monkeypatch=monkeypatch,
+                  fail_rate=0.15 if seed == 2 else 0.0)
+
+
+# --------------------------------------------- 8-device: full identity suite
+@needs8
+def test_probe_logits_bitwise_8x1(base, mesh8):
+    assert np.array_equal(base.submit_probes(PROBES),
+                          mesh8.submit_probes(PROBES))
+
+
+@needs8
+@pytest.mark.parametrize("path", ALL_PATHS)
+def test_all_paths_sync_identity_8x1(base, mesh8, path):
+    keys = _keys()
+    ob, os_ = ModelOracle(base), ModelOracle(mesh8)
+    rb, _ = llm_order_by(keys, "relevance", ob, path=path)
+    rs, _ = llm_order_by(keys, "relevance", os_, path=path)
+    assert rs.uids() == rb.uids(), path
+    assert _ledger(os_) == _ledger(ob), path
+    assert rs.cost == rb.cost
+
+
+@needs8
+def test_all_paths_deferred_identity_8x1(base, mesh8):
+    """All five paths as ONE deferred co-scheduled batch on the sharded
+    engine: orders and ledgers byte-identical to solo sync on the
+    single-device engine, generates token-identical, zero leaked blocks."""
+    keys = _keys(12, seed=3)
+    solo = []
+    for path in ALL_PATHS:
+        o = ModelOracle(base)
+        r, _ = llm_order_by(keys, "relevance", o, path=path)
+        solo.append((r.uids(), _ledger(o)))
+    prompts = [p for p, _ in GEN]
+    limits = [l for _, l in GEN]
+    solo_gen = [base.generate_lockstep([p], max_new_per=[l])[0]
+                for p, l in zip(prompts, limits)]
+
+    sched = BatchScheduler(mesh8, max_batch=4)
+    rids = [sched.submit(p, l) for p, l in zip(prompts, limits)]
+    oracles = [ModelOracle(mesh8) for _ in ALL_PATHS]
+    results = llm_order_by_many(
+        [OrderQuery(keys=keys, criteria="relevance", oracle=o, path=path)
+         for path, o in zip(ALL_PATHS, oracles)], scheduler=sched)
+    sched.run()
+    assert [sched.completed[r].output for r in rids] == solo_gen
+    for (uids, ledger), res, o in zip(solo, results, oracles):
+        assert res.uids() == uids
+        assert _ledger(o) == ledger
+    mesh8.clear_prefix_cache()
+    assert mesh8.pool.blocks_in_use == 0, "sharded engine leaked blocks"
+
+
+@needs8
+def test_cascade_threshold_inf_anchor_8x1(mesh8):
+    """The cascade identity anchor holds on a sharded engine: a draft
+    engine attached at threshold=inf never escalates and the cascade is
+    byte-identical to the plain oracle on the same sharded engine."""
+    from repro.configs.registry import ladder
+    from repro.core import CASCADE_70B
+    from repro.core.oracles.cascade import CascadeOracle
+    from repro.launch.mesh import make_local_mesh
+    draft = _build(mesh=make_local_mesh(8, 1), arch=ladder()[0], seed=1)
+    keys = _keys(6, seed=9)
+    casc = CascadeOracle(mesh8, draft_engine=draft, threshold=math.inf,
+                         prices=CASCADE_70B)
+    plain = ModelOracle(mesh8, prices=CASCADE_70B)
+    rc, _ = llm_order_by(keys, "value", casc, path="quick")
+    rp, _ = llm_order_by(keys, "value", plain, path="quick")
+    assert rc.uids() == rp.uids()
+    assert list(casc.ledger.records) == list(plain.ledger.records)
+    assert rc.cost == rp.cost
+
+
+@needs8
+def test_tensor_parallel_within_tolerance_4x2(base):
+    """model>1 meshes psum the row-parallel contractions: logits agree to
+    the documented tolerance, not bitwise (see table12's contract note)."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving.engine import TP_PSUM_ATOL, TP_PSUM_RTOL
+    eng = _build(mesh=make_local_mesh(4, 2))
+    ref, got = base.submit_probes(PROBES), eng.submit_probes(PROBES)
+    np.testing.assert_allclose(got, ref, rtol=TP_PSUM_RTOL, atol=TP_PSUM_ATOL)
+    assert float((np.asarray(ref).argmax(-1)
+                  == np.asarray(got).argmax(-1)).mean()) >= 0.9
